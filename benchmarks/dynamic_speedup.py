@@ -1,0 +1,90 @@
+"""Paper Fig. 7 — s^n_b self-relative speedups: cumulative re-run-static vs
+incremental/decremental BFS and SSSP over a sequence of edge batches."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.algorithms import (bfs_decremental, bfs_incremental,
+                              bfs_tree_static, sssp_decremental,
+                              sssp_incremental, sssp_static)
+from repro.core import delete_edges, ensure_capacity, from_edges_host, \
+    insert_edges
+from repro.data.synth import rmat_edges
+
+from .timing import row, time_fn
+
+
+def pad(a, n, fill=0xFFFFFFFF):
+    out = np.full(n, fill, np.uint32)
+    out[:len(a)] = a
+    return jnp.asarray(out)
+
+
+def run(scale: str = "quick"):
+    V, E = (20000, 150000) if scale == "quick" else (100000, 1000000)
+    n_batches, bs = (10, 1024) if scale == "quick" else (10, 10240)
+    rng = np.random.default_rng(5)
+    src, dst = rmat_edges(V, E, seed=4)
+    E = len(src)
+    w = rng.uniform(0.5, 4.0, E).astype(np.float32)
+    cap = E + n_batches * bs + 4096
+
+    for algo in ("bfs", "sssp"):
+        weighted = algo == "sssp"
+        static_fn = sssp_static if weighted else bfs_tree_static
+        inc_fn = sssp_incremental if weighted else bfs_incremental
+
+        # ---- incremental ---------------------------------------------------
+        g = from_edges_host(V, src, dst, w if weighted else None,
+                            hashing=False, slack_slabs=n_batches * bs + 64)
+        state, _ = static_fn(g, 0, edge_capacity=cap)
+        t_static = t_dyn = 0.0
+        for b in range(n_batches):
+            bs_s = rng.integers(0, V, bs).astype(np.uint32)
+            bs_d = rng.integers(0, V, bs).astype(np.uint32)
+            bw = rng.uniform(0.5, 4.0, bs).astype(np.float32)
+            g = ensure_capacity(g, bs + 64)
+            g, _ = insert_edges(g, pad(bs_s, bs), pad(bs_d, bs),
+                                jnp.asarray(bw) if weighted else None)
+            mask = jnp.ones(bs, bool)
+            if weighted:
+                t_dyn += time_fn(lambda: inc_fn(
+                    g, state, pad(bs_s, bs), pad(bs_d, bs), jnp.asarray(bw),
+                    mask, edge_capacity=cap), iters=3, warmup=1)
+            else:
+                t_dyn += time_fn(lambda: inc_fn(
+                    g, state, pad(bs_s, bs), pad(bs_d, bs), mask,
+                    edge_capacity=cap), iters=3, warmup=1)
+            t_static += time_fn(lambda: static_fn(g, 0, edge_capacity=cap),
+                                iters=3, warmup=1)
+            if weighted:
+                state, _ = inc_fn(g, state, pad(bs_s, bs), pad(bs_d, bs),
+                                  jnp.asarray(bw), mask, edge_capacity=cap)
+            else:
+                state, _ = inc_fn(g, state, pad(bs_s, bs), pad(bs_d, bs),
+                                  mask, edge_capacity=cap)
+        row(f"{algo}_incremental_s10", t_dyn / n_batches,
+            f"speedup_vs_static={t_static / t_dyn:.2f}x")
+
+        # ---- decremental ---------------------------------------------------
+        g = from_edges_host(V, src, dst, w if weighted else None,
+                            hashing=False, slack_slabs=64)
+        state, _ = static_fn(g, 0, edge_capacity=cap)
+        dec_fn = sssp_decremental if weighted else bfs_decremental
+        t_static = t_dyn = 0.0
+        perm = rng.permutation(E)
+        for b in range(n_batches):
+            idx = perm[b * bs:(b + 1) * bs]
+            ds, dd = src[idx], dst[idx]
+            g, _ = delete_edges(g, pad(ds, bs), pad(dd, bs))
+            mask = jnp.ones(bs, bool)
+            t_dyn += time_fn(lambda: dec_fn(
+                g, state, pad(ds, bs), pad(dd, bs), mask, src=0,
+                edge_capacity=cap), iters=3, warmup=1)
+            t_static += time_fn(lambda: static_fn(g, 0, edge_capacity=cap),
+                                iters=3, warmup=1)
+            state, _ = dec_fn(g, state, pad(ds, bs), pad(dd, bs), mask,
+                              src=0, edge_capacity=cap)
+        row(f"{algo}_decremental_s10", t_dyn / n_batches,
+            f"speedup_vs_static={t_static / t_dyn:.2f}x")

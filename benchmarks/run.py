@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` scales graphs up;
+the default 'quick' profile keeps the whole suite CPU-friendly.  The paper's
+claims are *ratios* (vs baseline / vs static recompute); absolute times on
+this CPU container are not comparable with the paper's RTX 2080 Ti.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module subset")
+    args = ap.parse_args()
+    scale = "full" if args.full else "quick"
+
+    from . import (dynamic_speedup, memory_table, pagerank_bench,
+                   traversal, triangle_bench, update_throughput, wcc_bench)
+    suites = {
+        "memory_table": memory_table,        # Table 5
+        "update_throughput": update_throughput,  # Figs 3–5
+        "traversal": traversal,              # Fig 6
+        "dynamic_speedup": dynamic_speedup,  # Fig 7
+        "pagerank": pagerank_bench,          # Figs 8–10
+        "triangle": triangle_bench,          # Fig 11
+        "wcc": wcc_bench,                    # Fig 12 + Table 6
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in suites.items():
+        if only and name not in only:
+            continue
+        print(f"# === {name} ===", flush=True)
+        try:
+            mod.run(scale)
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"# FAILED: {failed}")
+        sys.exit(1)
+    print("# all benchmark suites completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Paper Figs. 3/4/5 — insert / delete / query throughput, Meerkat vs the
+Hornet-like baseline, for bulk loads and small batches (2K/4K/8K)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (empty, ensure_capacity, delete_edges, from_edges_host,
+                        insert_edges, plan_buckets, query_edges)
+from repro.data.synth import rmat_edges
+
+from . import hornet_like as HL
+from .timing import row, time_fn
+
+
+def pad(a, n):
+    out = np.full(n, 0xFFFFFFFF, np.uint32)
+    out[:len(a)] = a
+    return jnp.asarray(out)
+
+
+def run(scale: str = "quick"):
+    V, E = (20000, 150000) if scale == "quick" else (200000, 2000000)
+    src, dst = rmat_edges(V, E, seed=0)
+    E = len(src)
+
+    # --- bulk build (Fig. 3 'entire graph') -------------------------------
+    def build_meerkat():
+        bc = plan_buckets(V, np.bincount(src, minlength=V))
+        g = empty(V, bc, E // 64 + V + 1024)
+        B = 8192
+        for i in range(0, E, B):
+            g = ensure_capacity(g, B)
+            g, _ = insert_edges(g, pad(src[i:i + B], B), pad(dst[i:i + B], B))
+        return g
+
+    us = time_fn(build_meerkat, iters=2, warmup=1)
+    row("insert_bulk_meerkat", us, f"edges={E};Meps={E / us:.2f}")
+
+    def build_hornet():
+        g = HL.from_edges_host(V, src[:1], dst[:1], slack=4.0)
+        B = 8192
+        for i in range(0, E, B):
+            g, _ = HL.insert_edges(g, pad(src[i:i + B], B),
+                                   pad(dst[i:i + B], B))
+        return g
+    us_h = time_fn(build_hornet, iters=2, warmup=1)
+    row("insert_bulk_hornet_like", us_h, f"speedup={us_h / us:.2f}x")
+
+    # --- small-batch insert / delete (Figs. 3, 4) -------------------------
+    g0 = from_edges_host(V, src, dst, hashing=True, slack_slabs=4096)
+    h0 = HL.from_edges_host(V, src, dst, slack=4.0)
+    rng = np.random.default_rng(1)
+    for bs in (2048, 4096, 8192):
+        new_s = rng.integers(0, V, bs).astype(np.uint32)
+        new_d = rng.integers(0, V, bs).astype(np.uint32)
+        gm = ensure_capacity(g0, bs + 1)
+        us_m = time_fn(lambda: insert_edges(gm, pad(new_s, bs),
+                                            pad(new_d, bs)))
+        us_h = time_fn(lambda: HL.insert_edges(h0, pad(new_s, bs),
+                                               pad(new_d, bs)))
+        row(f"insert_batch{bs}_meerkat", us_m,
+            f"Meps={bs / us_m:.2f}")
+        row(f"insert_batch{bs}_hornet_like", us_h,
+            f"speedup={us_h / us_m:.2f}x")
+
+        del_idx = rng.choice(E, bs, replace=False)
+        ds, dd = src[del_idx], dst[del_idx]
+        us_m = time_fn(lambda: delete_edges(g0, pad(ds, bs), pad(dd, bs)))
+        us_h = time_fn(lambda: HL.delete_edges(h0, pad(ds, bs), pad(dd, bs)))
+        row(f"delete_batch{bs}_meerkat", us_m, f"Meps={bs / us_m:.2f}")
+        row(f"delete_batch{bs}_hornet_like", us_h,
+            f"speedup={us_h / us_m:.2f}x")
+
+    # --- query (Fig. 5): random batches 2^14..2^16 (scaled from 2^16..2^20)
+    for logq in (14, 15, 16):
+        Q = 1 << logq
+        qs = rng.integers(0, V, Q).astype(np.uint32)
+        qd = rng.integers(0, V, Q).astype(np.uint32)
+        us_m = time_fn(lambda: query_edges(g0, jnp.asarray(qs),
+                                           jnp.asarray(qd)))
+        us_h = time_fn(lambda: HL.query_edges(h0, jnp.asarray(qs),
+                                              jnp.asarray(qd)))
+        row(f"query_2e{logq}_meerkat", us_m, f"Mqps={Q / us_m:.2f}")
+        row(f"query_2e{logq}_hornet_like", us_h,
+            f"speedup={us_h / us_m:.2f}x")

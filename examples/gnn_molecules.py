@@ -1,0 +1,65 @@
+"""Train NequIP on batched random molecules whose bond graph lives in a
+DYNAMIC SlabGraph — each step perturbs the neighbor lists through edge
+batches (the MD neighbor-list-rebuild pattern), and the GNN consumes the
+live topology via ``edges_from_slab``.
+
+    PYTHONPATH=src python examples/gnn_molecules.py
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import empty, ensure_capacity, insert_edges, delete_edges
+from repro.models.gnn import nequip
+from repro.models.gnn.common import GraphBatch, edges_from_slab
+from repro.train import optimizer as opt
+
+V, E_CAP = 64, 512
+cfg = nequip.NequIPConfig(n_layers=2, channels=8, n_species=5)
+key = jax.random.PRNGKey(0)
+params = nequip.init_params(cfg, key)
+ostate = opt.init(params)
+adamw = opt.AdamWConfig(lr=1e-3)
+
+# dynamic bond graph
+g = empty(V, np.ones(V, np.int32), 256)
+rng = np.random.default_rng(0)
+pos = jnp.asarray(rng.uniform(0, 4, (V, 3)), jnp.float32)
+species = jnp.asarray(rng.integers(0, 5, V))
+
+
+def pad(xs, n):
+    a = np.full(n, 0xFFFFFFFF, np.uint32)
+    a[:len(xs)] = np.asarray(xs, np.uint32)
+    return jnp.asarray(a)
+
+
+def loss_fn(params, batch, targets):
+    return nequip.energy_loss(params, batch, targets, cfg)
+
+
+step = jax.jit(lambda p, o, b, t: (
+    lambda lg: (opt.update(adamw, lg[1], o, p) + (lg[0],)))(
+    jax.value_and_grad(loss_fn)(p, b, t)))
+
+for it in range(20):
+    # mutate the neighbor list: insert a few bonds, drop a few
+    ns = rng.integers(0, V, 24).astype(np.uint32)
+    nd = rng.integers(0, V, 24).astype(np.uint32)
+    g = ensure_capacity(g, 32)
+    g, _ = insert_edges(g, pad(ns, 32), pad(nd, 32))
+    if it % 3 == 2:
+        g, _ = delete_edges(g, pad(ns[:8], 16), pad(nd[:8], 16))
+
+    snd, rcv, emask = edges_from_slab(g, max_edges=E_CAP)
+    batch = GraphBatch(positions=pos, node_feat=None, species=species,
+                       senders=snd, receivers=rcv, edge_mask=emask,
+                       node_mask=jnp.ones(V, bool),
+                       graph_ids=jnp.zeros(V, jnp.int32), n_graphs=1)
+    target = jnp.asarray([float(np.sin(it))])
+    params, ostate, loss = step(params, ostate, batch, target)
+    print(f"step {it:02d}  edges={int(emask.sum()):3d}  "
+          f"loss={float(loss):.4f}")
+print("gnn_molecules OK")

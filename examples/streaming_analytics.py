@@ -1,0 +1,14 @@
+"""End-to-end serving driver (the paper's kind): a dynamic-graph analytics
+service answering batched update + query requests with incremental
+algorithms.  Thin wrapper over the production launcher.
+
+    PYTHONPATH=src python examples/streaming_analytics.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--vertices", "5000", "--initial-edges",
+                "25000", "--requests", "15", "--batch", "1024"]
+    main()

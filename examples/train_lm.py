@@ -1,0 +1,17 @@
+"""Train a small LM (gemma2-9b *smoke* config — same code path as the full
+production config) for a few hundred steps with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += ["--arch", "gemma2-9b", "--steps", "200",
+                     "--batch", "8", "--seq-len", "64",
+                     "--ckpt-dir", "/tmp/repro_lm_ckpt"]
+    else:
+        sys.argv = [sys.argv[0], "--arch", "gemma2-9b"] + sys.argv[1:]
+    main()

@@ -1,0 +1,80 @@
+"""Dynamic BFS (paper §4.2, §6.1).
+
+Two variants, matching the paper's evaluation:
+  * VANILLA — level-synchronous static BFS, 32-bit distances only (the fast
+    static path; no dependence tree).
+  * TREE    — ⟨distance,parent⟩ dependence tree via the SSSP engine with unit
+    weights: this is the variant that supports incremental / decremental
+    updates (paper: "the incremental/decremental BFS algorithm uses the same
+    kernels as that of incremental/decremental SSSP").
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.slab_graph import SlabGraph
+from ..core.worklist import expand_vertices
+from .sssp import (INF, TreeState, init_state, run_to_convergence,
+                   relax_edges, sssp_decremental, sssp_incremental,
+                   _compact_vertices)
+
+UNREACHED = jnp.int32(2 ** 30)
+
+
+@partial(jax.jit, static_argnames=("src", "edge_capacity", "max_bpv",
+                                   "max_iters"))
+def bfs_vanilla(g: SlabGraph, *, src: int, edge_capacity: int,
+                max_bpv: int = 1, max_iters: int = 100000
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Level-based static BFS; returns (levels int32, iterations)."""
+    n = g.n_vertices
+    dist = jnp.full((n,), UNREACHED, jnp.int32).at[src].set(0)
+    newly = jnp.zeros((n,), bool).at[src].set(True)
+
+    def cond(carry):
+        _, newly, it = carry
+        return jnp.any(newly) & (it < max_iters)
+
+    def body(carry):
+        dist, newly, it = carry
+        verts, vmask, _ = _compact_vertices(newly)
+        ef = expand_vertices(g, verts, vmask, out_capacity=edge_capacity,
+                             max_bpv=max_bpv)
+        emask = jnp.arange(edge_capacity) < ef.size
+        d = jnp.where(emask, ef.dst.astype(jnp.int32), n)
+        touched = jnp.zeros((n + 1,), bool).at[d].set(True, mode="drop")[:n]
+        newly = touched & (dist == UNREACHED)
+        dist = jnp.where(newly, it + 1, dist)
+        return dist, newly, it + 1
+
+    dist, _, iters = jax.lax.while_loop(
+        cond, body, (dist, newly, jnp.asarray(0, jnp.int32)))
+    return dist, iters
+
+
+def bfs_tree_static(g: SlabGraph, src: int, *, edge_capacity: int,
+                    max_bpv: int = 1) -> Tuple[TreeState, jnp.ndarray]:
+    """TREE-BASED static BFS: SSSP engine, unit weights (64-bit pair updates
+    on GPU; two-plane lexicographic segment-min here)."""
+    state = init_state(g.n_vertices, src)
+    improved0 = jnp.zeros((g.n_vertices,), bool).at[src].set(True)
+    return run_to_convergence(g, state, improved0,
+                              edge_capacity=edge_capacity, max_bpv=max_bpv)
+
+
+def bfs_incremental(g: SlabGraph, state: TreeState, bsrc, bdst, bmask, *,
+                    edge_capacity: int, max_bpv: int = 1):
+    """Unit-weight incremental update via the SSSP engine."""
+    bw = jnp.ones_like(bsrc, jnp.float32)
+    return sssp_incremental(g, state, bsrc, bdst, bw, bmask,
+                            edge_capacity=edge_capacity, max_bpv=max_bpv)
+
+
+def bfs_decremental(g: SlabGraph, state: TreeState, bsrc, bdst, bmask, *,
+                    src: int, edge_capacity: int, max_bpv: int = 1):
+    return sssp_decremental(g, state, bsrc, bdst, bmask, src=src,
+                            edge_capacity=edge_capacity, max_bpv=max_bpv)

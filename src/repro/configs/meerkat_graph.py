@@ -1,0 +1,23 @@
+"""meerkat-graph — the paper's own technique as a distributed config.
+
+Dynamic graph analytics serving: batched edge updates + incremental
+PageRank/BFS/WCC over a vertex-partitioned SlabGraph (the multi-pod cell
+beyond the 40 assigned arch×shape cells).
+"""
+ARCH_ID = "meerkat-graph"
+FAMILY = "graph"
+SHAPES = {
+    "stream_10k": {"kind": "graph_update", "n_vertices": 1 << 20,
+                   "batch": 10240, "capacity_slabs": 1 << 17},
+    "analytics_pr": {"kind": "graph_pagerank", "n_vertices": 1 << 20,
+                     "capacity_slabs": 1 << 17},
+}
+SKIP = {}
+
+
+def full_config():
+    return {"n_vertices": 1 << 20, "capacity_slabs": 1 << 17}
+
+
+def smoke_config():
+    return {"n_vertices": 1 << 10, "capacity_slabs": 1 << 11}

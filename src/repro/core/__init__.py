@@ -1,0 +1,31 @@
+"""Meerkat-on-TPU core: pooled slab-hash dynamic graph + iteration primitives.
+
+The paper's primary contribution (dynamic graph representation, pooled
+allocation, iterator set, warp-level APIs as lane-vector ops) lives here.
+"""
+from .hashing import (EMPTY_KEY, INVALID_LANE, INVALID_SLAB, INVALID_VERTEX,
+                      SLAB_WIDTH, TOMBSTONE_KEY, bucket_hash, is_valid_vertex)
+from .slab_graph import (SlabGraph, empty, ensure_capacity, from_edges_host,
+                         plan_buckets, update_slab_pointers)
+from .batch import delete_edges, insert_edges, query_edges, probe
+from .worklist import (CSR, EdgeFrontier, PoolView, csr_snapshot,
+                       expand_vertices, occupancy_stats, pool_edges,
+                       updated_lane_mask, updated_vertices)
+from .frontier import Frontier, clear, enqueue, make_frontier, swap
+from .union_find import (component_labels, compress, count_components, find,
+                         init_parents, union_batch)
+from .iterators import bucket_iterator, slab_iterator, update_iterator
+
+__all__ = [
+    "EMPTY_KEY", "INVALID_LANE", "INVALID_SLAB", "INVALID_VERTEX",
+    "SLAB_WIDTH", "TOMBSTONE_KEY", "bucket_hash", "is_valid_vertex",
+    "SlabGraph", "empty", "ensure_capacity", "from_edges_host",
+    "plan_buckets", "update_slab_pointers",
+    "delete_edges", "insert_edges", "query_edges", "probe",
+    "CSR", "EdgeFrontier", "PoolView", "csr_snapshot", "expand_vertices",
+    "occupancy_stats", "pool_edges", "updated_lane_mask", "updated_vertices",
+    "Frontier", "clear", "enqueue", "make_frontier", "swap",
+    "component_labels", "compress", "count_components", "find",
+    "init_parents", "union_batch",
+    "bucket_iterator", "slab_iterator", "update_iterator",
+]

@@ -1,0 +1,65 @@
+"""Frontier<T> — fixed-capacity work queue with prefix-sum enqueue.
+
+``warpenqueuefrontier`` (paper Alg. 2) is ballot → popc → one aggregated
+atomicAdd → per-lane positional write.  On TPU the ballot/popc pair *is* an
+exclusive prefix sum over the participation mask, and the atomic base counter
+is the carried ``size`` scalar — so the whole operation becomes deterministic
+masked compaction.  Capacity is static (compile-time); overflow is detected
+and surfaced, the host grows the buffer between steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["data", "size", "overflow"], meta_fields=[])
+@dataclasses.dataclass(frozen=True)
+class Frontier:
+    data: jnp.ndarray      # (cap, k) — k fields per element (e.g. src,dst,w)
+    size: jnp.ndarray      # () int32
+    overflow: jnp.ndarray  # () bool
+
+    @property
+    def capacity(self) -> int:
+        return self.data.shape[0]
+
+
+def make_frontier(capacity: int, n_fields: int,
+                  dtype=jnp.float32) -> Frontier:
+    return Frontier(data=jnp.zeros((capacity, n_fields), dtype=dtype),
+                    size=jnp.asarray(0, jnp.int32),
+                    overflow=jnp.asarray(False))
+
+
+def clear(f: Frontier) -> Frontier:
+    return dataclasses.replace(f, size=jnp.asarray(0, jnp.int32),
+                               overflow=jnp.asarray(False))
+
+
+def enqueue(f: Frontier, values: jnp.ndarray,
+            mask: jnp.ndarray) -> Frontier:
+    """Append ``values[mask]`` — the warpenqueuefrontier analogue.
+
+    values: (n, k); mask: (n,) bool.  Writes past capacity are dropped and
+    flagged.  The ``cumsum`` plays ballot+popc; ``size`` plays the aggregated
+    atomic base.
+    """
+    m = mask.astype(jnp.int32)
+    pos = f.size + jnp.cumsum(m) - m
+    idx = jnp.where(mask & (pos < f.capacity), pos, f.capacity)
+    data = f.data.at[idx].set(values.astype(f.data.dtype), mode="drop")
+    new_size = f.size + jnp.sum(m)
+    return Frontier(data=data,
+                    size=jnp.minimum(new_size, f.capacity),
+                    overflow=f.overflow | (new_size > f.capacity))
+
+
+def swap(a: Frontier, b: Frontier) -> Tuple[Frontier, Frontier]:
+    """Paper's ``swap(F_current, F_next)``; returns (new_current, cleared_next)."""
+    return b, clear(a)

@@ -1,0 +1,48 @@
+"""Hashing and sentinel constants for the slab pool.
+
+Meerkat (paper §2) stores a vertex's adjacency in a per-vertex hash table whose
+buckets are slab lists.  Sentinels follow the paper: an ``EMPTY_KEY`` marks a
+never-used lane, a ``TOMBSTONE_KEY`` marks a deleted lane.  On TPU we keep the
+same uint32 encoding (UINT32_MAX-1 / UINT32_MAX-2); ``INVALID_VERTEX`` pads
+batches.
+
+The bucket hash is the multiplicative (Knuth/Fibonacci) hash — cheap, vectorises
+to a single uint32 multiply on the VPU, and distributes power-law neighbor ids
+well enough for the load-balance role it plays in IterationScheme2.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# --- lane geometry -----------------------------------------------------------
+# GPU Meerkat: slab = 32 lanes x 4B = 128B (one L1 line, one warp).
+# TPU: slab = 128 lanes x 4B = 512B  (one full vector-register row; the natural
+# unit of coalesced VMEM access).  See DESIGN.md §2.
+SLAB_WIDTH = 128
+
+# --- sentinels ---------------------------------------------------------------
+EMPTY_KEY = jnp.uint32(0xFFFFFFFE)      # lane never populated
+TOMBSTONE_KEY = jnp.uint32(0xFFFFFFFD)  # lane held a vertex, now deleted
+INVALID_VERTEX = jnp.uint32(0xFFFFFFFF) # batch padding / invalid id
+INVALID_SLAB = jnp.int32(-1)            # end-of-chain "pointer"
+INVALID_LANE = jnp.int32(-1)
+
+_KNUTH = jnp.uint32(2654435761)
+
+
+def bucket_hash(dst: jnp.ndarray, n_buckets: jnp.ndarray) -> jnp.ndarray:
+    """Hash a destination-vertex id into one of ``n_buckets`` slab lists.
+
+    ``dst`` uint32, ``n_buckets`` int32 (>=1).  Matches the paper's scheme of
+    hashing the *destination* vertex to pick the slab list within the source
+    vertex's table.  With hashing disabled (n_buckets == 1) this is 0, i.e. the
+    "single bucket" mode the paper uses for BFS/SSSP/PageRank.
+    """
+    h = (dst.astype(jnp.uint32) * _KNUTH) >> jnp.uint32(8)
+    return (h % n_buckets.astype(jnp.uint32)).astype(jnp.int32)
+
+
+def is_valid_vertex(v: jnp.ndarray) -> jnp.ndarray:
+    """Paper's ``is_valid_vertex()``: lane holds a real neighbor id."""
+    v = v.astype(jnp.uint32)
+    return (v != EMPTY_KEY) & (v != TOMBSTONE_KEY) & (v != INVALID_VERTEX)

@@ -1,0 +1,89 @@
+"""Meerkat iterator API (paper Tables 1–3), expressed functionally.
+
+The vectorised forms live in ``worklist.py`` (pool sweeps / frontier
+expansion); this module provides the per-vertex iterator API for library users
+and tests: ``slab_iterator`` walks every slab list of a vertex (SlabIterator),
+``bucket_iterator`` walks one slab list (BucketIterator), ``update_iterator``
+visits only the slabs holding this epoch's inserts (UpdateIterator).  Each
+returns the visited neighbor ids as a fixed-capacity masked array — the JAX
+rendering of "a warp advances the iterator one slab per step".
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .hashing import INVALID_SLAB, SLAB_WIDTH, is_valid_vertex
+from .slab_graph import SlabGraph
+from .worklist import updated_lane_mask
+
+
+@partial(jax.jit, static_argnames=("max_neighbors",))
+def bucket_iterator(g: SlabGraph, v: jnp.ndarray, bucket_index: jnp.ndarray,
+                    *, max_neighbors: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """begin_at(i)/end_at(i): neighbors stored in vertex v's i'th slab list.
+
+    Returns (neighbors[max_neighbors] uint32, count).  Slots past count are
+    undefined (padded EMPTY).
+    """
+    b = g.bucket_offset[v] + bucket_index
+    buf = jnp.full((max_neighbors,), jnp.uint32(0xFFFFFFFE), dtype=jnp.uint32)
+
+    def cond(state):
+        cur, _, _ = state
+        return cur != INVALID_SLAB
+
+    def body(state):
+        cur, buf, n = state
+        row = g.keys[cur]
+        ok = is_valid_vertex(row)
+        m = ok.astype(jnp.int32)
+        pos = n + jnp.cumsum(m) - m
+        idx = jnp.where(ok & (pos < max_neighbors), pos, max_neighbors)
+        buf = buf.at[idx].set(row, mode="drop")
+        return g.next_slab[cur], buf, n + jnp.sum(m)
+
+    _, buf, n = jax.lax.while_loop(
+        cond, body, (b.astype(jnp.int32), buf, jnp.asarray(0, jnp.int32)))
+    return buf, jnp.minimum(n, max_neighbors)
+
+
+@partial(jax.jit, static_argnames=("max_neighbors", "max_bpv"))
+def slab_iterator(g: SlabGraph, v: jnp.ndarray, *, max_neighbors: int,
+                  max_bpv: int = 1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """begin()/end(): all current neighbors of v, one slab list at a time."""
+    buf = jnp.full((max_neighbors,), jnp.uint32(0xFFFFFFFE), dtype=jnp.uint32)
+    n = jnp.asarray(0, jnp.int32)
+
+    def per_bucket(i, carry):
+        buf, n = carry
+        nb, cnt = bucket_iterator(g, v, i, max_neighbors=max_neighbors)
+        take = jnp.arange(max_neighbors, dtype=jnp.int32)
+        ok = (take < cnt) & (i < g.bucket_count[v])
+        pos = n + jnp.where(ok, take, 0)
+        idx = jnp.where(ok & (pos < max_neighbors), pos, max_neighbors)
+        buf = buf.at[idx].set(nb, mode="drop")
+        n = n + jnp.where(i < g.bucket_count[v], cnt, 0)
+        return buf, n
+
+    buf, n = jax.lax.fori_loop(0, max_bpv, per_bucket, (buf, n))
+    return buf, jnp.minimum(n, max_neighbors)
+
+
+@partial(jax.jit, static_argnames=("max_neighbors",))
+def update_iterator(g: SlabGraph, v: jnp.ndarray, *, max_neighbors: int
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """update_begin()/update_end(): only neighbors inserted this epoch."""
+    mask = updated_lane_mask(g)                 # (S,128)
+    mine = mask & (g.slab_vertex[:, None] == v.astype(jnp.int32))
+    flat = mine.reshape(-1)
+    keys = g.keys.reshape(-1)
+    m = flat.astype(jnp.int32)
+    pos = jnp.cumsum(m) - m
+    idx = jnp.where(flat & (pos < max_neighbors), pos, max_neighbors)
+    buf = jnp.full((max_neighbors,), jnp.uint32(0xFFFFFFFE), dtype=jnp.uint32)
+    buf = buf.at[idx].set(keys, mode="drop")
+    return buf, jnp.minimum(jnp.sum(m), max_neighbors)

@@ -1,0 +1,248 @@
+"""Iteration primitives over the slab pool.
+
+These are the TPU forms of Meerkat's three iterators (paper §3.4, Tables 1–3):
+
+* ``pool_edges``        — SlabIterator over *all* vertices: the whole pool is
+  one dense (S,128) array, so "iterate every slab of every vertex" is a single
+  vectorised sweep with ``slab_vertex`` as the segment-id vector.  This is the
+  generalisation of IterationScheme2's ⟨bucket_vertex, bucket_index⟩ work-list:
+  the work items are slab rows, pre-flattened, load-balanced by construction.
+* ``updated_lane_mask`` — UpdateIterator: an O(1)-state lane mask selecting
+  exactly the entries inserted since the last ``update_slab_pointers()``.
+* ``expand_vertices``   — IterationScheme1 for a *frontier*: walk the slab
+  chains of a given vertex set and emit their current out-edges, with
+  prefix-sum (ballot→popc) compaction into a fixed-capacity edge buffer.
+* ``csr_snapshot``      — freeze the current adjacency into CSR (used to feed
+  static baselines and the GNN configs that consume a graph snapshot).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .hashing import INVALID_SLAB, SLAB_WIDTH, is_valid_vertex
+from .slab_graph import SlabGraph
+
+
+class PoolView(NamedTuple):
+    """Dense view of every adjacency entry in the pool."""
+    src: jnp.ndarray     # (S, 128) int32 — owner vertex per lane (-1 unalloc)
+    dst: jnp.ndarray     # (S, 128) uint32 — neighbor ids (sentinels included)
+    weight: Optional[jnp.ndarray]  # (S, 128) float32 or None
+    valid: jnp.ndarray   # (S, 128) bool — allocated & holds a real neighbor
+
+
+def pool_edges(g: SlabGraph) -> PoolView:
+    """SlabIterator over all vertices as one dense sweep."""
+    src = jnp.broadcast_to(g.slab_vertex[:, None],
+                           (g.capacity_slabs, SLAB_WIDTH))
+    valid = (g.slab_vertex[:, None] >= 0) & is_valid_vertex(g.keys)
+    return PoolView(src=src, dst=g.keys, weight=g.weights, valid=valid)
+
+
+def updated_lane_mask(g: SlabGraph) -> jnp.ndarray:
+    """(S,128) bool — lanes holding edges inserted in the current epoch.
+
+    Rule 1: slabs allocated after the epoch watermark are wholly new.
+    Rule 2: a flagged bucket's ``upd_slab`` is new from ``upd_lane`` onward
+            (Fig. 2: the old tail slab, partially old).
+    Everything later in a flagged chain is covered by rule 1 because inserts
+    append at the tail.
+    """
+    S = g.capacity_slabs
+    row = jnp.arange(S, dtype=jnp.int32)
+    start = jnp.where(row >= g.epoch_next_free, 0, SLAB_WIDTH)  # (S,)
+    flagged = g.upd_flag & (g.upd_slab < g.epoch_next_free)
+    tgt = jnp.where(flagged, g.upd_slab, S)  # park non-flagged OOB
+    start = start.at[tgt].min(jnp.where(flagged, g.upd_lane, SLAB_WIDTH),
+                              mode="drop")
+    lane = jnp.arange(SLAB_WIDTH, dtype=jnp.int32)
+    mask = lane[None, :] >= start[:, None]
+    return mask & (g.slab_vertex[:, None] >= 0) & is_valid_vertex(g.keys)
+
+
+@partial(jax.jit, static_argnames=("max_buckets", "out_capacity"))
+def updated_edges(g: SlabGraph, *, max_buckets: int,
+                  out_capacity: int) -> "EdgeFrontier":
+    """True UpdateIterator traversal: O(#updated slabs), not O(pool).
+
+    Compacts the flagged buckets, then chain-walks from each bucket's
+    (upd_slab, upd_lane) emitting only this epoch's lanes — the paper's
+    'visit only those slabs holding new adjacent vertices', with the first
+    partially-old slab handled by the stored lane offset (Fig. 2).
+    ``max_buckets`` bounds flagged buckets, ``out_capacity`` the emitted
+    edges (≈ batch size); overflow is flagged.
+    """
+    m = g.upd_flag.astype(jnp.int32)
+    pos = jnp.cumsum(m) - m
+    idx = jnp.where(g.upd_flag & (pos < max_buckets), pos, max_buckets)
+    bids = jnp.zeros((max_buckets,), jnp.int32).at[idx].set(
+        jnp.arange(g.n_buckets, dtype=jnp.int32), mode="drop")
+    nb = jnp.minimum(jnp.sum(m), max_buckets)
+    bmask = jnp.arange(max_buckets) < nb
+
+    cur = jnp.where(bmask, g.upd_slab[jnp.minimum(bids, g.n_buckets - 1)],
+                    INVALID_SLAB).astype(jnp.int32)
+    lane_min = jnp.where(bmask,
+                         g.upd_lane[jnp.minimum(bids, g.n_buckets - 1)], 0)
+
+    cap = out_capacity
+    buf_src = jnp.zeros((cap,), dtype=jnp.uint32)
+    buf_dst = jnp.zeros((cap,), dtype=jnp.uint32)
+    buf_w = jnp.zeros((cap,), dtype=jnp.float32)
+    size = jnp.asarray(0, jnp.int32)
+    lane = jnp.arange(SLAB_WIDTH, dtype=jnp.int32)
+
+    def cond(state):
+        return jnp.any(state[0] != INVALID_SLAB)
+
+    def body(state):
+        cur, lane_min, bsrc, bdst, bw, size = state
+        active = cur != INVALID_SLAB
+        rows = g.keys[jnp.maximum(cur, 0)]
+        owners = g.slab_vertex[jnp.maximum(cur, 0)]
+        emit = active[:, None] & is_valid_vertex(rows) \
+            & (lane[None, :] >= lane_min[:, None])
+        flat = emit.reshape(-1)
+        p = size + jnp.cumsum(flat.astype(jnp.int32)) - flat.astype(jnp.int32)
+        widx = jnp.where(flat, p, cap)
+        bsrc = bsrc.at[widx].set(
+            jnp.broadcast_to(owners[:, None].astype(jnp.uint32),
+                             rows.shape).reshape(-1), mode="drop")
+        bdst = bdst.at[widx].set(rows.reshape(-1), mode="drop")
+        if g.weighted:
+            bw = bw.at[widx].set(
+                g.weights[jnp.maximum(cur, 0)].reshape(-1), mode="drop")
+        size = size + jnp.sum(flat.astype(jnp.int32))
+        cur = jnp.where(active, g.next_slab[jnp.maximum(cur, 0)],
+                        INVALID_SLAB)
+        lane_min = jnp.zeros_like(lane_min)  # later slabs are wholly new
+        return cur, lane_min, bsrc, bdst, bw, size
+
+    _, _, buf_src, buf_dst, buf_w, size = jax.lax.while_loop(
+        cond, body, (cur, lane_min, buf_src, buf_dst, buf_w, size))
+    return EdgeFrontier(src=buf_src, dst=buf_dst, weight=buf_w,
+                        size=jnp.minimum(size, cap), overflow=size > cap)
+
+
+def updated_vertices(g: SlabGraph) -> jnp.ndarray:
+    """(V,) bool — the per-vertex ``is_updated`` flag of the SlabIterator
+    incremental scheme (paper §6.4.2): vertex has ≥1 flagged bucket."""
+    per_vertex = jax.ops.segment_max(
+        g.upd_flag.astype(jnp.int32), g.bucket_vertex,
+        num_segments=g.n_vertices)
+    return per_vertex > 0
+
+
+class EdgeFrontier(NamedTuple):
+    src: jnp.ndarray      # (cap,) uint32
+    dst: jnp.ndarray      # (cap,) uint32
+    weight: jnp.ndarray   # (cap,) float32 (zeros when unweighted)
+    size: jnp.ndarray     # () int32
+    overflow: jnp.ndarray # () bool
+
+
+@partial(jax.jit, static_argnames=("out_capacity", "max_bpv"))
+def expand_vertices(g: SlabGraph, verts: jnp.ndarray, vmask: jnp.ndarray,
+                    *, out_capacity: int, max_bpv: int = 1) -> EdgeFrontier:
+    """Emit the current out-edges of ``verts`` (masked by ``vmask``).
+
+    ``max_bpv`` must bound max(bucket_count) (1 when hashing is disabled —
+    the configuration the paper uses for BFS/SSSP/PageRank).  The chain walk
+    is a ``while_loop`` whose body touches one slab row per active bucket —
+    the direct analogue of a warp advancing its SlabIterator.
+    """
+    Nv = verts.shape[0]
+    v = jnp.where(vmask, verts, 0).astype(jnp.int32)
+    j = jnp.arange(max_bpv, dtype=jnp.int32)[None, :]
+    bmask = vmask[:, None] & (j < g.bucket_count[v][:, None])
+    buckets = (g.bucket_offset[v][:, None] + j).reshape(-1)
+    bmask = bmask.reshape(-1)
+    cur = jnp.where(bmask, buckets, INVALID_SLAB).astype(jnp.int32)
+
+    cap = out_capacity
+    buf_src = jnp.zeros((cap,), dtype=jnp.uint32)
+    buf_dst = jnp.zeros((cap,), dtype=jnp.uint32)
+    buf_w = jnp.zeros((cap,), dtype=jnp.float32)
+    size = jnp.asarray(0, jnp.int32)
+
+    def cond(state):
+        cur = state[0]
+        return jnp.any(cur != INVALID_SLAB)
+
+    def body(state):
+        cur, bsrc, bdst, bw, size = state
+        active = cur != INVALID_SLAB
+        rows = g.keys[jnp.maximum(cur, 0)]                      # (Nb,128)
+        owners = g.slab_vertex[jnp.maximum(cur, 0)]             # (Nb,)
+        emit = active[:, None] & is_valid_vertex(rows)
+        flat = emit.reshape(-1)
+        pos = size + jnp.cumsum(flat.astype(jnp.int32)) - flat.astype(jnp.int32)
+        idx = jnp.where(flat, pos, cap)  # OOB drop for non-emitting lanes
+        bsrc = bsrc.at[idx].set(
+            jnp.broadcast_to(owners[:, None].astype(jnp.uint32),
+                             rows.shape).reshape(-1), mode="drop")
+        bdst = bdst.at[idx].set(rows.reshape(-1), mode="drop")
+        if g.weighted:
+            wrow = g.weights[jnp.maximum(cur, 0)].reshape(-1)
+            bw = bw.at[idx].set(wrow, mode="drop")
+        size = size + jnp.sum(flat.astype(jnp.int32))
+        cur = jnp.where(active, g.next_slab[jnp.maximum(cur, 0)], INVALID_SLAB)
+        return cur, bsrc, bdst, bw, size
+
+    _, buf_src, buf_dst, buf_w, size = jax.lax.while_loop(
+        cond, body, (cur, buf_src, buf_dst, buf_w, size))
+    return EdgeFrontier(src=buf_src, dst=buf_dst, weight=buf_w,
+                        size=jnp.minimum(size, cap),
+                        overflow=size > cap)
+
+
+class CSR(NamedTuple):
+    indptr: jnp.ndarray   # (V+1,) int32
+    indices: jnp.ndarray  # (E_cap,) int32 (padded with -1)
+    weights: Optional[jnp.ndarray]
+    n_edges: jnp.ndarray  # () int32
+
+
+@partial(jax.jit, static_argnames=("max_edges",))
+def csr_snapshot(g: SlabGraph, *, max_edges: int) -> CSR:
+    """Freeze the dynamic structure into CSR (sorted by source vertex)."""
+    view = pool_edges(g)
+    flat_src = jnp.where(view.valid, view.src, g.n_vertices).reshape(-1)
+    flat_dst = view.dst.reshape(-1)
+    flat_w = (view.weight.reshape(-1) if view.weight is not None else None)
+    order = jnp.argsort(flat_src, stable=True)
+    s = flat_src[order]
+    d = flat_dst[order]
+    n_e = jnp.sum(view.valid.astype(jnp.int32))
+    counts = jax.ops.segment_sum(
+        jnp.ones_like(s), s, num_segments=g.n_vertices + 1)[:g.n_vertices]
+    indptr = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts).astype(jnp.int32)])
+    take = min(max_edges, s.shape[0])
+    indices = jnp.where(jnp.arange(take) < n_e,
+                        d[:take].astype(jnp.int32), -1)
+    w = None
+    if flat_w is not None:
+        w = jnp.where(jnp.arange(take) < n_e, flat_w[order][:take], 0.0)
+    return CSR(indptr=indptr, indices=indices, weights=w, n_edges=n_e)
+
+
+def occupancy_stats(g: SlabGraph) -> dict:
+    """Slab occupancy / allocation stats (memory table + paper §6.1 claims)."""
+    view = pool_edges(g)
+    alloc = g.slab_vertex >= 0
+    n_alloc = jnp.sum(alloc.astype(jnp.int32))
+    used_lanes = jnp.sum(view.valid.astype(jnp.int32))
+    return {
+        "allocated_slabs": int(n_alloc),
+        "capacity_slabs": g.capacity_slabs,
+        "used_lanes": int(used_lanes),
+        "occupancy": float(used_lanes) / float(max(1, int(n_alloc)) * SLAB_WIDTH),
+        "pool_bytes": int(g.keys.size * 4 +
+                          (g.weights.size * 4 if g.weighted else 0)),
+        "repr_bytes": g.nbytes(),
+    }

@@ -1,0 +1,97 @@
+"""Sharding rules: one table from logical activation/parameter names to
+PartitionSpecs, applied via a context the models consult.
+
+Axes convention (launch/mesh.py):
+  single pod : ("data", "model")            — 16 × 16
+  multi pod  : ("pod", "data", "model")     — 2 × 16 × 16; "pod" composes
+                with "data" for batch-like dims: ("pod", "data").
+
+Models call ``constrain(x, "<name>")`` at the few points that matter (scan
+carry, logits, MoE dispatch buffers, node/edge tables); outside a rules
+context this is the identity, so all smoke tests run unsharded on CPU.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX: dict = {"mesh": None, "rules": None}
+
+
+def dp_axes(mesh: Mesh):
+    """The batch-like axes for this mesh: ("pod","data") or ("data",)."""
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else ("data",)
+
+
+def default_rules(mesh: Mesh) -> Dict[str, P]:
+    dp = dp_axes(mesh)
+    return {
+        # LM activations
+        "act_btd": P(dp, None, None),        # (B, S, D)
+        "act_btd_tp": P(dp, None, "model"),  # big models: shard D (carry)
+        "logits": P(dp, None, "model"),
+        "moe_ecd": P("model", None, None),   # (E, C, D) expert buffers
+        "moe_tokens_g": P(dp, None, None),   # (G, Tg, D) grouped dispatch
+        "moe_gecd": P(dp, "model", None, None),  # (G, E, C, D) buffers
+        "tokens": P(dp, None),
+        # LM params
+        "embed": P("model", None),           # (V, D)
+        "attn_in": P(None, None, "model"),   # (L, D, H·hd)
+        "attn_out": P(None, "model", None),  # (L, H·hd, D)
+        "mlp_in": P(None, None, "model"),    # (L, D, F)
+        "mlp_out": P(None, "model", None),   # (L, F, D)
+        "moe_expert_in": P(None, "model", None, None),   # (L, E, D, F)
+        "moe_expert_out": P(None, "model", None, None),  # (L, E, F, D)
+        "lm_head": P(None, "model"),
+        # decode caches
+        "cache_heads": P(None, dp, "model", None, None),   # (L,B,H,S,hd)
+        "cache_seq": P(None, dp, None, "model", None),
+        "cache_seq_dp": P(None, None, None, dp + ("model",), None),
+        # GNN / recsys
+        "nodes": P(dp + ("model",)),          # (N, ...) node tables
+        "gnn_h_rows": P(dp + ("model",), None, None),  # (N, C, 2l+1) irreps
+        "edges_chunked": P(None, dp + ("model",)),     # (K, blk) edge chunks
+        "edges_chunked_h": P(None, dp + ("model",), None),
+        "nodes_feat": P(dp, "model"),
+        "edges": P(dp + ("model",)),          # (E,) edge tables
+        "embed_rows": P(dp + ("model",), None),  # huge embedding tables
+        "batch": P(dp),
+    }
+
+
+@contextlib.contextmanager
+def sharding_rules(mesh: Mesh, overrides: Optional[Dict[str, P]] = None):
+    rules = default_rules(mesh)
+    if overrides:
+        rules.update(overrides)
+    prev = dict(_CTX)
+    _CTX["mesh"] = mesh
+    _CTX["rules"] = rules
+    try:
+        yield rules
+    finally:
+        _CTX.update(prev)
+
+
+def constrain(x, name: str):
+    """Apply the named sharding constraint; identity outside a context."""
+    mesh, rules = _CTX["mesh"], _CTX["rules"]
+    if mesh is None or rules is None or name not in rules:
+        return x
+    spec = rules[name]
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def spec_or_none(name: str) -> Optional[P]:
+    rules = _CTX["rules"]
+    return None if rules is None else rules.get(name)

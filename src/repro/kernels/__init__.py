@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+Each subpackage ships: kernel.py (pl.pallas_call + BlockSpec tiling),
+ops.py (jit'd dispatch wrapper), ref.py (pure-jnp oracle).  All kernels are
+validated in interpret=True mode against their oracle across shape/dtype
+sweeps (tests/test_kernels.py); TPU is the compilation target.
+"""

@@ -1,0 +1,54 @@
+"""Pallas EmbeddingBag: ragged gather + weighted segment reduce.
+
+JAX has no native EmbeddingBag (kernel_taxonomy §RecSys); the framework's
+recsys path implements it as gather + segment_sum.  This kernel fuses the two:
+a (bags_per_block, L) tile of indices gathers its table rows straight into
+VMEM and reduces over the bag axis with the per-sample weights applied —
+one HBM pass over the touched rows instead of materialising (B, L, D).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bag_kernel(idx_ref, w_ref, table_ref, o_ref):
+    idx = idx_ref[...]                              # (Bb, L) int32, -1 pad
+    w = w_ref[...]                                  # (Bb, L) f32
+    ok = idx >= 0
+    rows = table_ref[jnp.where(ok, idx, 0)]         # (Bb, L, D)
+    rows = rows.astype(jnp.float32) * jnp.where(ok, w, 0.0)[..., None]
+    o_ref[...] = rows.sum(axis=1).astype(o_ref.dtype)   # (Bb, D)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bags_per_block", "interpret"))
+def embedding_bag_pallas(indices: jnp.ndarray, weights: jnp.ndarray,
+                         table: jnp.ndarray, *, bags_per_block: int = 64,
+                         interpret: bool = False) -> jnp.ndarray:
+    """indices (B,L) int32 (-1 pads), weights (B,L) f32, table (N,D) → (B,D)."""
+    B, L = indices.shape
+    D = table.shape[1]
+    R = min(bags_per_block, B)
+    pad = (-B) % R
+    if pad:
+        indices = jnp.pad(indices, ((0, pad), (0, 0)), constant_values=-1)
+        weights = jnp.pad(weights, ((0, pad), (0, 0)))
+    Bp = indices.shape[0]
+
+    out = pl.pallas_call(
+        _bag_kernel,
+        grid=(Bp // R,),
+        in_specs=[
+            pl.BlockSpec((R, L), lambda i: (i, 0)),
+            pl.BlockSpec((R, L), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((R, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, D), table.dtype),
+        interpret=interpret,
+    )(indices, weights, table)
+    return out[:B]

@@ -1,0 +1,20 @@
+"""Jit'd wrapper for EmbeddingBag."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import embedding_bag_pallas
+from .ref import embedding_bag_ref
+
+
+def embedding_bag(indices, weights, table, *, impl="auto",
+                  bags_per_block=64):
+    if impl == "ref":
+        return embedding_bag_ref(indices, weights, table)
+    interpret = jax.default_backend() != "tpu"
+    return embedding_bag_pallas(indices, weights, table,
+                                bags_per_block=bags_per_block,
+                                interpret=interpret)
+
+
+__all__ = ["embedding_bag", "embedding_bag_pallas", "embedding_bag_ref"]

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for EmbeddingBag (take + masked weighted sum)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(indices: jnp.ndarray, weights: jnp.ndarray,
+                      table: jnp.ndarray) -> jnp.ndarray:
+    ok = indices >= 0
+    rows = jnp.take(table, jnp.where(ok, indices, 0), axis=0)  # (B, L, D)
+    rows = rows * jnp.where(ok, weights, 0.0)[..., None]
+    return rows.sum(axis=1)

@@ -1,0 +1,72 @@
+"""Flash-schedule attention in pure XLA: online softmax over KV chunks.
+
+Same math as the Pallas kernel but expressed with ``lax.scan`` over KV
+blocks, so it lowers on every backend (the dry-run compiles it into the
+production mesh, where the Pallas custom-call path is TPU-only).  Peak
+attention memory drops from O(Sq·Skv) to O(Sq·block_k) — the §Perf lever for
+the memory-dominated LM cells.
+
+``unroll=True`` (used by the dry-run's cost calibration) unrolls the chunk
+loop so HloCostAnalysis counts every block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_chunked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool = True, window: int = 0,
+                      softcap: float = 0.0, sm_scale: float | None = None,
+                      kv_len: int | None = None, block_k: int = 512,
+                      unroll: bool = False) -> jnp.ndarray:
+    """q (B,Hq,Sq,D); k,v (B,Hkv,Skv,D); GQA via Hq % Hkv == 0."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = D ** -0.5
+    if kv_len is None:
+        kv_len = Skv
+    bk = min(block_k, Skv)
+    assert Skv % bk == 0, (Skv, bk)
+    nk = Skv // bk
+
+    qg = q.reshape(B, Hkv, group, Sq, D).astype(jnp.float32)
+    qi = jnp.arange(Sq)[:, None]
+
+    def step(carry, idx):
+        m, l, acc = carry
+        k0 = idx * bk
+        kb = jax.lax.dynamic_slice_in_dim(k, k0, bk, axis=2) \
+            .astype(jnp.float32)
+        vb = jax.lax.dynamic_slice_in_dim(v, k0, bk, axis=2) \
+            .astype(jnp.float32)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kb) * sm_scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        kj = k0 + jnp.arange(bk)[None, :]
+        mask = kj < kv_len
+        if causal:
+            mask &= qi >= kj
+        if window > 0:
+            mask &= (qi - kj) < window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.where(mask[None, None, None],
+                      jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, vb)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, group, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, group, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, group, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  jnp.arange(nk),
+                                  unroll=nk if unroll else 1)
+    out = acc / jnp.where(l > 0, l, 1.0)[..., None]
+    return out.reshape(B, Hq, Sq, D).astype(q.dtype)

@@ -1,0 +1,25 @@
+"""Jit'd public wrapper for flash attention.
+
+Dispatches to the Pallas kernel (compiled on TPU, ``interpret=True`` on CPU)
+or to the jnp oracle (``impl='ref'``).
+"""
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention as _pallas_attention
+from .ref import attention_ref
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    sm_scale=None, kv_len=None, block_q=128, block_k=128,
+                    impl="auto"):
+    if impl == "ref":
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap, sm_scale=sm_scale,
+                             kv_len=kv_len)
+    interpret = jax.default_backend() != "tpu"
+    return _pallas_attention(q, k, v, causal=causal, window=window,
+                             softcap=softcap, sm_scale=sm_scale,
+                             kv_len=kv_len, block_q=block_q, block_k=block_k,
+                             interpret=interpret)

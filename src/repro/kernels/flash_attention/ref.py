@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0, softcap: float = 0.0,
+                  sm_scale: float | None = None,
+                  kv_len: int | None = None) -> jnp.ndarray:
+    """Dense attention with GQA / causal / sliding-window / softcap / kv_len."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = D ** -0.5
+    if kv_len is None:
+        kv_len = Skv
+
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * sm_scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qi = jnp.arange(Sq)[:, None]
+    kj = jnp.arange(Skv)[None, :]
+    mask = kj < kv_len
+    if causal:
+        mask &= qi >= kj
+    if window > 0:
+        mask &= (qi - kj) < window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask[None, None], p, 0.0)
+    denom = p.sum(axis=-1, keepdims=True)
+    p = p / jnp.where(denom > 0, denom, 1.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vv.astype(jnp.float32)).astype(q.dtype)

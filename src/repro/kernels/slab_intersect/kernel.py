@@ -1,0 +1,58 @@
+"""Pallas kernel for the triangle-counting hash probe (paper Alg. 9).
+
+The GPU kernel walks v's slabs and, per lane w, probes u's hash bucket with a
+warp-cooperative chain walk.  The TPU form splits responsibilities:
+
+  * the host materialises, per query (u, w), the candidate slab rows of u's
+    bucket chain (bounded, ``max_chain`` static) — chain walking is pointer
+    chasing, best done once in XLA;
+  * the kernel then does the bandwidth-heavy part: gather the candidate rows
+    (Q_blk, C, 128) into VMEM and reduce lane-equality (the warp ballot) into
+    a per-query hit bit.
+
+Queries are tiled (queries_per_block, C); the key pool stays in ``pl.ANY``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _probe_kernel(w_ref, rows_ref, keys_ref, o_ref):
+    w = w_ref[...]                       # (Q, 1) uint32
+    rows = rows_ref[...]                 # (Q, C) int32; -1 padded
+    ok = rows >= 0
+    slabs = keys_ref[jnp.where(ok, rows, 0)]          # (Q, C, 128)
+    hit = (slabs == w[..., None]) & ok[..., None]
+    o_ref[...] = jnp.any(hit, axis=(1, 2))[:, None].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("queries_per_block", "interpret"))
+def probe_hits_pallas(ws: jnp.ndarray, cand_rows: jnp.ndarray,
+                      keys: jnp.ndarray, *, queries_per_block: int = 256,
+                      interpret: bool = False) -> jnp.ndarray:
+    """ws (Q,) uint32, cand_rows (Q,C) int32, keys (S,128) → (Q,) bool."""
+    Q, C = cand_rows.shape
+    R = min(queries_per_block, Q)
+    pad = (-Q) % R
+    if pad:
+        ws = jnp.pad(ws, (0, pad), constant_values=jnp.uint32(0xFFFFFFFF))
+        cand_rows = jnp.pad(cand_rows, ((0, pad), (0, 0)), constant_values=-1)
+    Qp = ws.shape[0]
+
+    out = pl.pallas_call(
+        _probe_kernel,
+        grid=(Qp // R,),
+        in_specs=[
+            pl.BlockSpec((R, 1), lambda i: (i, 0)),
+            pl.BlockSpec((R, C), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((R, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Qp, 1), jnp.int32),
+        interpret=interpret,
+    )(ws[:, None], cand_rows, keys)
+    return out[:Q, 0].astype(bool)

@@ -1,0 +1,46 @@
+"""Jit'd wrapper for the TC hash-probe: chain materialisation + Pallas probe."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ...core.batch import edge_buckets
+from ...core.hashing import INVALID_SLAB
+from ...core.slab_graph import SlabGraph
+from .kernel import probe_hits_pallas
+from .ref import probe_hits_ref
+
+
+@partial(jax.jit, static_argnames=("max_chain",))
+def materialize_chains(g: SlabGraph, us: jnp.ndarray, ws: jnp.ndarray,
+                       mask: jnp.ndarray, *, max_chain: int) -> jnp.ndarray:
+    """For each (u,w) query, the slab rows of u's bucket chain, -1 padded.
+    Chains longer than ``max_chain`` are truncated (callers size it from the
+    pool's max chain length)."""
+    b = edge_buckets(g, us, ws, mask)
+    cur = jnp.where(mask, b, INVALID_SLAB).astype(jnp.int32)
+
+    def step(cur, _):
+        nxt = jnp.where(cur != INVALID_SLAB,
+                        g.next_slab[jnp.maximum(cur, 0)], INVALID_SLAB)
+        return nxt, cur
+
+    _, rows = jax.lax.scan(step, cur, None, length=max_chain)
+    return jnp.swapaxes(rows, 0, 1)  # (Q, C)
+
+
+def search_edges_kernel(g: SlabGraph, us: jnp.ndarray, ws: jnp.ndarray,
+                        mask: jnp.ndarray, *, max_chain: int = 8,
+                        impl: str = "auto") -> jnp.ndarray:
+    """Drop-in for ``algorithms.triangle.search_edges`` using the kernel."""
+    rows = materialize_chains(g, us, ws, mask, max_chain=max_chain)
+    if impl == "ref":
+        return probe_hits_ref(ws, rows, g.keys) & mask
+    interpret = jax.default_backend() != "tpu"
+    return probe_hits_pallas(ws, rows, g.keys, interpret=interpret) & mask
+
+
+__all__ = ["materialize_chains", "search_edges_kernel", "probe_hits_pallas",
+           "probe_hits_ref"]

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the slab_intersect probe."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def probe_hits_ref(ws: jnp.ndarray, cand_rows: jnp.ndarray,
+                   keys: jnp.ndarray) -> jnp.ndarray:
+    ok = cand_rows >= 0                                   # (Q, C)
+    slabs = keys[jnp.where(ok, cand_rows, 0)]             # (Q, C, 128)
+    hit = (slabs == ws[:, None, None]) & ok[..., None]
+    return jnp.any(hit, axis=(1, 2))

@@ -1,0 +1,63 @@
+"""Pallas kernel for the PageRank slab-pool sweep (paper Alg. 14).
+
+Per slab row: gather ``contrib[u]`` for each of the 128 lane keys, mask
+invalid lanes (EMPTY/TOMBSTONE/unallocated), reduce across lanes.  This is the
+paper's Compute kernel: a warp reads one slab coalesced and accumulates
+``VertexContribution[u]``; the lane-axis sum is ``warpreduxsum``.
+
+Tiling: the key pool is blocked (rows_per_block, 128) into VMEM; the contrib
+vector stays un-blocked (``pl.ANY``) and is gathered per lane — the TPU analogue
+of the GPU's L2-served random reads.  Output is per-slab partial sums; the
+per-vertex ``segment_sum`` runs outside (it is a plain VPU reduction over the
+already-dense slab→vertex map).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pr_kernel(keys_ref, owner_ref, contrib_ref, o_ref, *, n_vertices: int):
+    keys = keys_ref[...]                       # (R, 128) uint32
+    owner = owner_ref[...]                     # (R, 1) int32
+    valid = (keys < jnp.uint32(n_vertices)) & (owner >= 0)
+    idx = jnp.where(valid, keys, jnp.uint32(0)).astype(jnp.int32)
+    vals = contrib_ref[idx]                    # gather (R, 128)
+    vals = jnp.where(valid, vals, 0.0)
+    o_ref[...] = vals.sum(axis=1, keepdims=True)  # (R, 1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_vertices", "rows_per_block",
+                                    "interpret"))
+def slab_contrib_sums_pallas(keys: jnp.ndarray, slab_vertex: jnp.ndarray,
+                             contrib: jnp.ndarray, *, n_vertices: int,
+                             rows_per_block: int = 256,
+                             interpret: bool = False) -> jnp.ndarray:
+    """keys (S,128) uint32, slab_vertex (S,) int32, contrib (V,) f32 → (S,) f32."""
+    S = keys.shape[0]
+    R = min(rows_per_block, S)
+    pad = (-S) % R
+    if pad:
+        keys = jnp.pad(keys, ((0, pad), (0, 0)),
+                       constant_values=jnp.uint32(0xFFFFFFFE))
+        slab_vertex = jnp.pad(slab_vertex, (0, pad), constant_values=-1)
+    Sp = keys.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(_pr_kernel, n_vertices=n_vertices),
+        grid=(Sp // R,),
+        in_specs=[
+            pl.BlockSpec((R, keys.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((R, 1), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((R, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Sp, 1), jnp.float32),
+        interpret=interpret,
+    )(keys, slab_vertex[:, None], contrib)
+    return out[:S, 0]

@@ -1,0 +1,32 @@
+"""Jit'd wrapper for the slab_pagerank pool sweep.
+
+``pagerank(..., contrib_impl="pallas")`` routes through here; signature is
+adapted to the algorithm layer's (keys, valid, contrib) convention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import slab_contrib_sums_pallas
+from .ref import slab_contrib_sums_ref
+
+
+def slab_contrib_sums(keys: jnp.ndarray, valid: jnp.ndarray,
+                      contrib: jnp.ndarray) -> jnp.ndarray:
+    """(S,128) keys + (S,128) valid mask + (V,) contrib → (S,) partials.
+
+    The Pallas kernel re-derives the lane mask from sentinels; a row is
+    treated as allocated iff any lane of ``valid`` is set, matching the
+    algorithm layer's PoolView.
+    """
+    n_vertices = contrib.shape[0]
+    owner = jnp.where(jnp.any(valid, axis=1), 0, -1).astype(jnp.int32)
+    interpret = jax.default_backend() != "tpu"
+    return slab_contrib_sums_pallas(keys, owner, contrib,
+                                    n_vertices=n_vertices,
+                                    interpret=interpret)
+
+
+__all__ = ["slab_contrib_sums", "slab_contrib_sums_pallas",
+           "slab_contrib_sums_ref"]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the slab_pagerank pool sweep."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def slab_contrib_sums_ref(keys: jnp.ndarray, slab_vertex: jnp.ndarray,
+                          contrib: jnp.ndarray, *,
+                          n_vertices: int) -> jnp.ndarray:
+    valid = (keys < jnp.uint32(n_vertices)) & (slab_vertex[:, None] >= 0)
+    idx = jnp.where(valid, keys, jnp.uint32(0)).astype(jnp.int32)
+    vals = jnp.where(valid, contrib[idx], 0.0)
+    return vals.sum(axis=1)

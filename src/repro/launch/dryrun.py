@@ -1,0 +1,340 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") \
+    + " --xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape)
+cell on the production meshes, record memory/cost/collective analysis.
+
+MUST be run as its own process (the XLA flag above is set before any other
+import touches jax).  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh pod|multipod|both]
+
+Outputs one JSON per cell under experiments/dryrun/ consumed by
+launch/roofline.py and EXPERIMENTS.md.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum output-operand bytes of every collective in the optimized HLO."""
+    stats = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    # lines look like:  %all-gather.7 = bf16[16,4096,5120]{2,1,0} all-gather(
+    pat = re.compile(
+        r"=\s+(?:\()?(\w+)\[([\d,]*)\][^=]*?\b(" + "|".join(_COLLECTIVES)
+        + r")\(")
+    # tuple-result collectives:  = (f32[...], f32[...]) all-reduce(
+    tuple_pat = re.compile(
+        r"=\s+\(([^)]+)\)\s+(" + "|".join(_COLLECTIVES) + r")\(")
+    for line in hlo_text.splitlines():
+        m = pat.search(line)
+        if m:
+            dtype, dims, op = m.groups()
+            stats[op]["count"] += 1
+            stats[op]["bytes"] += _shape_bytes(dtype, dims)
+            continue
+        m = tuple_pat.search(line)
+        if m:
+            parts, op = m.groups()
+            stats[op]["count"] += 1
+            for p in re.finditer(r"(\w+)\[([\d,]*)\]", parts):
+                stats[op]["bytes"] += _shape_bytes(*p.groups())
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    return stats
+
+
+def _to_shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+
+def _compile_once(mesh, arch, shape_name, attn_impl, rule_overrides,
+                  **cell_kw):
+    """Lower+compile one variant; return (compiled, lowered) artefacts."""
+    from ..distributed.sharding import sharding_rules
+    from ..launch.steps import make_cell
+
+    with sharding_rules(mesh, rule_overrides):
+        step, args, spec_trees = make_cell(arch, shape_name, mesh,
+                                           attn_impl=attn_impl, **cell_kw)
+        in_shardings = tuple(_to_shardings(mesh, s) for s in spec_trees)
+        jitted = jax.jit(step, in_shardings=in_shardings)
+        with mesh:
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+    return compiled
+
+
+def _metrics(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    coll = collective_stats(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "collective_bytes": float(coll["total_bytes"])}
+
+
+OPT_BUNDLES = ("moe_local", "chunked_attn", "gnn_fshard", "eq_bf16",
+               "mind_localneg", "bf16_gather", "mb1", "mb2", "mb4",
+               "eq_chunk", "mind_bf16", "remat_dots", "eq_trunc")
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             donate: bool = True, overrides=None, attn_impl: str = "ref",
+             verbose: bool = True, calibrate: bool = True,
+             opts=()) -> dict:
+    from ..configs import get_arch
+    from ..distributed.sharding import sharding_rules
+    from ..launch.mesh import make_production_mesh
+    from ..launch.steps import make_cell
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "mesh_shape": list(mesh.devices.shape), "ok": False}
+    m = get_arch(arch)
+    skip = m.SKIP.get(shape_name)
+    if skip:
+        rec.update(ok=True, skipped=skip)
+        return rec
+
+    # big-LM posture: scan-carry activations sharded over 'model' too (SP
+    # between layers) — divides the dominant saved-activation term by the TP
+    # degree at the cost of per-layer norm all-gathers.
+    rule_overrides = {}
+    from jax.sharding import PartitionSpec as P
+    from ..distributed.sharding import dp_axes
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    if m.FAMILY == "lm":
+        rule_overrides["act_btd"] = P(dp, None, "model")
+
+    # §Perf optimization bundles (baseline = none)
+    cfg_overrides = {}
+    if "moe_local" in opts:
+        cfg_overrides["dispatch_groups"] = dp_size
+    if "chunked_attn" in opts:
+        attn_impl = "chunked"
+    if "gnn_fshard" in opts:
+        rule_overrides["gnn_h"] = P(dp, "model", None)
+    if "eq_bf16" in opts:
+        import jax.numpy as jnp
+        cfg_overrides["compute_dtype"] = jnp.bfloat16
+    if "mind_localneg" in opts:
+        cfg_overrides["neg_groups"] = dp_size
+    if "bf16_gather" in opts:
+        cfg_overrides["cast_params_once"] = True
+    if "mind_bf16" in opts:
+        cfg_overrides["routing_dtype"] = "bf16"
+    if "remat_dots" in opts:
+        cfg_overrides["remat_policy"] = "dots"
+    if "eq_trunc" in opts:
+        cfg_overrides["trunc_rotation"] = True
+    eq_chunk = "eq_chunk" in opts
+    lm_micro_main = None
+    for o in opts:
+        if o.startswith("mb"):
+            lm_micro_main = int(o[2:])
+    rec["opts"] = sorted(opts)
+
+    if eq_chunk:
+        # pad E up to a whole number of 2M-edge blocks so the main compile's
+        # block size matches the calibration compiles exactly
+        blk = 2 * 1024 * 1024
+        K = max(1, -(-m.SHAPES[shape_name].get("n_edges", 0) // blk))
+        overrides = dict(overrides or {})
+        overrides["n_edges"] = K * blk
+        cfg_overrides["edge_chunks"] = K
+    with sharding_rules(mesh, rule_overrides):
+        step, args, spec_trees = make_cell(arch, shape_name, mesh,
+                                           attn_impl=attn_impl,
+                                           overrides=overrides,
+                                           cfg_overrides=cfg_overrides,
+                                           lm_micro=lm_micro_main)
+        in_shardings = tuple(_to_shardings(mesh, s) for s in spec_trees)
+        jitted = jax.jit(step, in_shardings=in_shardings)
+        with mesh:
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+
+    # ---- loop-aware cost calibration (LM: layer scan counted once by
+    # HloCostAnalysis → reconstruct per-layer Δ from L=1 vs L=2 compiles;
+    # GNN/recsys models are python-unrolled so their costs are exact) -------
+    calibrated = None
+    single = None
+    if calibrate and m.FAMILY == "lm":
+        cfg_full = m.full_config()
+        L = cfg_full.n_layers
+        # alternating (gemma2) stacks scan in PAIRS → calibrate at 2 vs 4
+        alt = bool(getattr(cfg_full, "local_global_alternate", False)
+                   and cfg_full.sliding_window)
+        la, lb = (2, 4) if alt else (1, 2)
+        c1 = _metrics(_compile_once(mesh, arch, shape_name, attn_impl,
+                                    rule_overrides, lm_layers=la, lm_micro=1,
+                                    cfg_overrides=cfg_overrides))
+        c2 = _metrics(_compile_once(mesh, arch, shape_name, attn_impl,
+                                    rule_overrides, lm_layers=lb, lm_micro=1,
+                                    cfg_overrides=cfg_overrides))
+        calibrated = {k: c1[k] + (L - la) / (lb - la) * max(c2[k] - c1[k],
+                                                            0.0)
+                      for k in c1}
+        calibrated["per_layer_flops"] = \
+            max(c2["flops"] - c1["flops"], 0.0) / (lb - la)
+    elif calibrate and m.FAMILY in ("gnn", "recsys"):
+        # python-unrolled models: costs are exact; the single-device compile
+        # gives the no-SPMD reference ("useful" FLOPs — everything above it
+        # is partitioning redundancy/padding)
+        from ..launch.steps import make_cell as _mk
+        step1, args1, _ = _mk(arch, shape_name, None, attn_impl=attn_impl,
+                              overrides=overrides)  # single-device reference
+
+        comp1 = jax.jit(step1).lower(*args1).compile()
+        single = _metrics(comp1)
+        if eq_chunk and "n_edges" in m.SHAPES[shape_name]:
+            # edge-chunk scan body counted once → two-point calibration over
+            # chunk count at FIXED block size (same trick as the LM layers)
+            E = m.SHAPES[shape_name]["n_edges"]
+            blk = cfg_overrides.get("_eq_block", 2 * 1024 * 1024)
+            K = -(-E // blk)
+            co = {k: v for k, v in cfg_overrides.items()
+                  if not k.startswith("_")}
+            c1 = _metrics(_compile_once(
+                mesh, arch, shape_name, attn_impl, rule_overrides,
+                overrides={"n_edges": blk},
+                cfg_overrides=co | {"edge_chunks": 1}))
+            c2 = _metrics(_compile_once(
+                mesh, arch, shape_name, attn_impl, rule_overrides,
+                overrides={"n_edges": 2 * blk},
+                cfg_overrides=co | {"edge_chunks": 2}))
+            calibrated = {k: c1[k] + (K - 1) * max(c2[k] - c1[k], 0.0)
+                          for k in c1}
+
+    rec.update(
+        ok=True,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        cost_calibrated=calibrated,
+        cost_single_device=single,
+        memory={
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "code_bytes": int(getattr(mem, "generated_code_size_in_bytes",
+                                      0)),
+        },
+        cost={
+            "flops": float(cost.get("flops", 0.0)),
+            "transcendentals": float(cost.get("transcendentals", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        collectives=coll,
+        n_devices=int(mesh.devices.size),
+    )
+    if verbose:
+        print(f"[{arch} × {shape_name} × {mesh_kind}] "
+              f"lower {rec['lower_s']}s compile {rec['compile_s']}s")
+        print(f"  memory/device: args {rec['memory']['argument_bytes']/2**30:.2f} GiB, "
+              f"temp {rec['memory']['temp_bytes']/2**30:.2f} GiB, "
+              f"output {rec['memory']['output_bytes']/2**30:.2f} GiB")
+        print(f"  cost: flops {rec['cost']['flops']:.3e}, "
+              f"bytes {rec['cost']['bytes_accessed']:.3e}")
+        print(f"  collectives: " + ", ".join(
+            f"{k}:{v['count']}({v['bytes']/2**20:.1f}MiB)"
+            for k, v in coll.items()
+            if isinstance(v, dict) and v["count"]))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--attn-impl", default="ref",
+                    choices=["ref", "pallas"],
+                    help="attention used inside LM steps; 'ref' lowers to "
+                         "XLA fused attention (the TPU default for "
+                         "dry-runs), 'pallas' lowers the hand kernel")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--opt", default="",
+                    help="comma list of optimization bundles: "
+                         + ",".join(OPT_BUNDLES))
+    ap.add_argument("--tag", default="",
+                    help="suffix for output json (perf iterations)")
+    args = ap.parse_args()
+    opts = tuple(o for o in args.opt.split(",") if o)
+
+    from ..configs import all_cells
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s) for a, s, _ in all_cells(include_skipped=True)]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    out_dir = Path(args.out) if args.out else OUT_DIR
+    out_dir.mkdir(parents=True, exist_ok=True)
+    failures = []
+    for arch, shape in cells:
+        for mk in meshes:
+            tag = f"{arch.replace('/', '_')}__{shape}__{mk}"
+            if args.tag:
+                tag += f"__{args.tag}"
+            try:
+                rec = run_cell(arch, shape, mk, attn_impl=args.attn_impl,
+                               opts=opts)
+            except Exception as e:
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape, "mesh": mk,
+                       "ok": False, "error": f"{type(e).__name__}: {e}"}
+                failures.append(tag)
+            (out_dir / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+    if failures:
+        print("FAILED CELLS:", failures)
+        sys.exit(1)
+    print(f"all {len(cells) * len(meshes)} cells OK → {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

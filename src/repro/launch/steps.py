@@ -1,0 +1,426 @@
+"""Step builders + input specs + shardings for every (arch × shape) cell.
+
+One place defines, per family:
+  * the jit-able step function (train: fwd+bwd+AdamW; serve: prefill/decode/
+    scoring),
+  * ``input_specs`` — ShapeDtypeStruct stand-ins for every input (weak-type
+    correct, shardable, no allocation),
+  * the PartitionSpec trees for params / optimizer state / inputs.
+
+Used by launch/dryrun.py (lower+compile on the production meshes) and by the
+per-arch smoke tests (reduced configs, real values, 1 CPU device).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import get_arch
+from ..configs.common import sampled_subgraph_size
+from ..distributed.sharding import dp_axes
+from ..models import transformer as tfm
+from ..models.gnn import equiformer_v2 as eq2
+from ..models.gnn import mace as mace_m
+from ..models.gnn import nequip as nequip_m
+from ..models.gnn import pna as pna_m
+from ..models.gnn.common import GraphBatch
+from ..models.recsys import mind as mind_m
+from ..train import optimizer as opt
+
+ADAMW = opt.AdamWConfig()
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+# ===========================================================================
+# LM family
+# ===========================================================================
+
+def lm_param_specs(cfg: tfm.LMConfig, mesh: Optional[Mesh] = None) -> Dict:
+    """PartitionSpec tree matching ``tfm.init_params``.
+
+    2D sharding: TP over 'model' (heads / d_ff / experts / vocab) × FSDP over
+    the batch-like axes (d_model dim) — params AND optimizer state are fully
+    sharded (ZeRO-3 style weight gathering, the MaxText default posture), so
+    per-device bytes scale with the whole mesh, not just the TP degree.
+    All divisibilities hold for the assigned pool (D, F, V, H·hd are
+    multiples of 512).
+    """
+    dp = dp_axes(mesh) if mesh is not None else ("data",)
+    layers = {
+        "wq": P(None, dp, "model"),
+        "wk": P(None, dp, "model"),
+        "wv": P(None, dp, "model"),
+        "wo": P(None, "model", dp),
+        "ln_attn": P(None, None),
+        "ln_mlp": P(None, None),
+    }
+    if cfg.qkv_bias:
+        layers |= {"bq": P(None, "model"), "bk": P(None, "model"),
+                   "bv": P(None, "model")}
+    if cfg.qk_norm:
+        layers |= {"q_norm": P(None, None), "k_norm": P(None, None)}
+    if cfg.is_moe:
+        layers |= {
+            "router": P(None, None, None),
+            "w_gate": P(None, "model", dp, None),
+            "w_up": P(None, "model", dp, None),
+            "w_down": P(None, "model", None, dp),
+        }
+    else:
+        layers |= {
+            "w_gate": P(None, dp, "model"),
+            "w_up": P(None, dp, "model"),
+            "w_down": P(None, "model", dp),
+        }
+    specs = {"embed": P("model", dp), "final_norm": P(None),
+             "layers": layers}
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(dp, "model")
+    return specs
+
+
+def lm_opt_specs(param_specs) -> opt.AdamWState:
+    return opt.AdamWState(m=param_specs,
+                          v=jax.tree.map(lambda s: s, param_specs),
+                          count=P())
+
+
+def build_lm_train_step(cfg: tfm.LMConfig, *, n_microbatches: int = 1,
+                        attn_impl: str = "ref") -> Callable:
+    def train_step(params, opt_state, tokens, labels):
+        if n_microbatches == 1:
+            loss, grads = jax.value_and_grad(tfm.loss_fn)(
+                params, tokens, labels, cfg, attn_impl=attn_impl)
+        else:
+            B = tokens.shape[0]
+            mb = B // n_microbatches
+            tok_mb = tokens.reshape(n_microbatches, mb, -1)
+            lab_mb = labels.reshape(n_microbatches, mb, -1)
+
+            def micro(carry, xs):
+                gsum, lsum = carry
+                t, l = xs
+                loss, g = jax.value_and_grad(tfm.loss_fn)(
+                    params, t, l, cfg, attn_impl=attn_impl)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), _ = jax.lax.scan(
+                micro, (g0, jnp.asarray(0.0, jnp.float32)), (tok_mb, lab_mb))
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            loss = loss / n_microbatches
+        new_params, new_opt = opt.update(ADAMW, grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    return train_step
+
+
+def build_lm_prefill_step(cfg: tfm.LMConfig, attn_impl: str = "ref"):
+    def prefill_step(params, tokens):
+        return tfm.prefill(params, tokens, cfg, attn_impl=attn_impl)
+    return prefill_step
+
+
+def build_lm_decode_step(cfg: tfm.LMConfig):
+    def serve_step(params, cache, token, pos):
+        return tfm.decode_step(params, cache, token, pos, cfg)
+    return serve_step
+
+
+def lm_cell(cfg: tfm.LMConfig, shape: Dict, mesh: Optional[Mesh], *,
+            n_microbatches: int = 1, attn_impl: str = "ref"):
+    """Returns (step_fn, arg_specs, in_shardings, static_info)."""
+    kind = shape["kind"]
+    S, B = shape["seq_len"], shape["global_batch"]
+    dp = dp_axes(mesh) if mesh is not None else ("data",)
+    pspecs = lm_param_specs(cfg, mesh)
+    params_shape = jax.eval_shape(partial(tfm.init_params, cfg),
+                                  jax.random.PRNGKey(0))
+
+    if kind == "train":
+        step = build_lm_train_step(cfg, n_microbatches=n_microbatches,
+                                   attn_impl=attn_impl)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        args = (params_shape, opt_shape,
+                sds((B, S), jnp.int32), sds((B, S), jnp.int32))
+        shardings = (pspecs, lm_opt_specs(pspecs),
+                     P(dp, None), P(dp, None))
+        return step, args, shardings
+
+    if kind == "prefill":
+        step = build_lm_prefill_step(cfg, attn_impl)
+        args = (params_shape, sds((B, S), jnp.int32))
+        return step, args, (pspecs, P(dp, None))
+
+    # decode
+    step = build_lm_decode_step(cfg)
+    cache_shape = jax.eval_shape(
+        partial(tfm.init_cache, cfg, B, S), )
+    if B == 1:
+        cache_spec = P(None, None, None, dp + ("model",), None)
+    else:
+        cache_spec = P(None, dp, None, "model", None)
+    cspecs = {k: cache_spec for k in cache_shape}
+    args = (params_shape, cache_shape, sds((B,), jnp.int32),
+            sds((), jnp.int32))
+    tok_spec = P(dp) if B > 1 else P(None)
+    return step, args, (pspecs, cspecs, tok_spec, P())
+
+
+# ===========================================================================
+# GNN family
+# ===========================================================================
+
+_GNN = {
+    "mace": (mace_m, "geometric"),
+    "nequip": (nequip_m, "geometric"),
+    "pna": (pna_m, "feature"),
+    "equiformer-v2": (eq2, "geometric"),
+}
+
+
+def gnn_batch_specs(n_nodes: int, n_edges: int, *, style: str,
+                    d_feat: int = 0, n_graphs: int = 1) -> GraphBatch:
+    return GraphBatch(
+        positions=(sds((n_nodes, 3), jnp.float32)
+                   if style == "geometric" else None),
+        node_feat=(sds((n_nodes, d_feat), jnp.float32)
+                   if style == "feature" else None),
+        species=(sds((n_nodes,), jnp.int32)
+                 if style == "geometric" else None),
+        senders=sds((n_edges,), jnp.int32),
+        receivers=sds((n_edges,), jnp.int32),
+        edge_mask=sds((n_edges,), jnp.bool_),
+        node_mask=sds((n_nodes,), jnp.bool_),
+        graph_ids=sds((n_nodes,), jnp.int32),
+        n_graphs=n_graphs,
+    )
+
+
+def gnn_batch_shardings(mesh: Optional[Mesh], batch: GraphBatch):
+    dp = dp_axes(mesh) if mesh is not None else ("data",)
+    node = P(dp + ("model",))
+    edge = P(dp + ("model",))
+    return GraphBatch(
+        positions=None if batch.positions is None else P(dp + ("model",),
+                                                         None),
+        node_feat=None if batch.node_feat is None else P(dp + ("model",),
+                                                         None),
+        species=None if batch.species is None else node,
+        senders=edge, receivers=edge, edge_mask=edge,
+        node_mask=node, graph_ids=node, n_graphs=batch.n_graphs)
+
+
+def build_gnn_train_step(module, cfg, style: str):
+    if style == "geometric":
+        def loss_fn(params, batch, targets):
+            return module.energy_loss(params, batch, targets, cfg)
+    else:
+        def loss_fn(params, batch, targets):
+            return module.node_xent_loss(params, batch, targets, cfg)
+
+    def train_step(params, opt_state, batch, targets):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch, targets)
+        new_params, new_opt = opt.update(ADAMW, grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    return train_step
+
+
+def _pad_to(n: int, mult: int = 512) -> int:
+    """Pad-to-shard: jit input shardings need divisibility; models carry
+    node/edge masks, so padding is semantically free."""
+    return -(-n // mult) * mult
+
+
+def gnn_cell(arch_id: str, cfg, shape: Dict, mesh: Optional[Mesh]):
+    module, style = _GNN[arch_id]
+    kind = shape["kind"]
+    if kind == "train":
+        n_nodes, n_edges = shape["n_nodes"], shape["n_edges"]
+        n_graphs = 1
+    elif kind == "train_sampled":
+        n_nodes, n_edges = sampled_subgraph_size(shape)
+        n_graphs = 1
+    else:  # train_batched (molecule)
+        n_nodes = shape["n_nodes"] * shape["batch"]
+        n_edges = shape["n_edges"] * shape["batch"]
+        n_graphs = shape["batch"]
+    if mesh is not None:
+        n_nodes = _pad_to(n_nodes)
+        n_edges = _pad_to(n_edges)
+
+    d_feat = shape.get("d_feat") or getattr(cfg, "d_in", 0)
+    batch = gnn_batch_specs(n_nodes, n_edges, style=style,
+                            d_feat=d_feat, n_graphs=n_graphs)
+    params_shape = jax.eval_shape(partial(module.init_params, cfg),
+                                  jax.random.PRNGKey(0))
+    opt_shape = jax.eval_shape(opt.init, params_shape)
+    step = build_gnn_train_step(module, cfg, style)
+    if style == "geometric":
+        targets = sds((n_graphs,), jnp.float32)
+        t_spec = P(dp_axes(mesh)) if (mesh and n_graphs > 1) else P(None)
+    else:
+        targets = sds((n_nodes,), jnp.int32)
+        t_spec = P(dp_axes(mesh) + ("model",)) if mesh else P(None)
+    pspec = jax.tree.map(lambda _: P(), params_shape)   # replicated params
+    ospec = jax.tree.map(lambda _: P(), opt_shape)
+    args = (params_shape, opt_shape, batch, targets)
+    shardings = (pspec, ospec, gnn_batch_shardings(mesh, batch), t_spec)
+    return step, args, shardings
+
+
+# ===========================================================================
+# RecSys family (MIND)
+# ===========================================================================
+
+def mind_cell(cfg: mind_m.MINDConfig, shape: Dict, mesh: Optional[Mesh]):
+    kind = shape["kind"]
+    B = shape["batch"]
+    L = cfg.hist_len
+    dp = dp_axes(mesh) if mesh is not None else ("data",)
+    params_shape = jax.eval_shape(partial(mind_m.init_params, cfg),
+                                  jax.random.PRNGKey(0))
+    pspec = {"item_embed": P(dp + ("model",), None), "S": P()}
+    b_spec = P(dp) if B > 1 else P(None)
+
+    if kind == "train":
+        def step(params, opt_state, hist, mask, target):
+            loss, grads = jax.value_and_grad(mind_m.train_loss)(
+                params, hist, mask, target, cfg)
+            new_params, new_opt = opt.update(ADAMW, grads, opt_state, params)
+            return new_params, new_opt, loss
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        ospec = opt.AdamWState(m=pspec, v=dict(pspec), count=P())
+        args = (params_shape, opt_shape, sds((B, L), jnp.int32),
+                sds((B, L), jnp.float32), sds((B,), jnp.int32))
+        return step, args, (pspec, ospec, P(dp, None), P(dp, None), b_spec)
+
+    if kind == "serve":
+        Nc = shape["n_candidates"]
+
+        def step(params, hist, mask, candidates):
+            return mind_m.serve_scores(params, hist, mask, candidates, cfg)
+        args = (params_shape, sds((B, L), jnp.int32),
+                sds((B, L), jnp.float32), sds((Nc,), jnp.int32))
+        h_spec = P(dp, None) if B > 1 else P(None, None)
+        return step, args, (pspec, h_spec, h_spec, P(None))
+
+    # retrieval: 1 query vs 10^6 candidate embeddings
+    Nc = _pad_to(shape["n_candidates"]) if mesh is not None \
+        else shape["n_candidates"]
+
+    def step(params, hist, mask, cand_embed):
+        return mind_m.retrieval_scores(params, hist, mask, cand_embed, cfg)
+    args = (params_shape, sds((B, L), jnp.int32), sds((B, L), jnp.float32),
+            sds((Nc, cfg.embed_dim), jnp.float32))
+    return step, args, (pspec, P(None, None), P(None, None),
+                        P(dp + ("model",), None))
+
+
+# ===========================================================================
+# meerkat-graph family — the paper's technique, vertex-sharded on the mesh
+# ===========================================================================
+
+def graph_cell(cfg: Dict, shape: Dict, mesh: Optional[Mesh]):
+    """One shard per device: batched update routing (all-to-all pattern) or
+    distributed incremental PageRank (per-superstep contrib reassembly)."""
+    from ..distributed import sharded_graph as SGR
+
+    n_shards = int(mesh.devices.size) if mesh is not None else 4
+    V = shape["n_vertices"]
+    cap_shard = max(64, shape["capacity_slabs"] // n_shards)
+    sg_shape = jax.eval_shape(
+        lambda: SGR.shard_empty(V, n_shards,
+                                capacity_slabs_per_shard=cap_shard))
+    axes = mesh.axis_names if mesh is not None else ("data",)
+    shard_spec_of = lambda x: P(*((axes,) + (None,) * (x.ndim - 1)))
+    g_specs = jax.tree.map(
+        lambda x: shard_spec_of(x) if x.ndim >= 1 else P(), sg_shape.graphs)
+    sg_specs = SGR.ShardedSlabGraph(graphs=g_specs, n_shards=n_shards,
+                                    n_vertices_global=V)
+
+    if shape["kind"] == "graph_update":
+        B = shape["batch"]
+        cap = max(256, B // max(1, n_shards // 8))
+
+        def step(sg, src, dst):
+            return SGR.insert_edges_sharded(sg, src, dst, cap=cap)
+        args = (sg_shape, sds((B,), jnp.uint32), sds((B,), jnp.uint32))
+        return step, args, (sg_specs, P(None), P(None))
+
+    # graph_pagerank: distributed incremental PR (warm start arg)
+    def step(sg, out_degree, prev_pr):
+        return SGR.pagerank_sharded(sg, out_degree, init_pr=prev_pr,
+                                    max_iter=20)
+    args = (sg_shape, sds((V,), jnp.int32), sds((V,), jnp.float32))
+    return step, args, (sg_specs, P(None), P(None))
+
+
+# ===========================================================================
+# entry point
+# ===========================================================================
+
+#: per-(arch, shape) microbatch counts (memory lever; §Perf iterates these)
+MICROBATCH = {
+    ("qwen1.5-32b", "train_4k"): 4,
+    ("gemma2-9b", "train_4k"): 4,
+    ("gemma-2b", "train_4k"): 2,
+    # MoE: the global sort-based dispatch buffers scale with tokens/micro —
+    # deeper accumulation keeps the transient gathers inside HBM
+    ("phi3.5-moe-42b-a6.6b", "train_4k"): 8,
+    ("qwen3-moe-30b-a3b", "train_4k"): 8,
+}
+
+
+def make_cell(arch_id: str, shape_name: str, mesh: Optional[Mesh] = None, *,
+              smoke: bool = False, attn_impl: str = "ref",
+              overrides: Optional[Dict] = None,
+              cfg_overrides: Optional[Dict] = None,
+              lm_layers: Optional[int] = None,
+              lm_micro: Optional[int] = None):
+    """(step_fn, arg_specs, in_sharding_spec_trees) for one grid cell.
+
+    ``lm_layers`` / ``lm_micro`` override layer count / microbatching — used
+    by the dry-run's cost calibration (XLA's HloCostAnalysis counts loop
+    bodies once, so per-layer costs are reconstructed from L=1 vs L=2
+    compiles).
+    """
+    m = get_arch(arch_id)
+    shape = dict(m.SHAPES[shape_name])
+    if overrides:
+        shape.update(overrides)
+    cfg = m.smoke_config() if smoke else m.full_config()
+    if cfg_overrides and dataclasses.is_dataclass(cfg):
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    if m.FAMILY == "lm":
+        if lm_layers is not None:
+            # calibration variant: fully unrolled so HloCostAnalysis counts
+            # every layer (a length-2 scan body is otherwise counted once)
+            cfg = dataclasses.replace(cfg, n_layers=lm_layers,
+                                      scan_unroll=lm_layers)
+        nmb = MICROBATCH.get((arch_id, shape_name), 1) if not smoke else 1
+        if lm_micro is not None:
+            nmb = lm_micro
+        return lm_cell(cfg, shape, mesh, n_microbatches=nmb,
+                       attn_impl=attn_impl)
+    if m.FAMILY == "gnn":
+        if arch_id == "pna" and not smoke:
+            cfg = m.full_config(d_in=shape.get("d_feat", 100) or 100)
+        return gnn_cell(arch_id, cfg, shape, mesh)
+    if m.FAMILY == "recsys":
+        return mind_cell(cfg, shape, mesh)
+    if m.FAMILY == "graph":
+        return graph_cell(cfg, shape, mesh)
+    raise ValueError(f"family {m.FAMILY} has no generic cell builder")

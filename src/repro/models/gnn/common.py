@@ -1,0 +1,183 @@
+"""Shared GNN substrate: graph batches, radial bases, segment message passing.
+
+JAX sparse is BCOO-only → message passing is implemented over an explicit
+edge-index with ``jax.ops.segment_sum`` / ``segment_max`` (kernel_taxonomy
+§GNN).  Graphs come either from static arrays or from a live SlabGraph
+snapshot (``edges_from_slab``) — the Meerkat substrate is the dynamic source
+of GNN topology (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["positions", "node_feat", "species", "senders",
+                      "receivers", "edge_mask", "node_mask", "graph_ids"],
+         meta_fields=["n_graphs"])
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    """Padded, fixed-shape graph batch.
+
+    senders/receivers: (E,) int32 (message j→i uses senders=j receivers=i);
+    padded edges carry edge_mask=False and point at node 0.
+    graph_ids: (N,) int32 segment ids for batched small graphs (molecule
+    shape); 0 everywhere for single graphs.
+    """
+    positions: Optional[jnp.ndarray]   # (N, 3) or None
+    node_feat: Optional[jnp.ndarray]   # (N, F) or None
+    species: Optional[jnp.ndarray]     # (N,) int32 or None
+    senders: jnp.ndarray               # (E,)
+    receivers: jnp.ndarray             # (E,)
+    edge_mask: jnp.ndarray             # (E,) bool
+    node_mask: jnp.ndarray             # (N,) bool
+    graph_ids: jnp.ndarray             # (N,) int32
+    n_graphs: int
+
+    @property
+    def n_nodes(self) -> int:
+        return self.node_mask.shape[0]
+
+    @property
+    def n_edges(self) -> int:
+        return self.edge_mask.shape[0]
+
+
+def edges_from_slab(g, *, max_edges: int):
+    """Dynamic topology: senders/receivers straight out of the slab pool
+    (one CSR snapshot).  Keeps the GNNs running on the mutating graph."""
+    from ...core.worklist import pool_edges
+    view = pool_edges(g)
+    src = view.src.reshape(-1)
+    dst = view.dst.reshape(-1)
+    ok = view.valid.reshape(-1)
+    m = ok.astype(jnp.int32)
+    pos = jnp.cumsum(m) - m
+    idx = jnp.where(ok & (pos < max_edges), pos, max_edges)
+    senders = jnp.zeros((max_edges,), jnp.int32).at[idx].set(
+        src.astype(jnp.int32), mode="drop")
+    receivers = jnp.zeros((max_edges,), jnp.int32).at[idx].set(
+        dst.astype(jnp.int32), mode="drop")
+    n = jnp.minimum(jnp.sum(m), max_edges)
+    emask = jnp.arange(max_edges) < n
+    return senders, receivers, emask
+
+
+# ---------------------------------------------------------------------------
+# radial bases
+# ---------------------------------------------------------------------------
+
+def bessel_rbf(r: jnp.ndarray, n_rbf: int, cutoff: float) -> jnp.ndarray:
+    """(E,) → (E, n_rbf): sin(nπr/c)/r basis (NequIP/MACE standard)."""
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    rc = jnp.clip(r, 1e-5, cutoff)
+    return (math.sqrt(2.0 / cutoff) * jnp.sin(n * math.pi * rc[:, None]
+                                              / cutoff) / rc[:, None])
+
+
+def poly_cutoff(r: jnp.ndarray, cutoff: float, p: int = 6) -> jnp.ndarray:
+    """Smooth polynomial envelope, 1 at 0 → 0 at cutoff (DimeNet form)."""
+    x = jnp.clip(r / cutoff, 0.0, 1.0)
+    a = -(p + 1) * (p + 2) / 2.0
+    b = p * (p + 2)
+    c = -p * (p + 1) / 2.0
+    return 1.0 + a * x ** p + b * x ** (p + 1) + c * x ** (p + 2)
+
+
+def gaussian_rbf(r: jnp.ndarray, n_rbf: int, cutoff: float) -> jnp.ndarray:
+    mu = jnp.linspace(0.0, cutoff, n_rbf)
+    gamma = n_rbf / cutoff
+    return jnp.exp(-gamma * (r[:, None] - mu) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# segment helpers
+# ---------------------------------------------------------------------------
+
+def segment_softmax(logits: jnp.ndarray, segs: jnp.ndarray, num_segments: int,
+                    mask: jnp.ndarray) -> jnp.ndarray:
+    logits = jnp.where(mask, logits, -1e30)
+    mx = jax.ops.segment_max(logits, segs, num_segments=num_segments)
+    ex = jnp.where(mask, jnp.exp(logits - mx[segs]), 0.0)
+    den = jax.ops.segment_sum(ex, segs, num_segments=num_segments)
+    return ex / jnp.maximum(den[segs], 1e-20)
+
+
+def degrees(receivers: jnp.ndarray, mask: jnp.ndarray,
+            n_nodes: int) -> jnp.ndarray:
+    return jax.ops.segment_sum(mask.astype(jnp.float32), receivers,
+                               num_segments=n_nodes)
+
+
+# ---------------------------------------------------------------------------
+# tiny functional MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, dims, dtype=jnp.float32):
+    ks = jax.random.split(key, len(dims) - 1)
+    return {
+        f"w{i}": (jax.random.normal(ks[i], (dims[i], dims[i + 1]),
+                                    jnp.float32)
+                  * dims[i] ** -0.5).astype(dtype)
+        for i in range(len(dims) - 1)
+    } | {
+        f"b{i}": jnp.zeros((dims[i + 1],), dtype)
+        for i in range(len(dims) - 1)
+    }
+
+
+def apply_mlp(p, x, act=jax.nn.silu, final_act=False):
+    n = len([k for k in p if k.startswith("w")])
+    for i in range(n):
+        x = x @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# synthetic batch builders (smoke tests / benchmarks)
+# ---------------------------------------------------------------------------
+
+def random_geometric_batch(key, n_nodes: int, n_edges: int, *,
+                           n_species: int = 10, cutoff: float = 5.0,
+                           n_graphs: int = 1) -> GraphBatch:
+    k1, k2, k3 = jax.random.split(key, 3)
+    pos = jax.random.uniform(k1, (n_nodes, 3)) * (n_nodes ** (1 / 3)) * 2.0
+    # kNN-ish random edges within the batch's graph partition
+    per = n_nodes // n_graphs
+    gid = jnp.repeat(jnp.arange(n_graphs, dtype=jnp.int32), per,
+                     total_repeat_length=n_nodes)
+    snd = jax.random.randint(k2, (n_edges,), 0, per)
+    rcv = jax.random.randint(k3, (n_edges,), 0, per)
+    off = jnp.repeat(jnp.arange(n_graphs, dtype=jnp.int32) * per,
+                     n_edges // n_graphs, total_repeat_length=n_edges)
+    snd = snd + off
+    rcv = rcv + off
+    ok = snd != rcv
+    species = jax.random.randint(k1, (n_nodes,), 0, n_species)
+    return GraphBatch(positions=pos, node_feat=None, species=species,
+                      senders=snd.astype(jnp.int32),
+                      receivers=rcv.astype(jnp.int32),
+                      edge_mask=ok, node_mask=jnp.ones(n_nodes, bool),
+                      graph_ids=gid, n_graphs=n_graphs)
+
+
+def random_feature_graph(key, n_nodes: int, n_edges: int,
+                         d_feat: int) -> GraphBatch:
+    k1, k2, k3 = jax.random.split(key, 3)
+    feat = jax.random.normal(k1, (n_nodes, d_feat))
+    snd = jax.random.randint(k2, (n_edges,), 0, n_nodes).astype(jnp.int32)
+    rcv = jax.random.randint(k3, (n_edges,), 0, n_nodes).astype(jnp.int32)
+    return GraphBatch(positions=None, node_feat=feat, species=None,
+                      senders=snd, receivers=rcv,
+                      edge_mask=jnp.ones(n_edges, bool),
+                      node_mask=jnp.ones(n_nodes, bool),
+                      graph_ids=jnp.zeros(n_nodes, jnp.int32), n_graphs=1)

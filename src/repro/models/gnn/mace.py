@@ -1,0 +1,94 @@
+"""MACE (arXiv:2206.07697): higher-order equivariant message passing.
+
+Assigned config: 2 layers, 128 channels, l_max=2, correlation order 3,
+8 RBFs.  Per layer:
+  A-basis  — the standard TP convolution (same machinery as NequIP),
+  B-basis  — symmetric tensor powers of A up to ν=3 (ACE product basis) via
+             chained CG contractions (tensor_power),
+  message  — per-l linear mix of {B_ν},
+  update   — linear + species-dependent residual; per-layer scalar readout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import GraphBatch, apply_mlp, init_mlp
+from .tensor_field import (apply_linear_per_l, equivariant_conv, init_conv,
+                           init_tensor_power, linear_per_l, tensor_power)
+
+
+@dataclasses.dataclass(frozen=True)
+class MACEConfig:
+    name: str = "mace"
+    n_layers: int = 2
+    channels: int = 128
+    l_max: int = 2
+    correlation: int = 3
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_species: int = 10
+
+
+def init_params(cfg: MACEConfig, key) -> Dict:
+    l_set = list(range(cfg.l_max + 1))
+    ks = jax.random.split(key, cfg.n_layers * 8 + 2)
+    params: Dict = {
+        "embed": jax.random.normal(ks[0], (cfg.n_species, cfg.channels),
+                                   jnp.float32) * 0.5,
+    }
+    kidx = 1
+    for i in range(cfg.n_layers):
+        params[f"conv{i}"] = init_conv(ks[kidx], l_max=cfg.l_max,
+                                       channels=cfg.channels,
+                                       n_rbf=cfg.n_rbf); kidx += 1
+        for nu in range(2, cfg.correlation + 1):
+            params[f"tp{i}_{nu}"] = init_tensor_power(
+                ks[kidx], l_set, l_set, l_set, cfg.channels); kidx += 1
+        for nu in range(1, cfg.correlation + 1):
+            params[f"mix{i}_{nu}"] = linear_per_l(
+                ks[kidx], l_set, cfg.channels, cfg.channels); kidx += 1
+        params[f"res{i}"] = jax.random.normal(
+            ks[kidx], (cfg.n_species, cfg.channels), jnp.float32) * 0.1
+        kidx += 1
+        params[f"readout{i}"] = init_mlp(ks[kidx], (cfg.channels, 16, 1))
+        kidx += 1
+    return params
+
+
+def forward(params: Dict, batch: GraphBatch, cfg: MACEConfig) -> jnp.ndarray:
+    """Per-graph energies (n_graphs,) — sum of per-layer site readouts."""
+    h = {0: params["embed"][batch.species][:, :, None]}
+    energy = jnp.zeros((batch.n_graphs,), jnp.float32)
+
+    for i in range(cfg.n_layers):
+        A = equivariant_conv(params[f"conv{i}"], h, batch, l_max=cfg.l_max,
+                             channels=cfg.channels, n_rbf=cfg.n_rbf,
+                             cutoff=cfg.cutoff)
+        # product basis: B_1 = A, B_ν = CG(B_{ν-1} ⊗ A)
+        Bs = [A]
+        for nu in range(2, cfg.correlation + 1):
+            Bs.append(tensor_power(Bs[-1], A, params[f"tp{i}_{nu}"],
+                                   range(cfg.l_max + 1)))
+        msg: Dict[int, jnp.ndarray] = {}
+        for nu, B in enumerate(Bs, start=1):
+            mixed = apply_linear_per_l(params[f"mix{i}_{nu}"], B)
+            for l, v in mixed.items():
+                msg[l] = msg.get(l, 0.0) + v
+        res = params[f"res{i}"][batch.species][:, :, None]
+        h = {l: (v + (h[l] if l in h else 0.0)) for l, v in msg.items()}
+        h[0] = h[0] + res
+
+        site = apply_mlp(params[f"readout{i}"], h[0][..., 0])[:, 0]
+        site = site * batch.node_mask
+        energy = energy + jax.ops.segment_sum(site, batch.graph_ids,
+                                              num_segments=batch.n_graphs)
+    return energy
+
+
+def energy_loss(params, batch, targets, cfg):
+    e = forward(params, batch, cfg)
+    return jnp.mean((e - targets) ** 2)

@@ -1,0 +1,74 @@
+"""NequIP (arXiv:2101.03164): E(3)-equivariant interatomic potential.
+
+Assigned config: 5 layers, 32 channels, l_max=2, 8 Bessel RBFs, cutoff 5 Å.
+Each interaction block: tensor-product convolution (equivariant_conv) →
+per-l self-interaction linear → residual → equivariant gate.  Readout: linear
+on the scalar channel → per-atom site energy → segment-sum per graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import GraphBatch, init_mlp, apply_mlp
+from .tensor_field import (apply_linear_per_l, equivariant_conv, gate,
+                           init_conv, linear_per_l)
+
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    name: str = "nequip"
+    n_layers: int = 5
+    channels: int = 32
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_species: int = 10
+
+
+def init_params(cfg: NequIPConfig, key) -> Dict:
+    ks = jax.random.split(key, cfg.n_layers * 4 + 3)
+    l_set = list(range(cfg.l_max + 1))
+    params: Dict = {
+        "embed": jax.random.normal(ks[0], (cfg.n_species, cfg.channels),
+                                   jnp.float32) * 0.5,
+        "readout": init_mlp(ks[1], (cfg.channels, 32, 1)),
+    }
+    for i in range(cfg.n_layers):
+        params[f"conv{i}"] = init_conv(ks[2 + 3 * i], l_max=cfg.l_max,
+                                       channels=cfg.channels,
+                                       n_rbf=cfg.n_rbf)
+        params[f"self{i}"] = linear_per_l(ks[3 + 3 * i], l_set,
+                                          cfg.channels, cfg.channels)
+        params[f"gate{i}"] = (jax.random.normal(
+            ks[4 + 3 * i], (cfg.channels, cfg.channels), jnp.float32)
+            * cfg.channels ** -0.5)
+    return params
+
+
+def forward(params: Dict, batch: GraphBatch, cfg: NequIPConfig) -> jnp.ndarray:
+    """Per-graph potential energies: (n_graphs,)."""
+    n = batch.n_nodes
+    h = {0: params["embed"][batch.species][:, :, None]}     # (N, C, 1)
+
+    for i in range(cfg.n_layers):
+        m = equivariant_conv(params[f"conv{i}"], h, batch, l_max=cfg.l_max,
+                             channels=cfg.channels, n_rbf=cfg.n_rbf,
+                             cutoff=cfg.cutoff)
+        m = apply_linear_per_l(params[f"self{i}"], m)
+        # residual on overlapping l's
+        h = {l: (m[l] + h[l] if l in h else m[l]) for l in m}
+        h = gate(h, params[f"gate{i}"])
+
+    site = apply_mlp(params["readout"], h[0][..., 0])[:, 0]  # (N,)
+    site = site * batch.node_mask
+    return jax.ops.segment_sum(site, batch.graph_ids,
+                               num_segments=batch.n_graphs)
+
+
+def energy_loss(params, batch, targets, cfg):
+    e = forward(params, batch, cfg)
+    return jnp.mean((e - targets) ** 2)

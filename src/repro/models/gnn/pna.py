@@ -1,0 +1,89 @@
+"""PNA — Principal Neighbourhood Aggregation (arXiv:2004.05718).
+
+Assigned config: 4 layers, 75 hidden, aggregators {mean,max,min,std},
+scalers {identity, amplification, attenuation}.  Message = MLP(h_i‖h_j);
+the 4×3 aggregator/scaler grid concatenates to 12·d which a linear tower
+projects back — all pure segment_sum/segment_max work (SpMM regime).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import GraphBatch, apply_mlp, degrees, init_mlp
+
+
+@dataclasses.dataclass(frozen=True)
+class PNAConfig:
+    name: str = "pna"
+    n_layers: int = 4
+    d_hidden: int = 75
+    d_in: int = 64
+    n_classes: int = 16
+    delta: float = 2.5  # mean log-degree of the training graphs
+
+
+def init_params(cfg: PNAConfig, key) -> Dict:
+    ks = jax.random.split(key, cfg.n_layers * 2 + 2)
+    params: Dict = {
+        "encoder": init_mlp(ks[0], (cfg.d_in, cfg.d_hidden)),
+        "decoder": init_mlp(ks[1], (cfg.d_hidden, cfg.d_hidden,
+                                    cfg.n_classes)),
+    }
+    for i in range(cfg.n_layers):
+        params[f"msg{i}"] = init_mlp(ks[2 + 2 * i],
+                                     (2 * cfg.d_hidden, cfg.d_hidden))
+        params[f"upd{i}"] = init_mlp(ks[3 + 2 * i],
+                                     (13 * cfg.d_hidden, cfg.d_hidden))
+    return params
+
+
+def _aggregate(msg, rcv, emask, n_nodes, deg, delta):
+    m = emask[:, None].astype(msg.dtype)
+    s = jax.ops.segment_sum(msg * m, rcv, num_segments=n_nodes)
+    d = jnp.maximum(deg, 1.0)[:, None]
+    mean = s / d
+    mx = jax.ops.segment_max(jnp.where(emask[:, None], msg, -1e30), rcv,
+                             num_segments=n_nodes)
+    mx = jnp.where(deg[:, None] > 0, mx, 0.0)
+    mn = -jax.ops.segment_max(jnp.where(emask[:, None], -msg, -1e30), rcv,
+                              num_segments=n_nodes)
+    mn = jnp.where(deg[:, None] > 0, mn, 0.0)
+    sq = jax.ops.segment_sum(msg * msg * m, rcv, num_segments=n_nodes) / d
+    std = jnp.sqrt(jnp.maximum(sq - mean * mean, 1e-8))
+
+    aggs = [mean, mx, mn, std]
+    logd = jnp.log(deg + 1.0)[:, None]
+    amp = logd / delta
+    att = delta / jnp.maximum(logd, 1e-3)
+    out = []
+    for a in aggs:
+        out += [a, a * amp, a * att]
+    return jnp.concatenate(out, axis=-1)          # (N, 12·d)
+
+
+def forward(params: Dict, batch: GraphBatch, cfg: PNAConfig) -> jnp.ndarray:
+    """Node logits (N, n_classes)."""
+    h = apply_mlp(params["encoder"], batch.node_feat)
+    deg = degrees(batch.receivers, batch.edge_mask, batch.n_nodes)
+    for i in range(cfg.n_layers):
+        hj = h[batch.senders]
+        hi = h[batch.receivers]
+        msg = apply_mlp(params[f"msg{i}"], jnp.concatenate([hi, hj], -1),
+                        final_act=True)
+        agg = _aggregate(msg, batch.receivers, batch.edge_mask,
+                         batch.n_nodes, deg, cfg.delta)
+        h = h + apply_mlp(params[f"upd{i}"],
+                          jnp.concatenate([h, agg], -1), final_act=True)
+    return apply_mlp(params["decoder"], h)
+
+
+def node_xent_loss(params, batch, labels, cfg):
+    logits = forward(params, batch, cfg).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    per = (logz - gold) * batch.node_mask
+    return per.sum() / jnp.maximum(batch.node_mask.sum(), 1)

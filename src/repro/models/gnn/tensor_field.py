@@ -1,0 +1,130 @@
+"""Shared tensor-product machinery for NequIP and MACE.
+
+Irrep features are dicts {l: (N, C, 2l+1)}.  The equivariant convolution
+(message) is
+
+    m_i^{l_out} = Σ_{j∈N(i)} Σ_{paths (l_in, l_f) → l_out}
+                  w_path,c(r_ij) · CG^{l_out}_{l_in l_f} (h_j^{l_in} ⊗ Y^{l_f}(r̂_ij))
+
+with per-path per-channel radial weights from an MLP over a Bessel basis —
+NequIP's interaction block.  MACE layers reuse the same A-basis then add the
+higher-correlation product basis (tensor_power below).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import apply_mlp, bessel_rbf, init_mlp, poly_cutoff
+from .irreps import clebsch_gordan_real, real_sph_harm
+
+
+def allowed_paths(l_in_set: Sequence[int], l_f_max: int,
+                  l_out_set: Sequence[int]) -> List[Tuple[int, int, int]]:
+    paths = []
+    for li in l_in_set:
+        for lf in range(l_f_max + 1):
+            for lo in l_out_set:
+                if abs(li - lf) <= lo <= li + lf:
+                    paths.append((li, lf, lo))
+    return paths
+
+
+def conv_paths(l_max: int) -> List[Tuple[int, int, int]]:
+    """Canonical static path list shared by init_conv / equivariant_conv
+    (kept OUT of the params pytree so indices stay python ints under jit)."""
+    return allowed_paths(range(l_max + 1), l_max, range(l_max + 1))
+
+
+def init_conv(key, *, l_max: int, channels: int, n_rbf: int) -> Dict:
+    paths = conv_paths(l_max)
+    k1, _ = jax.random.split(key)
+    return {"radial": init_mlp(k1, (n_rbf, 64, len(paths) * channels))}
+
+
+def equivariant_conv(params: Dict, h: Dict[int, jnp.ndarray],
+                     batch, *, l_max: int, channels: int, n_rbf: int,
+                     cutoff: float) -> Dict[int, jnp.ndarray]:
+    """One tensor-product message-passing step; returns aggregated messages."""
+    snd, rcv, emask = batch.senders, batch.receivers, batch.edge_mask
+    n_nodes = batch.n_nodes
+    vec = batch.positions[rcv] - batch.positions[snd]
+    r = jnp.linalg.norm(vec, axis=-1)
+    Y = real_sph_harm(vec, l_max)
+    rb = bessel_rbf(r, n_rbf, cutoff) * poly_cutoff(r, cutoff)[:, None]
+    paths = conv_paths(l_max)
+    w = apply_mlp(params["radial"], rb).reshape(r.shape[0], len(paths),
+                                                channels)
+    w = w * emask[:, None, None]
+
+    out: Dict[int, jnp.ndarray] = {}
+    for p_idx, (li, lf, lo) in enumerate(paths):
+        if li not in h:
+            continue
+        C = jnp.asarray(clebsch_gordan_real(li, lf, lo), jnp.float32)
+        hj = h[li][snd]                                  # (E, C, 2li+1)
+        msg = jnp.einsum("eci,ej,ijk->eck", hj, Y[lf], C)
+        msg = msg * w[:, p_idx, :, None]
+        agg = jax.ops.segment_sum(msg, rcv, num_segments=n_nodes)
+        out[lo] = out.get(lo, 0.0) + agg
+    return out
+
+
+def linear_per_l(key, l_set, c_in, c_out):
+    ks = jax.random.split(key, len(l_set))
+    return {f"l{l}": (jax.random.normal(k, (c_in, c_out), jnp.float32)
+                      * c_in ** -0.5)
+            for l, k in zip(l_set, ks)}
+
+
+def apply_linear_per_l(p, h):
+    return {l: jnp.einsum("nci,cd->ndi", v, p[f"l{l}"])
+            for l, v in h.items()}
+
+
+def gate(h: Dict[int, jnp.ndarray], gate_w: jnp.ndarray) -> Dict[int, jnp.ndarray]:
+    """Equivariant gating: scalars SiLU'd; l>0 scaled by σ(W·scalars)."""
+    out = {0: jax.nn.silu(h[0])}
+    if len(h) > 1:
+        g = jax.nn.sigmoid(h[0][..., 0] @ gate_w)        # (N, C)
+        for l, v in h.items():
+            if l > 0:
+                out[l] = v * g[..., None]
+    return out
+
+
+def tensor_power(h: Dict[int, jnp.ndarray], A: Dict[int, jnp.ndarray],
+                 weights: Dict, l_out_set) -> Dict[int, jnp.ndarray]:
+    """One correlation-order increase of MACE's product basis:
+    B^{l} = Σ_{l1,l2} w_{l1l2l} CG(h^{l1} ⊗ A^{l2}) — channel-wise."""
+    out: Dict[int, jnp.ndarray] = {}
+    for l1, v1 in h.items():
+        for l2, v2 in A.items():
+            for lo in l_out_set:
+                if not (abs(l1 - l2) <= lo <= l1 + l2):
+                    continue
+                key = f"p{l1}_{l2}_{lo}"
+                if key not in weights:
+                    continue
+                C = jnp.asarray(clebsch_gordan_real(l1, l2, lo), jnp.float32)
+                t = jnp.einsum("nci,ncj,ijk->nck", v1, v2, C)
+                out[lo] = out.get(lo, 0.0) + t * weights[key][None, :, None]
+    return out
+
+
+def init_tensor_power(key, l_in_set, l_a_set, l_out_set, channels):
+    ws = {}
+    i = 0
+    keys = jax.random.split(key, 64)
+    for l1 in l_in_set:
+        for l2 in l_a_set:
+            for lo in l_out_set:
+                if abs(l1 - l2) <= lo <= l1 + l2:
+                    ws[f"p{l1}_{l2}_{lo}"] = (
+                        jax.random.normal(keys[i % 64], (channels,),
+                                          jnp.float32) * 0.1)
+                    i += 1
+    return ws

@@ -1,0 +1,685 @@
+"""Unified decoder-only LM covering the assigned architecture pool.
+
+One parameterised stack expresses all five assigned LM configs:
+
+  * phi3.5-moe-42b   — GQA(32/8, hd=128), MoE 16e top-2, d_ff 6400
+  * qwen3-moe-30b    — GQA(32/4), MoE 128e top-8 (d_ff 768/expert), QK-norm
+  * gemma-2b         — MQA (kv=1, hd=256), GeGLU, embed scaling
+  * gemma2-9b        — GQA(16/8), local(4096)+global alternation, logit softcaps
+  * qwen1.5-32b      — GQA(40/40) i.e. MHA, QKV bias
+
+Implementation style: functional init/apply, layer-stacked parameters consumed
+by ``jax.lax.scan`` (small HLO, fast multi-pod compiles), per-layer
+``jax.checkpoint`` (remat) for training-memory fit, attention through the
+Pallas flash kernel (XLA fallback selectable), MoE via deterministic
+sort-based capacity dispatch (no (T,E,C) one-hot blow-up — DESIGN.md §5).
+
+Weight layout notes (sharding axes in parentheses, see distributed/sharding.py):
+  embed      (V@model, D)
+  wq/wk/wv   (L, D, H@model·hd)     wo (L, H@model·hd, D)
+  dense mlp  w_gate/w_up (L, D, F@model), w_down (L, F@model, D)
+  moe        router (L, D, E), experts (L, E@model, D, F)
+  lm_head    (D, V@model)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # MoE (n_experts == 0 → dense FFN)
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # attention flavour
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    sliding_window: int = 0            # >0 enables local attention layers
+    local_global_alternate: bool = False  # even layers local, odd global
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    # misc
+    activation: str = "swiglu"         # or "geglu"
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    embed_scale: bool = False          # gemma: x *= sqrt(d_model)
+    tie_embeddings: bool = True
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    scan_unroll: int = 1   # >1 only for dry-run cost calibration
+    # beyond-paper §Perf levers (baseline = defaults)
+    dispatch_groups: int = 1  # shard-local MoE dispatch: G == data shards
+    cast_params_once: bool = False  # bf16 before the FSDP all-gather
+    remat_policy: str = "full"      # or "dots": save matmul outputs
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def n_params(self) -> int:
+        """Total parameter count (for MODEL_FLOPS book-keeping)."""
+        D, hd = self.d_model, self.head_dim
+        attn = D * (self.n_heads + 2 * self.n_kv_heads) * hd \
+            + self.n_heads * hd * D
+        if self.is_moe:
+            ffn = D * self.n_experts + self.n_experts * 3 * D * self.d_ff
+        else:
+            ffn = 3 * D * self.d_ff
+        per_layer = attn + ffn + 2 * D
+        emb = self.vocab_size * D * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + D
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top_k experts only)."""
+        if not self.is_moe:
+            return self.n_params()
+        D = self.d_model
+        attn = D * (self.n_heads + 2 * self.n_kv_heads) * self.head_dim \
+            + self.n_heads * self.head_dim * D
+        ffn = D * self.n_experts + self.top_k * 3 * D * self.d_ff
+        per_layer = attn + ffn + 2 * D
+        emb = self.vocab_size * D * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + D
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: LMConfig, key: jax.Array,
+                dtype: Any = jnp.float32) -> Dict:
+    """Layer-stacked parameter pytree (leading dim = n_layers)."""
+    L, D, hd = cfg.n_layers, cfg.d_model, cfg.head_dim
+    Hq, Hkv, F, V = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab_size
+    ks = jax.random.split(key, 16)
+
+    def norm_init(i, shape):
+        return jnp.ones(shape, dtype)
+
+    def w(i, shape, scale=None):
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        s = scale if scale is not None else fan_in ** -0.5
+        return (jax.random.normal(ks[i], shape, jnp.float32) * s).astype(dtype)
+
+    layers = {
+        "wq": w(0, (L, D, Hq * hd)),
+        "wk": w(1, (L, D, Hkv * hd)),
+        "wv": w(2, (L, D, Hkv * hd)),
+        "wo": w(3, (L, Hq * hd, D)),
+        "ln_attn": norm_init(8, (L, D)),
+        "ln_mlp": norm_init(9, (L, D)),
+    }
+    if cfg.qkv_bias:
+        layers["bq"] = jnp.zeros((L, Hq * hd), dtype)
+        layers["bk"] = jnp.zeros((L, Hkv * hd), dtype)
+        layers["bv"] = jnp.zeros((L, Hkv * hd), dtype)
+    if cfg.qk_norm:
+        layers["q_norm"] = jnp.ones((L, hd), dtype)
+        layers["k_norm"] = jnp.ones((L, hd), dtype)
+    if cfg.is_moe:
+        layers["router"] = w(4, (L, D, cfg.n_experts), scale=D ** -0.5)
+        layers["w_gate"] = w(5, (L, cfg.n_experts, D, F))
+        layers["w_up"] = w(6, (L, cfg.n_experts, D, F))
+        layers["w_down"] = w(7, (L, cfg.n_experts, F, D), scale=F ** -0.5)
+    else:
+        layers["w_gate"] = w(5, (L, D, F))
+        layers["w_up"] = w(6, (L, D, F))
+        layers["w_down"] = w(7, (L, F, D), scale=F ** -0.5)
+
+    params = {
+        "embed": w(10, (V, D), scale=1.0),
+        "final_norm": jnp.ones((D,), dtype),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = w(11, (D, V))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) \
+        * scale
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq      # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _activation(gate, up, kind):
+    if kind == "geglu":
+        return jax.nn.gelu(gate, approximate=True) * up
+    return jax.nn.silu(gate) * up
+
+
+def moe_ffn(x: jnp.ndarray, lw: Dict, cfg: LMConfig) -> jnp.ndarray:
+    """Sort-based capacity-bucketed MoE dispatch (deterministic).
+
+    x: (T, D) token-flattened.  Tokens overflowing an expert's capacity are
+    dropped (standard GShard semantics at capacity_factor 1.25).
+
+    ``cfg.dispatch_groups > 1`` switches to SHARD-LOCAL dispatch: tokens are
+    viewed as (G, T/G) groups aligned with the data shards, and the sort /
+    rank / capacity machinery runs independently per group — under SPMD the
+    whole token-space dispatch becomes shard-local compute, leaving only the
+    (G, E, C, D) expert-buffer exchange on the wire (the §Perf fix for the
+    collective-bound MoE cells).
+    """
+    if cfg.dispatch_groups > 1:
+        return _moe_ffn_grouped(x, lw, cfg)
+    T, D = x.shape
+    E, K, F = cfg.n_experts, cfg.top_k, cfg.d_ff
+    C = int(np.ceil(T * K / E * cfg.capacity_factor))
+    C = max(8, min(C, T))
+
+    logits = x @ lw["router"]                                  # (T, E)
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_g, top_e = jax.lax.top_k(gates, K)                     # (T, K)
+    top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(-1)                                 # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    flat_g = top_g.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    # rank within expert run
+    idx = jnp.arange(T * K, dtype=jnp.int32)
+    run_start = jnp.concatenate([jnp.ones((1,), bool), se[1:] != se[:-1]])
+    base = jax.lax.cummax(jnp.where(run_start, idx, -1))
+    rank = idx - base
+    keep = rank < C
+    slot = jnp.where(keep, se * C + rank, E * C)               # OOB drop
+
+    # gather tokens into (E*C, D) expert buffers (sharded E@model → the
+    # dispatch all-to-all appears here under expert parallelism)
+    xe = jnp.zeros((E * C, D), x.dtype).at[slot].set(x[st], mode="drop")
+    xe = constrain(xe.reshape(E, C, D), "moe_ecd")
+    h = _activation(jnp.einsum("ecd,edf->ecf", xe, lw["w_gate"]),
+                    jnp.einsum("ecd,edf->ecf", xe, lw["w_up"]),
+                    cfg.activation)
+    ye = jnp.einsum("ecf,efd->ecd", h, lw["w_down"]).reshape(E * C, D)
+
+    # combine back with gate weights
+    contrib = ye[jnp.minimum(slot, E * C - 1)] * sg[:, None].astype(ye.dtype)
+    contrib = jnp.where(keep[:, None], contrib, 0)
+    y = jax.ops.segment_sum(contrib, st, num_segments=T)
+    return y.astype(x.dtype)
+
+
+def _moe_ffn_grouped(x: jnp.ndarray, lw: Dict, cfg: LMConfig) -> jnp.ndarray:
+    """Shard-local MoE dispatch over G token groups (see moe_ffn)."""
+    T, D = x.shape
+    G = cfg.dispatch_groups
+    E, K, F = cfg.n_experts, cfg.top_k, cfg.d_ff
+    Tg = T // G
+    C = int(np.ceil(Tg * K / E * cfg.capacity_factor))
+    C = max(8, min(C, Tg))
+
+    xg = constrain(x.reshape(G, Tg, D), "moe_tokens_g")
+    logits = xg @ lw["router"]                               # (G, Tg, E)
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_g, top_e = jax.lax.top_k(gates, K)                   # (G, Tg, K)
+    top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(G, Tg * K)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg, dtype=jnp.int32), K)[None], (G, Tg * K))
+    flat_g = top_g.reshape(G, Tg * K)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)        # per-group sort
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    st = jnp.take_along_axis(flat_t, order, axis=-1)
+    sg = jnp.take_along_axis(flat_g, order, axis=-1)
+
+    idx = jnp.broadcast_to(jnp.arange(Tg * K, dtype=jnp.int32)[None],
+                           (G, Tg * K))
+    run_start = jnp.concatenate(
+        [jnp.ones((G, 1), bool), se[:, 1:] != se[:, :-1]], axis=1)
+    base = jax.lax.cummax(jnp.where(run_start, idx, -1), axis=1)
+    rank = idx - base
+    keep = rank < C
+    slot = jnp.where(keep, se * C + rank, E * C)             # OOB drop
+
+    # per-group gather into (G, E*C, D) expert buffers
+    def scatter_one(xr, st_r, slot_r):
+        return jnp.zeros((E * C, D), x.dtype).at[slot_r].set(
+            xr[st_r], mode="drop")
+    xe = jax.vmap(scatter_one)(xg, st, slot)
+    xe = constrain(xe.reshape(G, E, C, D), "moe_gecd")
+    h = _activation(jnp.einsum("gecd,edf->gecf", xe, lw["w_gate"]),
+                    jnp.einsum("gecd,edf->gecf", xe, lw["w_up"]),
+                    cfg.activation)
+    ye = jnp.einsum("gecf,efd->gecd", h, lw["w_down"])
+    ye = constrain(ye, "moe_gecd").reshape(G, E * C, D)
+
+    def combine_one(ye_r, slot_r, sg_r, keep_r, st_r):
+        contrib = ye_r[jnp.minimum(slot_r, E * C - 1)] \
+            * sg_r[:, None].astype(ye_r.dtype)
+        contrib = jnp.where(keep_r[:, None], contrib, 0)
+        return jax.ops.segment_sum(contrib, st_r, num_segments=Tg)
+    y = jax.vmap(combine_one)(ye, slot, sg, keep, st)        # (G, Tg, D)
+    return y.reshape(T, D).astype(x.dtype)
+
+
+def dense_ffn(x, lw, cfg):
+    h = _activation(x @ lw["w_gate"], x @ lw["w_up"], cfg.activation)
+    return h @ lw["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def attention(x, lw, cfg: LMConfig, positions, *, local: bool,
+              attn_impl: str = "ref"):
+    B, S, D = x.shape
+    Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ lw["wq"]
+    k = x @ lw["wk"]
+    v = x @ lw["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lw["bq"], k + lw["bk"], v + lw["bv"]
+    q = q.reshape(B, S, Hq, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, lw["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, lw["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    window = cfg.sliding_window if local else 0
+    qt = jnp.swapaxes(q, 1, 2)   # (B, Hq, S, hd)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    if attn_impl == "pallas":
+        from ..kernels.flash_attention.ops import flash_attention
+        o = flash_attention(qt, kt, vt, causal=True, window=window,
+                            softcap=cfg.attn_softcap)
+    elif attn_impl == "chunked":
+        from ..kernels.flash_attention.chunked import attention_chunked
+        o = attention_chunked(qt, kt, vt, causal=True, window=window,
+                              softcap=cfg.attn_softcap,
+                              unroll=cfg.scan_unroll > 1)
+    else:
+        from ..kernels.flash_attention.ref import attention_ref
+        o = attention_ref(qt, kt, vt, causal=True, window=window,
+                          softcap=cfg.attn_softcap)
+    o = jnp.swapaxes(o, 1, 2).reshape(B, S, Hq * hd)
+    return o @ lw["wo"]
+
+
+# ---------------------------------------------------------------------------
+# forward (training)
+# ---------------------------------------------------------------------------
+
+def _layer(cfg: LMConfig, attn_impl: str):
+    def sub_layer(x, positions, lw, *, local: bool):
+        """One transformer block with a STATIC local/global attention choice
+        (the gemma2 alternation is handled by a pair-scan — no doubled
+        attention compute)."""
+        lw = jax.tree.map(lambda w: w.astype(cfg.dtype), lw)
+        h = rms_norm(x, lw["ln_attn"], cfg.norm_eps)
+        a = attention(h, lw, cfg, positions, local=local,
+                      attn_impl=attn_impl)
+        x = x + a
+        h = rms_norm(x, lw["ln_mlp"], cfg.norm_eps)
+        if cfg.is_moe:
+            B, S, D = h.shape
+            y = moe_ffn(h.reshape(B * S, D), lw, cfg).reshape(B, S, D)
+        else:
+            y = dense_ffn(h, lw, cfg)
+        return constrain(x + y, "act_btd")  # scan-carry residency policy
+
+    if cfg.local_global_alternate and cfg.sliding_window:
+        def layer_fn(carry, lw_pair):
+            x, positions, layer_idx = carry
+            lw_l = jax.tree.map(lambda w: w[0], lw_pair)
+            lw_g = jax.tree.map(lambda w: w[1], lw_pair)
+            x = sub_layer(x, positions, lw_l, local=True)
+            x = sub_layer(x, positions, lw_g, local=False)
+            return (x, positions, layer_idx + 2), None
+    else:
+        def layer_fn(carry, lw):
+            x, positions, layer_idx = carry
+            x = sub_layer(x, positions, lw,
+                          local=cfg.sliding_window > 0)
+            return (x, positions, layer_idx + 1), None
+
+    if cfg.remat:
+        if cfg.remat_policy == "dots":
+            layer_fn = jax.checkpoint(
+                layer_fn,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        else:
+            layer_fn = jax.checkpoint(layer_fn)
+    return layer_fn
+
+
+def forward(params: Dict, tokens: jnp.ndarray, cfg: LMConfig, *,
+            attn_impl: str = "ref") -> jnp.ndarray:
+    """tokens (B, S) int32 → logits (B, S, V)."""
+    if cfg.cast_params_once:
+        # cast the whole stacked tree up front: FSDP weight all-gathers move
+        # bf16 instead of f32 master copies (halves the wire term)
+        params = jax.tree.map(lambda w: w.astype(cfg.dtype), params)
+    B, S = tokens.shape
+    x = constrain(params["embed"][tokens].astype(cfg.dtype), "act_btd")
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    layer_fn = _layer(cfg, attn_impl)
+    stacked = params["layers"]
+    if cfg.local_global_alternate and cfg.sliding_window:
+        assert cfg.n_layers % 2 == 0 or cfg.n_layers == 1, cfg.n_layers
+        if cfg.n_layers == 1:
+            # calibration variant: treat the single layer as a (1, 1)-pair
+            # degenerate stack (local sub-layer only)
+            stacked = jax.tree.map(
+                lambda w: jnp.stack([w[0], w[0]])[None], stacked)
+        else:
+            stacked = jax.tree.map(
+                lambda w: w.reshape((cfg.n_layers // 2, 2) + w.shape[1:]),
+                stacked)
+    (x, _, _), _ = jax.lax.scan(
+        layer_fn, (x, positions, jnp.asarray(0, jnp.int32)),
+        stacked, unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype), cfg.norm_eps)
+
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = constrain(x @ head.astype(cfg.dtype), "logits")
+    if cfg.final_softcap > 0:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+def loss_fn(params: Dict, tokens: jnp.ndarray, labels: jnp.ndarray,
+            cfg: LMConfig, *, attn_impl: str = "ref") -> jnp.ndarray:
+    logits = forward(params, tokens, cfg, attn_impl=attn_impl)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def prefill(params: Dict, tokens: jnp.ndarray, cfg: LMConfig, *,
+            attn_impl: str = "ref") -> Tuple[jnp.ndarray, Dict]:
+    """Serving prefill: forward pass that also materialises the KV cache.
+
+    Returns (last-position logits (B, V), cache {k,v}: (L, B, Hkv, S, hd)).
+    gemma2-style stacks also fill the ring-buffer local cache (last `window`
+    positions).
+    """
+    if cfg.cast_params_once:
+        params = jax.tree.map(lambda w: w.astype(cfg.dtype), params)
+    B, S = tokens.shape
+    Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    x = constrain(params["embed"][tokens].astype(cfg.dtype), "act_btd")
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def sub_layer(x, lw, *, window: int):
+        lw = jax.tree.map(lambda w: w.astype(cfg.dtype), lw)
+        h = rms_norm(x, lw["ln_attn"], cfg.norm_eps)
+        q = h @ lw["wq"]
+        k = h @ lw["wk"]
+        v = h @ lw["wv"]
+        if cfg.qkv_bias:
+            q, k, v = q + lw["bq"], k + lw["bk"], v + lw["bv"]
+        q = q.reshape(B, S, Hq, hd)
+        k = k.reshape(B, S, Hkv, hd)
+        v = v.reshape(B, S, Hkv, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, lw["q_norm"], cfg.norm_eps)
+            k = rms_norm(k, lw["k_norm"], cfg.norm_eps)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        qt, kt, vt = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))
+
+        from ..kernels.flash_attention.ref import attention_ref
+        from ..kernels.flash_attention.ops import flash_attention as fa
+        from ..kernels.flash_attention.chunked import attention_chunked
+        import functools as _ft
+        if attn_impl == "pallas":
+            attn = fa
+        elif attn_impl == "chunked":
+            attn = _ft.partial(attention_chunked,
+                               unroll=cfg.scan_unroll > 1)
+        else:
+            attn = attention_ref
+        o = attn(qt, kt, vt, causal=True, window=window,
+                 softcap=cfg.attn_softcap)
+        o = jnp.swapaxes(o, 1, 2).reshape(B, S, Hq * hd)
+        x = x + o @ lw["wo"]
+
+        h = rms_norm(x, lw["ln_mlp"], cfg.norm_eps)
+        if cfg.is_moe:
+            y = moe_ffn(h.reshape(B * S, -1), lw, cfg).reshape(B, S, -1)
+        else:
+            y = dense_ffn(h, lw, cfg)
+        x = constrain(x + y, "act_btd")
+        return x, (kt, vt)
+
+    if cfg.local_global_alternate and cfg.sliding_window:
+        def layer_fn(carry, lw_pair):
+            x, _ = carry
+            lw_l = jax.tree.map(lambda w: w[0], lw_pair)
+            lw_g = jax.tree.map(lambda w: w[1], lw_pair)
+            x, (k1, v1) = sub_layer(x, lw_l, window=cfg.sliding_window)
+            x, (k2, v2) = sub_layer(x, lw_g, window=0)
+            return (x, jnp.asarray(0, jnp.int32)),                 (jnp.stack([k1, k2]), jnp.stack([v1, v2]))
+        stacked = jax.tree.map(
+            lambda w: (jnp.stack([w[0], w[0]])[None] if cfg.n_layers == 1
+                       else w.reshape((cfg.n_layers // 2, 2) + w.shape[1:])),
+            params["layers"])
+        (x, _), (ks, vs) = jax.lax.scan(
+            layer_fn, (x, jnp.asarray(0, jnp.int32)), stacked,
+            unroll=cfg.scan_unroll)
+        ks = ks.reshape((-1,) + ks.shape[2:])
+        vs = vs.reshape((-1,) + vs.shape[2:])
+        if cfg.n_layers == 1:
+            ks, vs = ks[:1], vs[:1]
+    else:
+        def layer_fn(carry, lw):
+            x, _ = carry
+            x, (kt2, vt2) = sub_layer(x, lw, window=cfg.sliding_window)
+            return (x, jnp.asarray(0, jnp.int32)), (kt2, vt2)
+        (x, _), (ks, vs) = jax.lax.scan(
+            layer_fn, (x, jnp.asarray(0, jnp.int32)), params["layers"],
+            unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype), cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = (x[:, -1] @ head.astype(cfg.dtype)).astype(jnp.float32)
+    if cfg.final_softcap > 0:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+
+    cache = {"k": ks, "v": vs}   # (L, B, Hkv, S, hd)
+    if cfg.local_global_alternate and cfg.sliding_window:
+        w = min(cfg.sliding_window, S)
+        cache["k_local"] = ks[:, :, :, -w:]
+        cache["v_local"] = vs[:, :, :, -w:]
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int,
+               dtype: Any = jnp.bfloat16) -> Dict:
+    """KV cache, layer-stacked.  gemma2-style local layers get a ring buffer
+    bounded by the sliding window (this is what makes long_500k feasible for
+    the local half of the stack)."""
+    Hkv, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    if cfg.local_global_alternate and cfg.sliding_window:
+        w = min(cfg.sliding_window, max_len)
+        return {
+            "k": jnp.zeros((L, batch, Hkv, max_len, hd), dtype),
+            "v": jnp.zeros((L, batch, Hkv, max_len, hd), dtype),
+            "k_local": jnp.zeros((L, batch, Hkv, w, hd), dtype),
+            "v_local": jnp.zeros((L, batch, Hkv, w, hd), dtype),
+        }
+    return {
+        "k": jnp.zeros((L, batch, Hkv, max_len, hd), dtype),
+        "v": jnp.zeros((L, batch, Hkv, max_len, hd), dtype),
+    }
+
+
+def _decode_attention(q, ck, cv, pos, *, softcap, window, ring):
+    """q (B,Hq,1,hd); ck/cv (B,Hkv,Smax,hd); pos () current position."""
+    B, Hq, _, hd = q.shape
+    Hkv = ck.shape[1]
+    group = Hq // Hkv
+    qg = q.reshape(B, Hkv, group, hd)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
+                   ck.astype(jnp.float32)) * hd ** -0.5
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    Smax = ck.shape[2]
+    slots = jnp.arange(Smax)
+    if ring:
+        valid = slots < jnp.minimum(pos + 1, Smax)
+    else:
+        valid = slots <= pos
+        if window > 0:
+            valid &= slots > pos - window
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p, cv.astype(jnp.float32))
+    return o.reshape(B, Hq, 1, hd).astype(q.dtype)
+
+
+def decode_step(params: Dict, cache: Dict, token: jnp.ndarray,
+                pos: jnp.ndarray, cfg: LMConfig) -> Tuple[jnp.ndarray, Dict]:
+    """One token for every sequence in the batch.  token (B,) int32, pos ()
+    int32 (shared position — batched homogeneous decode)."""
+    B = token.shape[0]
+    Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    x = params["embed"][token][:, None, :].astype(cfg.dtype)    # (B,1,D)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+
+    has_local = bool(cfg.local_global_alternate and cfg.sliding_window)
+
+    def layer_fn(carry, scanned):
+        x, layer_idx = carry
+        lw, ck, cv = scanned["lw"], scanned["ck"], scanned["cv"]
+        lw = jax.tree.map(lambda w: w.astype(cfg.dtype), lw)
+        h = rms_norm(x, lw["ln_attn"], cfg.norm_eps)
+        q = h @ lw["wq"]
+        k = h @ lw["wk"]
+        v = h @ lw["wv"]
+        if cfg.qkv_bias:
+            q, k, v = q + lw["bq"], k + lw["bk"], v + lw["bv"]
+        q = q.reshape(B, 1, Hq, hd)
+        k = k.reshape(B, 1, Hkv, hd)
+        v = v.reshape(B, 1, Hkv, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, lw["q_norm"], cfg.norm_eps)
+            k = rms_norm(k, lw["k_norm"], cfg.norm_eps)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        q = jnp.swapaxes(q, 1, 2)                        # (B,Hq,1,hd)
+        k = jnp.swapaxes(k, 1, 2)[:, :, 0]               # (B,Hkv,hd)
+        v = jnp.swapaxes(v, 1, 2)[:, :, 0]
+
+        is_local = has_local and True
+        if has_local:
+            use_local = (layer_idx % 2) == 0
+            wlen = ck["local"].shape[2]
+            slot_l = jnp.mod(pos, wlen)
+            ckl = ck["local"].at[:, :, slot_l].set(k.astype(ck["local"].dtype))
+            cvl = cv["local"].at[:, :, slot_l].set(v.astype(cv["local"].dtype))
+            ckg = ck["global"].at[:, :, pos].set(k.astype(ck["global"].dtype))
+            cvg = cv["global"].at[:, :, pos].set(v.astype(cv["global"].dtype))
+            o_l = _decode_attention(q, ckl, cvl, pos,
+                                    softcap=cfg.attn_softcap,
+                                    window=cfg.sliding_window, ring=True)
+            o_g = _decode_attention(q, ckg, cvg, pos,
+                                    softcap=cfg.attn_softcap, window=0,
+                                    ring=False)
+            o = jnp.where(use_local, o_l, o_g)
+            ck = {"local": jnp.where(use_local, ckl, ck["local"]),
+                  "global": jnp.where(use_local, ck["global"], ckg)}
+            cv = {"local": jnp.where(use_local, cvl, cv["local"]),
+                  "global": jnp.where(use_local, cv["global"], cvg)}
+        else:
+            ck = ck.at[:, :, pos].set(k.astype(ck.dtype))
+            cv = cv.at[:, :, pos].set(v.astype(cv.dtype))
+            o = _decode_attention(q, ck, cv, pos, softcap=cfg.attn_softcap,
+                                  window=cfg.sliding_window, ring=False)
+        o = jnp.swapaxes(o, 1, 2).reshape(B, 1, Hq * hd)
+        x = x + o @ lw["wo"]
+
+        h = rms_norm(x, lw["ln_mlp"], cfg.norm_eps)
+        if cfg.is_moe:
+            y = moe_ffn(h.reshape(B, -1), lw, cfg).reshape(B, 1, -1)
+        else:
+            y = dense_ffn(h, lw, cfg)
+        x = x + y
+        return (x, layer_idx + 1), {"ck": ck, "cv": cv}
+
+    if has_local:
+        scanned = {"lw": params["layers"],
+                   "ck": {"local": cache["k_local"], "global": cache["k"]},
+                   "cv": {"local": cache["v_local"], "global": cache["v"]}}
+    else:
+        scanned = {"lw": params["layers"], "ck": cache["k"],
+                   "cv": cache["v"]}
+
+    (x, _), new_caches = jax.lax.scan(
+        layer_fn, (x, jnp.asarray(0, jnp.int32)), scanned,
+        unroll=cfg.scan_unroll)
+
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype), cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = (x[:, 0] @ head.astype(cfg.dtype)).astype(jnp.float32)
+    if cfg.final_softcap > 0:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+
+    if has_local:
+        new_cache = {"k": new_caches["ck"]["global"],
+                     "v": new_caches["cv"]["global"],
+                     "k_local": new_caches["ck"]["local"],
+                     "v_local": new_caches["cv"]["local"]}
+    else:
+        new_cache = {"k": new_caches["ck"], "v": new_caches["cv"]}
+    return logits, new_cache

@@ -1,0 +1,120 @@
+"""Executed by test_multidevice.py in a subprocess with 8 host devices.
+
+Proves the distribution layer RUNS (not just compiles): sharded LM train
+step, vertex-sharded dynamic graph, elastic checkpoint restore across mesh
+shapes.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+assert len(jax.devices()) == 8, jax.devices()
+
+# ---------------------------------------------------------------------------
+# 1. sharded LM train step actually runs
+# ---------------------------------------------------------------------------
+from repro.configs import get_arch
+from repro.distributed.sharding import sharding_rules
+from repro.launch.steps import build_lm_train_step, lm_param_specs, lm_opt_specs
+from repro.models import transformer as tfm
+from repro.train import optimizer as opt
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+cfg = get_arch("gemma2-9b").smoke_config()
+key = jax.random.PRNGKey(0)
+params = tfm.init_params(cfg, key)
+ostate = opt.init(params)
+toks = jax.random.randint(key, (8, 16), 0, cfg.vocab_size)
+labels = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0,
+                            cfg.vocab_size)
+
+# smoke dims aren't 16-divisible → replicate params, shard batch only
+pspec = jax.tree.map(lambda _: P(), params)
+ospec = jax.tree.map(lambda _: P(), ostate)
+with sharding_rules(mesh, {"act_btd": P("data", None, None),
+                           "logits": P("data", None, None),
+                           "moe_ecd": None}):
+    step = jax.jit(build_lm_train_step(cfg),
+                   in_shardings=(jax.tree.map(lambda s: NamedSharding(mesh, s), pspec),
+                                 jax.tree.map(lambda s: NamedSharding(mesh, s), ospec),
+                                 NamedSharding(mesh, P("data", None)),
+                                 NamedSharding(mesh, P("data", None))))
+    with mesh:
+        p2, o2, loss = step(params, ostate, toks, labels)
+loss_sharded = float(loss)
+p2u, o2u, loss_unsharded = jax.jit(build_lm_train_step(cfg))(
+    params, ostate, toks, labels)
+assert np.isfinite(loss_sharded)
+assert abs(loss_sharded - float(loss_unsharded)) < 1e-3, \
+    (loss_sharded, float(loss_unsharded))
+print("OK sharded LM train step: loss", loss_sharded)
+
+# ---------------------------------------------------------------------------
+# 2. vertex-sharded dynamic graph on the device grid
+# ---------------------------------------------------------------------------
+from repro.core import from_edges_host, query_edges
+from repro.distributed.sharded_graph import (insert_edges_sharded,
+                                             pagerank_sharded,
+                                             query_edges_sharded, shard_empty)
+import dataclasses
+
+rng = np.random.default_rng(0)
+V, S = 256, 8
+src = rng.integers(0, V, 2000).astype(np.uint32)
+dst = rng.integers(0, V, 2000).astype(np.uint32)
+keep = src != dst
+src, dst = src[keep], dst[keep]
+
+sg = shard_empty(V, S, capacity_slabs_per_shard=256)
+# place every shard's arrays across the 8 devices (leading dim = shard)
+flat_mesh = jax.make_mesh((8,), ("shard",))
+def place(x):
+    if x.ndim == 0:
+        return x
+    return jax.device_put(x, NamedSharding(flat_mesh, P(*(("shard",) + (None,) * (x.ndim - 1)))))
+sg = dataclasses.replace(sg, graphs=jax.tree.map(place, sg.graphs))
+
+sg, ins = insert_edges_sharded(sg, jnp.asarray(dst), jnp.asarray(src))
+g_ref = from_edges_host(V, dst, src, hashing=False)
+qs = rng.integers(0, V, 128).astype(np.uint32)
+qd = rng.integers(0, V, 128).astype(np.uint32)
+got = query_edges_sharded(sg, jnp.asarray(qs), jnp.asarray(qd))
+want = query_edges(g_ref, jnp.asarray(qs), jnp.asarray(qd))
+assert np.array_equal(np.asarray(got), np.asarray(want))
+
+uniq = set(zip(src.tolist(), dst.tolist()))
+out_deg = np.zeros(V, np.int32)
+for s, _ in uniq:
+    out_deg[s] += 1
+from repro.algorithms import pagerank
+pr_sharded, _ = pagerank_sharded(sg, jnp.asarray(out_deg), max_iter=60)
+pr_ref, _ = pagerank(g_ref, jnp.asarray(out_deg), max_iter=60)
+assert np.allclose(np.asarray(pr_sharded), np.asarray(pr_ref), atol=1e-5)
+print("OK sharded dynamic graph: query + pagerank match global reference")
+
+# ---------------------------------------------------------------------------
+# 3. elastic restore: checkpoint from one mesh, restore onto another
+# ---------------------------------------------------------------------------
+import tempfile
+from repro.checkpoint import ckpt
+
+with tempfile.TemporaryDirectory() as td:
+    tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    mesh_a = jax.make_mesh((4, 2), ("data", "model"))
+    placed = jax.device_put(tree["w"],
+                            NamedSharding(mesh_a, P("data", "model")))
+    ckpt.save(td, 1, {"w": placed})
+    mesh_b = jax.make_mesh((2, 4), ("data", "model"))
+    shardings = {"w": NamedSharding(mesh_b, P("model", "data"))}
+    restored, _ = ckpt.restore(td, tree, shardings=shardings)
+    assert np.array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+    assert restored["w"].sharding.mesh.shape == {"data": 2, "model": 4}
+print("OK elastic restore across mesh shapes")
+print("ALL MULTIDEVICE CHECKS PASSED")

@@ -1,0 +1,376 @@
+"""Dynamic algorithm tests against networkx / brute-force oracles."""
+import networkx as nx
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import from_edges_host, insert_edges, delete_edges, empty, \
+    update_slab_pointers, ensure_capacity
+from repro.algorithms import (INF, UNREACHED, bfs_decremental,
+                              bfs_incremental, bfs_tree_static, bfs_vanilla,
+                              count_components, init_state, pagerank,
+                              pagerank_dynamic, sssp_decremental,
+                              sssp_incremental, sssp_static,
+                              triangles_decremental, triangles_incremental,
+                              triangles_static, wcc_incremental_batch,
+                              wcc_incremental_naive,
+                              wcc_incremental_slab_iterator,
+                              wcc_incremental_update_iterator, wcc_static)
+
+SEED = 7
+
+
+def rand_digraph(n=60, m=300, seed=SEED, weighted=False):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m).astype(np.uint32)
+    dst = rng.integers(0, n, m).astype(np.uint32)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    # dedup (keep first) so weight choice is unambiguous across oracles
+    _, idx = np.unique(src.astype(np.uint64) << np.uint64(32) | dst,
+                       return_index=True)
+    idx.sort()
+    src, dst = src[idx], dst[idx]
+    w = rng.uniform(0.5, 4.0, len(src)).astype(np.float32) if weighted else None
+    return n, src, dst, w
+
+
+def to_nx(n, src, dst, w=None, directed=True):
+    G = nx.DiGraph() if directed else nx.Graph()
+    G.add_nodes_from(range(n))
+    if w is None:
+        G.add_edges_from(zip(src.tolist(), dst.tolist()))
+    else:
+        G.add_weighted_edges_from(zip(src.tolist(), dst.tolist(), w.tolist()))
+    return G
+
+
+def max_bpv(g):
+    return int(np.max(np.asarray(g.bucket_count)))
+
+
+def pad_edges(src, dst, B, w=None):
+    ps = np.full(B, 0xFFFFFFFF, np.uint32)
+    pd = np.full(B, 0xFFFFFFFF, np.uint32)
+    ps[:len(src)] = src
+    pd[:len(dst)] = dst
+    out = [jnp.asarray(ps), jnp.asarray(pd)]
+    if w is not None:
+        pw = np.zeros(B, np.float32)
+        pw[:len(w)] = w
+        out.append(jnp.asarray(pw))
+    out.append(jnp.asarray(np.arange(B) < len(src)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# BFS
+# ---------------------------------------------------------------------------
+class TestBFS:
+    def test_vanilla_matches_nx(self):
+        n, src, dst, _ = rand_digraph()
+        g = from_edges_host(n, src, dst, hashing=False)
+        dist, _ = bfs_vanilla(g, src=0, edge_capacity=2048)
+        ref = nx.single_source_shortest_path_length(to_nx(n, src, dst), 0)
+        dist = np.asarray(dist)
+        for v in range(n):
+            if v in ref:
+                assert dist[v] == ref[v], v
+            else:
+                assert dist[v] == int(UNREACHED), v
+
+    def test_tree_matches_vanilla(self):
+        n, src, dst, _ = rand_digraph(seed=11)
+        g = from_edges_host(n, src, dst, hashing=False)
+        state, _ = bfs_tree_static(g, 0, edge_capacity=2048)
+        dist_v, _ = bfs_vanilla(g, src=0, edge_capacity=2048)
+        dv = np.asarray(dist_v).astype(np.float64)
+        dt = np.asarray(state.dist)
+        reach = dv < int(UNREACHED)
+        assert np.allclose(dt[reach], dv[reach])
+        assert (dt[~reach] >= 1e29).all()
+        # parent validity: dist[parent] + 1 == dist
+        par = np.asarray(state.parent)
+        for v in np.nonzero(reach)[0]:
+            if v == 0:
+                assert par[v] == 0
+            else:
+                assert dt[par[v]] + 1 == dt[v]
+
+    def test_incremental_matches_recompute(self):
+        n, src, dst, _ = rand_digraph(n=50, m=150, seed=3)
+        g = from_edges_host(n, src, dst, hashing=False, slack_slabs=256)
+        state, _ = bfs_tree_static(g, 0, edge_capacity=2048)
+        rng = np.random.default_rng(5)
+        bs = rng.integers(0, n, 20).astype(np.uint32)
+        bd = rng.integers(0, n, 20).astype(np.uint32)
+        g = ensure_capacity(g, 64)
+        g, ins = insert_edges(g, *pad_edges(bs, bd, 32)[:2])
+        s, d, m = pad_edges(bs, bd, 32)[0], pad_edges(bs, bd, 32)[1], None
+        bmask = jnp.asarray(np.arange(32) < 20)
+        state2, _ = bfs_incremental(g, state, s, d, bmask, edge_capacity=4096)
+        fresh, _ = bfs_tree_static(g, 0, edge_capacity=4096)
+        assert np.allclose(np.asarray(state2.dist), np.asarray(fresh.dist))
+
+    def test_decremental_matches_recompute(self):
+        n, src, dst, _ = rand_digraph(n=50, m=200, seed=13)
+        g = from_edges_host(n, src, dst, hashing=False, slack_slabs=64)
+        state, _ = bfs_tree_static(g, 0, edge_capacity=4096)
+        # delete a slice of existing edges
+        idx = np.arange(0, len(src), 7)
+        bs, bd = src[idx], dst[idx]
+        B = int(2 ** np.ceil(np.log2(len(bs) + 1)))
+        ps, pd, bmask = pad_edges(bs, bd, B)
+        g, _ = delete_edges(g, ps, pd)
+        state2, _ = bfs_decremental(g, state, ps, pd, bmask, src=0,
+                                    edge_capacity=4096)
+        fresh, _ = bfs_tree_static(g, 0, edge_capacity=4096)
+        assert np.allclose(np.asarray(state2.dist), np.asarray(fresh.dist))
+
+
+# ---------------------------------------------------------------------------
+# SSSP
+# ---------------------------------------------------------------------------
+class TestSSSP:
+    def test_static_matches_dijkstra(self):
+        n, src, dst, w = rand_digraph(weighted=True)
+        g = from_edges_host(n, src, dst, w, hashing=False)
+        state, _ = sssp_static(g, 0, edge_capacity=4096)
+        ref = nx.single_source_dijkstra_path_length(to_nx(n, src, dst, w), 0)
+        dist = np.asarray(state.dist)
+        for v in range(n):
+            if v in ref:
+                assert abs(dist[v] - ref[v]) < 1e-4, v
+            else:
+                assert dist[v] >= 1e29
+
+    def test_incremental_matches_recompute(self):
+        n, src, dst, w = rand_digraph(n=40, m=120, seed=21, weighted=True)
+        g = from_edges_host(n, src, dst, w, hashing=False, slack_slabs=128)
+        state, _ = sssp_static(g, 0, edge_capacity=4096)
+        rng = np.random.default_rng(22)
+        bs = rng.integers(0, n, 16).astype(np.uint32)
+        bd = rng.integers(0, n, 16).astype(np.uint32)
+        bw = rng.uniform(0.1, 1.0, 16).astype(np.float32)
+        ps, pd, pw, bmask = pad_edges(bs, bd, 16, bw)
+        g = ensure_capacity(g, 64)
+        g, _ = insert_edges(g, ps, pd, pw)
+        state2, _ = sssp_incremental(g, state, ps, pd, pw, bmask,
+                                     edge_capacity=4096)
+        fresh, _ = sssp_static(g, 0, edge_capacity=4096)
+        assert np.allclose(np.asarray(state2.dist), np.asarray(fresh.dist),
+                           atol=1e-4)
+
+    def test_decremental_matches_recompute(self):
+        n, src, dst, w = rand_digraph(n=40, m=160, seed=31, weighted=True)
+        g = from_edges_host(n, src, dst, w, hashing=False, slack_slabs=64)
+        state, _ = sssp_static(g, 0, edge_capacity=4096)
+        idx = np.arange(0, len(src), 5)
+        bs, bd = src[idx], dst[idx]
+        B = 64
+        ps, pd, bmask = pad_edges(bs, bd, B)
+        g, _ = delete_edges(g, ps, pd)
+        state2, _ = sssp_decremental(g, state, ps, pd, bmask, src=0,
+                                     edge_capacity=4096)
+        fresh, _ = sssp_static(g, 0, edge_capacity=4096)
+        assert np.allclose(np.asarray(state2.dist), np.asarray(fresh.dist),
+                           atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# PageRank
+# ---------------------------------------------------------------------------
+def np_pagerank(n, src, dst, damping=0.85, iters=200):
+    """Dense oracle matching Alg. 5's teleport handling."""
+    A = np.zeros((n, n))
+    for s, d in set(zip(src.tolist(), dst.tolist())):
+        A[s, d] = 1.0
+    out = A.sum(1)
+    pr = np.full(n, 1.0 / n)
+    for _ in range(iters):
+        contrib = np.where(out > 0, pr / np.maximum(out, 1), 0.0)
+        new = (1 - damping) / n + damping * (A.T @ contrib)
+        new += damping * pr[out == 0].sum() / n
+        pr = new
+    return pr
+
+
+class TestPageRank:
+    def test_static_matches_dense_oracle(self):
+        n, src, dst, _ = rand_digraph(n=40, m=200, seed=41)
+        # in-edge graph: store (dst -> src)
+        g_in = from_edges_host(n, dst, src, hashing=False)
+        uniq = set(zip(src.tolist(), dst.tolist()))
+        out_deg = np.zeros(n, np.int32)
+        for s, _ in uniq:
+            out_deg[s] += 1
+        pr, iters = pagerank(g_in, jnp.asarray(out_deg), max_iter=200)
+        ref = np_pagerank(n, src, dst)
+        assert np.allclose(np.asarray(pr), ref, atol=1e-4)
+        assert abs(float(np.asarray(pr).sum()) - 1.0) < 1e-3
+
+    def test_dynamic_warm_start_fewer_iters(self):
+        n, src, dst, _ = rand_digraph(n=60, m=400, seed=43)
+        g_in = from_edges_host(n, dst, src, hashing=False, slack_slabs=64)
+        uniq = set(zip(src.tolist(), dst.tolist()))
+        out_deg = np.zeros(n, np.int32)
+        for s, _ in uniq:
+            out_deg[s] += 1
+        pr, it_static = pagerank(g_in, jnp.asarray(out_deg))
+        # small batch of new in-edges
+        rng = np.random.default_rng(44)
+        bs = rng.integers(0, n, 8).astype(np.uint32)
+        bd = rng.integers(0, n, 8).astype(np.uint32)
+        keep = bs != bd
+        bs, bd = bs[keep], bd[keep]
+        ps, pd, bmask = pad_edges(bd, bs, 8)  # in-edge orientation
+        g_in, ins = insert_edges(g_in, ps, pd)
+        for s, d in zip(bs.tolist(), bd.tolist()):
+            if (s, d) not in uniq:
+                uniq.add((s, d))
+                out_deg[s] += 1
+        pr_dyn, it_dyn = pagerank_dynamic(g_in, jnp.asarray(out_deg), pr)
+        pr_cold, it_cold = pagerank(g_in, jnp.asarray(out_deg))
+        assert np.allclose(np.asarray(pr_dyn), np.asarray(pr_cold), atol=5e-4)
+        assert int(it_dyn) <= int(it_cold)
+
+
+# ---------------------------------------------------------------------------
+# Triangle counting
+# ---------------------------------------------------------------------------
+def brute_triangles(n, und_edges):
+    A = np.zeros((n, n), dtype=np.int64)
+    for u, v in und_edges:
+        A[u, v] = A[v, u] = 1
+    np.fill_diagonal(A, 0)
+    return int(np.trace(A @ A @ A) // 6)
+
+
+def und_graph(n, pairs, slack=256):
+    pairs = {(min(u, v), max(u, v)) for u, v in pairs if u != v}
+    src = np.array([p[0] for p in pairs] + [p[1] for p in pairs], np.uint32)
+    dst = np.array([p[1] for p in pairs] + [p[0] for p in pairs], np.uint32)
+    return from_edges_host(n, src, dst, hashing=True, slack_slabs=slack), pairs
+
+
+class TestTriangles:
+    def test_static(self):
+        rng = np.random.default_rng(51)
+        n = 30
+        pairs = list(zip(rng.integers(0, n, 120), rng.integers(0, n, 120)))
+        g, uniq = und_graph(n, pairs)
+        got = int(triangles_static(g, max_bpv=max_bpv(g)))
+        assert got == brute_triangles(n, uniq)
+
+    def test_incremental(self):
+        rng = np.random.default_rng(53)
+        n = 25
+        base = list(zip(rng.integers(0, n, 80), rng.integers(0, n, 80)))
+        g, uniq0 = und_graph(n, base)
+        t0 = brute_triangles(n, uniq0)
+        batch = []
+        for u, v in zip(rng.integers(0, n, 12), rng.integers(0, n, 12)):
+            u, v = int(u), int(v)
+            if u != v and (min(u, v), max(u, v)) not in uniq0:
+                batch.append((min(u, v), max(u, v)))
+        batch = list(set(batch))
+        bs = np.array([p[0] for p in batch] + [p[1] for p in batch], np.uint32)
+        bd = np.array([p[1] for p in batch] + [p[0] for p in batch], np.uint32)
+        B = 64
+        ps, pd, bmask_all = pad_edges(bs, bd, B)
+        g = ensure_capacity(g, 128)
+        g_new, _ = insert_edges(g, ps, pd)
+        g_batch = from_edges_host(n, bs, bd, hashing=True)
+        # batch passed once per undirected edge (helper adds both orientations)
+        ps1, pd1, bm1 = pad_edges(np.array([p[0] for p in batch], np.uint32),
+                                  np.array([p[1] for p in batch], np.uint32), 32)
+        delta = int(triangles_incremental(
+            g_new, g_batch, ps1, pd1, bm1,
+            max_bpv=max(max_bpv(g_new), max_bpv(g_batch))))
+        t1 = brute_triangles(n, uniq0 | set(batch))
+        assert delta == t1 - t0
+
+    def test_decremental(self):
+        rng = np.random.default_rng(55)
+        n = 25
+        base = list(zip(rng.integers(0, n, 140), rng.integers(0, n, 140)))
+        g, uniq0 = und_graph(n, base)
+        t0 = brute_triangles(n, uniq0)
+        batch = list(uniq0)[::6]
+        bs = np.array([p[0] for p in batch] + [p[1] for p in batch], np.uint32)
+        bd = np.array([p[1] for p in batch] + [p[0] for p in batch], np.uint32)
+        ps, pd, _ = pad_edges(bs, bd, 128)
+        g_post, _ = delete_edges(g, ps, pd)
+        g_batch = from_edges_host(n, bs, bd, hashing=True)
+        ps1, pd1, bm1 = pad_edges(np.array([p[0] for p in batch], np.uint32),
+                                  np.array([p[1] for p in batch], np.uint32), 64)
+        delta = int(triangles_decremental(
+            g_post, g_batch, ps1, pd1, bm1,
+            max_bpv=max(max_bpv(g_post), max_bpv(g_batch))))
+        t1 = brute_triangles(n, uniq0 - set(batch))
+        assert delta == t0 - t1
+
+
+# ---------------------------------------------------------------------------
+# WCC
+# ---------------------------------------------------------------------------
+def same_partition(labels, nxG):
+    comp_of = {}
+    for i, comp in enumerate(nx.weakly_connected_components(nxG)):
+        for v in comp:
+            comp_of[v] = i
+    labels = np.asarray(labels)
+    seen = {}
+    for v in range(len(labels)):
+        key = (labels[v],)
+        if comp_of[v] in seen:
+            if seen[comp_of[v]] != labels[v]:
+                return False
+        else:
+            seen[comp_of[v]] = labels[v]
+    return len(set(seen.values())) == len(seen)
+
+
+class TestWCC:
+    def test_static(self):
+        n, src, dst, _ = rand_digraph(n=80, m=120, seed=61)
+        # undirected semantics: insert both orientations
+        s2 = np.concatenate([src, dst])
+        d2 = np.concatenate([dst, src])
+        g = from_edges_host(n, s2, d2, hashing=True)
+        labels = wcc_static(g)
+        assert same_partition(labels, to_nx(n, src, dst))
+        assert count_components(labels) == \
+            nx.number_weakly_connected_components(to_nx(n, src, dst))
+
+    def test_incremental_all_schemes_agree(self):
+        n = 60
+        rng = np.random.default_rng(63)
+        src = rng.integers(0, n, 60).astype(np.uint32)
+        dst = rng.integers(0, n, 60).astype(np.uint32)
+        keep = src != dst
+        src, dst = src[keep], dst[keep]
+        s2, d2 = np.concatenate([src, dst]), np.concatenate([dst, src])
+        g = from_edges_host(n, s2, d2, hashing=True, slack_slabs=256)
+        labels = wcc_static(g)
+        g = update_slab_pointers(g)
+
+        bs = rng.integers(0, n, 10).astype(np.uint32)
+        bd = rng.integers(0, n, 10).astype(np.uint32)
+        keep = bs != bd
+        bs, bd = bs[keep], bd[keep]
+        b2s, b2d = np.concatenate([bs, bd]), np.concatenate([bd, bs])
+        ps, pd, bmask = pad_edges(b2s, b2d, 32)
+        g = ensure_capacity(g, 64)
+        g, _ = insert_edges(g, ps, pd)
+
+        nxg = to_nx(n, np.concatenate([src, bs]), np.concatenate([dst, bd]))
+        for fn in (lambda l, gg: wcc_incremental_naive(l, gg),
+                   lambda l, gg: wcc_incremental_slab_iterator(l, gg,
+                                                               cap=4096),
+                   lambda l, gg: wcc_incremental_update_iterator(l, gg,
+                                                                 cap=256)):
+            lab = fn(labels, g)
+            assert same_partition(lab, nxg)
+        lab = wcc_incremental_batch(labels, ps, pd, bmask)
+        assert same_partition(lab, nxg)

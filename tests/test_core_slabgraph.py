@@ -1,0 +1,271 @@
+"""Core SlabGraph tests: construction, insert/delete/query, iterators,
+update tracking, and a hypothesis property test against a set-of-edges oracle.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (EMPTY_KEY, INVALID_VERTEX, SLAB_WIDTH, TOMBSTONE_KEY,
+                        SlabGraph, csr_snapshot, delete_edges, empty,
+                        ensure_capacity, expand_vertices, from_edges_host,
+                        insert_edges, occupancy_stats, plan_buckets,
+                        pool_edges, query_edges, slab_iterator,
+                        update_iterator, update_slab_pointers,
+                        updated_lane_mask, updated_vertices)
+
+
+def pad(arr, n, fill=0xFFFFFFFF):
+    a = np.full(n, fill, dtype=np.uint32)
+    a[:len(arr)] = arr
+    return jnp.asarray(a)
+
+
+def make_graph(n_vertices=32, hashing=True, weighted=False, capacity=256):
+    bc = plan_buckets(n_vertices, np.zeros(n_vertices), hashing=hashing)
+    if hashing:
+        bc = np.full(n_vertices, 2, dtype=np.int32)  # exercise multi-bucket
+    return empty(n_vertices, bc, capacity, weighted=weighted)
+
+
+def edges_in_graph(g):
+    """Read back all (src,dst) pairs from the pool."""
+    view = pool_edges(g)
+    src = np.asarray(view.src)[np.asarray(view.valid)]
+    dst = np.asarray(view.dst)[np.asarray(view.valid)]
+    return set(zip(src.tolist(), dst.astype(np.int64).tolist()))
+
+
+class TestInsert:
+    def test_simple_insert(self):
+        g = make_graph()
+        src = pad([0, 0, 1], 8)
+        dst = pad([1, 2, 3], 8)
+        g2, ins = insert_edges(g, src, dst)
+        assert np.asarray(ins)[:3].all()
+        assert not np.asarray(ins)[3:].any()
+        assert edges_in_graph(g2) == {(0, 1), (0, 2), (1, 3)}
+        assert int(g2.n_edges) == 3
+        assert np.asarray(g2.degree)[:2].tolist() == [2, 1]
+
+    def test_duplicate_in_batch(self):
+        g = make_graph()
+        src = pad([0, 0, 0], 4)
+        dst = pad([5, 5, 5], 4)
+        g2, ins = insert_edges(g, src, dst)
+        assert int(np.asarray(ins).sum()) == 1
+        assert int(g2.n_edges) == 1
+
+    def test_duplicate_across_batches(self):
+        g = make_graph()
+        g, _ = insert_edges(g, pad([0], 4), pad([5], 4))
+        g, ins = insert_edges(g, pad([0, 0], 4), pad([5, 6], 4))
+        assert np.asarray(ins).tolist()[:2] == [False, True]
+        assert edges_in_graph(g) == {(0, 5), (0, 6)}
+
+    def test_slab_overflow_chains(self):
+        """More neighbors than one slab holds -> chained slabs."""
+        g = make_graph(n_vertices=4, hashing=False, capacity=64)
+        n = SLAB_WIDTH + 40
+        src = pad([0] * n, 512)
+        dst = pad(list(range(1, n + 1)), 512)  # vertex ids beyond V are fine as keys? no
+        # keep dst within vertex range by using a bigger graph
+        g = empty(300, np.ones(300, np.int32), 512)
+        src = pad([0] * n, 512)
+        g2, ins = insert_edges(g, src, dst)
+        assert int(np.asarray(ins).sum()) == n
+        nbrs, cnt = slab_iterator(g2, jnp.asarray(0), max_neighbors=512)
+        assert int(cnt) == n
+        got = set(np.asarray(nbrs)[:n].astype(np.int64).tolist())
+        assert got == set(range(1, n + 1))
+        # exactly one overflow slab allocated
+        assert int(g2.next_free) == g2.n_buckets + 1
+
+    def test_insert_weighted(self):
+        g = make_graph(weighted=True)
+        g2, _ = insert_edges(g, pad([1, 2], 4), pad([3, 4], 4),
+                             jnp.asarray([0.5, 1.5, 0, 0], jnp.float32))
+        view = pool_edges(g2)
+        valid = np.asarray(view.valid)
+        w = np.asarray(view.weight)[valid]
+        d = np.asarray(view.dst)[valid]
+        assert sorted(zip(d.tolist(), w.tolist())) == [(3, 0.5), (4, 1.5)]
+
+
+class TestDeleteQuery:
+    def test_delete_marks_tombstone(self):
+        g = make_graph()
+        g, _ = insert_edges(g, pad([0, 0], 4), pad([1, 2], 4))
+        g, dele = delete_edges(g, pad([0], 4), pad([1], 4))
+        assert np.asarray(dele)[0]
+        assert edges_in_graph(g) == {(0, 2)}
+        assert int(g.n_edges) == 1
+        assert int(g.degree[0]) == 1
+        # tombstone present in pool
+        assert (np.asarray(g.keys) == np.uint32(TOMBSTONE_KEY)).sum() == 1
+
+    def test_delete_missing_is_noop(self):
+        g = make_graph()
+        g, _ = insert_edges(g, pad([0], 4), pad([1], 4))
+        g2, dele = delete_edges(g, pad([0, 5], 4), pad([9, 9], 4))
+        assert not np.asarray(dele).any()
+        assert int(g2.n_edges) == 1
+
+    def test_query(self):
+        g = make_graph()
+        g, _ = insert_edges(g, pad([0, 1, 2], 8), pad([3, 4, 5], 8))
+        found = query_edges(g, pad([0, 1, 2, 0], 8), pad([3, 4, 9, 4], 8))
+        assert np.asarray(found)[:4].tolist() == [True, True, False, False]
+
+    def test_reinsert_after_delete(self):
+        g = make_graph()
+        g, _ = insert_edges(g, pad([0], 4), pad([1], 4))
+        g, _ = delete_edges(g, pad([0], 4), pad([1], 4))
+        assert not bool(np.asarray(query_edges(g, pad([0], 4), pad([1], 4)))[0])
+        g, ins = insert_edges(g, pad([0], 4), pad([1], 4))
+        assert bool(np.asarray(ins)[0])
+        assert bool(np.asarray(query_edges(g, pad([0], 4), pad([1], 4)))[0])
+
+
+class TestUpdateIterator:
+    def test_update_tracking(self):
+        g = make_graph()
+        g, _ = insert_edges(g, pad([0, 1], 4), pad([2, 3], 4))
+        g = update_slab_pointers(g)  # close epoch
+        assert not bool(np.asarray(updated_lane_mask(g)).any())
+        g, _ = insert_edges(g, pad([0, 5], 4), pad([7, 8], 4))
+        mask = np.asarray(updated_lane_mask(g))
+        keys = np.asarray(g.keys)
+        got = set(keys[mask].astype(np.int64).tolist())
+        assert got == {7, 8}
+        uv = np.asarray(updated_vertices(g))
+        assert uv[0] and uv[5] and not uv[1]
+
+    def test_update_iterator_per_vertex(self):
+        g = make_graph()
+        g, _ = insert_edges(g, pad([0], 4), pad([2], 4))
+        g = update_slab_pointers(g)
+        g, _ = insert_edges(g, pad([0, 0], 4), pad([9, 10], 4))
+        nbrs, cnt = update_iterator(g, jnp.asarray(0), max_neighbors=16)
+        assert int(cnt) == 2
+        assert set(np.asarray(nbrs)[:2].astype(np.int64).tolist()) == {9, 10}
+
+    def test_update_spans_new_slab(self):
+        g = empty(10, np.ones(10, np.int32), 64)
+        fill = [int(x) for x in range(1, SLAB_WIDTH - 1)]  # 126 edges... keep ids < 10? keys can be any uint32 id < n? dst ids are graph vertices
+        g = empty(500, np.ones(500, np.int32), 64)
+        g, _ = insert_edges(g, pad([0] * 126, 256), pad(list(range(1, 127)), 256))
+        g = update_slab_pointers(g)
+        g, _ = insert_edges(g, pad([0] * 6, 16), pad(list(range(200, 206)), 16))
+        nbrs, cnt = update_iterator(g, jnp.asarray(0), max_neighbors=256)
+        assert int(cnt) == 6
+        assert set(np.asarray(nbrs)[:6].astype(np.int64).tolist()) == set(range(200, 206))
+
+
+class TestExpandAndSnapshot:
+    def test_expand_vertices(self):
+        g = make_graph(weighted=True)
+        g, _ = insert_edges(g, pad([0, 0, 1], 8), pad([2, 3, 4], 8),
+                            jnp.asarray([1., 2., 3., 0, 0, 0, 0, 0], jnp.float32))
+        ef = expand_vertices(g, jnp.asarray([0, 1], jnp.uint32),
+                             jnp.asarray([True, True]), out_capacity=32,
+                             max_bpv=2)
+        n = int(ef.size)
+        assert n == 3
+        edges = set()
+        for i in range(n):
+            edges.add((int(ef.src[i]), int(ef.dst[i]), float(ef.weight[i])))
+        assert edges == {(0, 2, 1.0), (0, 3, 2.0), (1, 4, 3.0)}
+
+    def test_expand_respects_mask(self):
+        g = make_graph()
+        g, _ = insert_edges(g, pad([0, 1], 4), pad([2, 3], 4))
+        ef = expand_vertices(g, jnp.asarray([0, 1], jnp.uint32),
+                             jnp.asarray([True, False]), out_capacity=8,
+                             max_bpv=2)
+        assert int(ef.size) == 1
+        assert int(ef.dst[0]) == 2
+
+    def test_csr_snapshot(self):
+        rng = np.random.default_rng(0)
+        src = rng.integers(0, 50, 300).astype(np.uint32)
+        dst = rng.integers(0, 50, 300).astype(np.uint32)
+        g = from_edges_host(50, src, dst, hashing=True)
+        csr = csr_snapshot(g, max_edges=512)
+        indptr = np.asarray(csr.indptr)
+        indices = np.asarray(csr.indices)
+        uniq = set(zip(src.tolist(), dst.tolist()))
+        assert int(csr.n_edges) == len(uniq)
+        rebuilt = set()
+        for v in range(50):
+            for i in range(indptr[v], indptr[v + 1]):
+                rebuilt.add((v, int(indices[i])))
+        assert rebuilt == uniq
+
+
+class TestHostBuild:
+    def test_from_edges_host_matches_insert(self):
+        rng = np.random.default_rng(1)
+        src = rng.integers(0, 40, 500).astype(np.uint32)
+        dst = rng.integers(0, 40, 500).astype(np.uint32)
+        gh = from_edges_host(40, src, dst, hashing=True)
+        # same edges through the jit insert path
+        bc = np.asarray(gh.bucket_count)
+        gi = empty(40, bc, int(gh.capacity_slabs))
+        gi, _ = insert_edges(gi, pad(src, 512), pad(dst, 512))
+        assert edges_in_graph(gh) == edges_in_graph(gi)
+        assert int(gh.n_edges) == int(gi.n_edges)
+        assert np.array_equal(np.asarray(gh.degree), np.asarray(gi.degree))
+
+    def test_memory_savings_model(self):
+        """Pooled head slabs vs per-vertex allocation (paper Table 5)."""
+        rng = np.random.default_rng(2)
+        src = rng.integers(0, 1000, 3000).astype(np.uint32)
+        dst = rng.integers(0, 1000, 3000).astype(np.uint32)
+        g = from_edges_host(1000, src, dst, hashing=True)
+        stats = occupancy_stats(g)
+        assert 0.0 < stats["occupancy"] <= 1.0
+        assert stats["allocated_slabs"] <= stats["capacity_slabs"]
+
+
+class TestEnsureCapacity:
+    def test_grow_preserves_contents(self):
+        g = make_graph(capacity=70)  # 64 head slabs + small slack
+        g, _ = insert_edges(g, pad([0, 1], 4), pad([2, 3], 4))
+        before = edges_in_graph(g)
+        g2 = ensure_capacity(g, 512)
+        assert g2.capacity_slabs - int(g2.next_free) >= 512
+        assert edges_in_graph(g2) == before
+        g3, ins = insert_edges(g2, pad([5], 4), pad([6], 4))
+        assert bool(np.asarray(ins)[0])
+
+
+# ---------------------------------------------------------------------------
+# Property test: random interleavings of insert/delete vs a set oracle
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.lists(
+    st.tuples(st.sampled_from(["ins", "del"]),
+              st.lists(st.tuples(st.integers(0, 15), st.integers(0, 15)),
+                       min_size=1, max_size=8)),
+    min_size=1, max_size=6))
+def test_property_matches_set_oracle(ops):
+    g = empty(16, np.full(16, 2, np.int32), 256)
+    oracle = set()
+    B = 8
+    for kind, pairs in ops:
+        src = pad([p[0] for p in pairs], B)
+        dst = pad([p[1] for p in pairs], B)
+        if kind == "ins":
+            g, _ = insert_edges(g, src, dst)
+            oracle |= set(pairs)
+        else:
+            g, _ = delete_edges(g, src, dst)
+            oracle -= set(pairs)
+    assert edges_in_graph(g) == oracle
+    assert int(g.n_edges) == len(oracle)
+    deg = np.zeros(16, np.int64)
+    for s, _ in oracle:
+        deg[s] += 1
+    assert np.array_equal(np.asarray(g.degree, dtype=np.int64), deg)

@@ -1,0 +1,111 @@
+"""Self-consistency of the SO(3) algebra: SH ↔ Wigner-D ↔ CG ↔ frames."""
+import math
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.models.gnn.irreps import (align_to_z, clebsch_gordan_real,
+                                     real_sph_harm, wigner_d_real)
+
+L_MAX = 6
+
+
+def rand_rot(rng):
+    """Random rotation via QR of a Gaussian matrix (det forced +1)."""
+    M = rng.standard_normal((3, 3))
+    Q, _ = np.linalg.qr(M)
+    if np.linalg.det(Q) < 0:
+        Q[:, 0] *= -1
+    return Q
+
+
+def test_sph_harm_l1_is_yzx():
+    v = jnp.asarray([[0.3, -0.5, 0.81]])
+    Y = real_sph_harm(v, 1)
+    n = np.asarray(v[0] / np.linalg.norm(v[0]))
+    c = math.sqrt(3 / (4 * math.pi))
+    np.testing.assert_allclose(np.asarray(Y[1][0]),
+                               c * np.array([n[1], n[2], n[0]]), atol=1e-6)
+
+
+def test_sph_harm_orthonormal():
+    """Monte-Carlo: ∫ Y_i Y_j dΩ = δ_ij over the whole l ≤ 3 block."""
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal((200000, 3))
+    Y = real_sph_harm(jnp.asarray(v), 3)
+    flat = np.concatenate([np.asarray(y) for y in Y], axis=1)  # (N, 16)
+    gram = flat.T @ flat / len(v) * 4 * math.pi
+    np.testing.assert_allclose(gram, np.eye(16), atol=0.05)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_wigner_equivariance(seed):
+    """Y_l(R v) == D_l(R) @ Y_l(v) — the master consistency check."""
+    rng = np.random.default_rng(seed)
+    R = rand_rot(rng)
+    v = rng.standard_normal((32, 3))
+    Y_v = real_sph_harm(jnp.asarray(v), L_MAX)
+    Y_Rv = real_sph_harm(jnp.asarray(v @ R.T), L_MAX)
+    Ds = wigner_d_real(jnp.asarray(R), L_MAX)
+    for l in range(L_MAX + 1):
+        want = np.asarray(Y_Rv[l])
+        got = np.asarray(Y_v[l]) @ np.asarray(Ds[l]).T
+        np.testing.assert_allclose(got, want, atol=1e-4,
+                                   err_msg=f"l={l}")
+
+
+def test_wigner_composition_and_orthogonality():
+    rng = np.random.default_rng(3)
+    R1, R2 = rand_rot(rng), rand_rot(rng)
+    D1 = wigner_d_real(jnp.asarray(R1), L_MAX)
+    D2 = wigner_d_real(jnp.asarray(R2), L_MAX)
+    D12 = wigner_d_real(jnp.asarray(R1 @ R2), L_MAX)
+    for l in range(L_MAX + 1):
+        a = np.asarray(D1[l]) @ np.asarray(D2[l])
+        np.testing.assert_allclose(a, np.asarray(D12[l]), atol=1e-4)
+        eye = np.asarray(D1[l]) @ np.asarray(D1[l]).T
+        np.testing.assert_allclose(eye, np.eye(2 * l + 1), atol=1e-4)
+
+
+def test_wigner_batched():
+    rng = np.random.default_rng(4)
+    Rs = np.stack([rand_rot(rng) for _ in range(8)])
+    Ds = wigner_d_real(jnp.asarray(Rs), 2)
+    for i in range(8):
+        Di = wigner_d_real(jnp.asarray(Rs[i]), 2)
+        for l in range(3):
+            np.testing.assert_allclose(np.asarray(Ds[l][i]),
+                                       np.asarray(Di[l]), atol=1e-6)
+
+
+@pytest.mark.parametrize("l1,l2,l3", [(1, 1, 0), (1, 1, 1), (1, 1, 2),
+                                      (2, 1, 1), (2, 2, 2), (2, 2, 0),
+                                      (2, 1, 2), (2, 2, 1)])
+def test_cg_equivariance(l1, l2, l3):
+    """C·(D a ⊗ D b) == D (C·(a ⊗ b))."""
+    rng = np.random.default_rng(5)
+    C = clebsch_gordan_real(l1, l2, l3)
+    assert np.abs(C).max() > 1e-6, "CG identically zero"
+    R = rand_rot(rng)
+    Ds = wigner_d_real(jnp.asarray(R), max(l1, l2, l3))
+    a = rng.standard_normal(2 * l1 + 1)
+    b = rng.standard_normal(2 * l2 + 1)
+    lhs = np.einsum("ijk,i,j->k", C, np.asarray(Ds[l1]) @ a,
+                    np.asarray(Ds[l2]) @ b)
+    rhs = np.asarray(Ds[l3]) @ np.einsum("ijk,i,j->k", C, a, b)
+    np.testing.assert_allclose(lhs, rhs, atol=1e-5)
+
+
+def test_align_to_z():
+    rng = np.random.default_rng(6)
+    v = rng.standard_normal((64, 3))
+    v = np.concatenate([v, [[0, 0, 1.0]], [[0, 0, -1.0]]], axis=0)
+    R = np.asarray(align_to_z(jnp.asarray(v)))
+    n = v / np.linalg.norm(v, axis=-1, keepdims=True)
+    out = np.einsum("nij,nj->ni", R, n)
+    np.testing.assert_allclose(out, np.tile([0, 0, 1.0], (len(v), 1)),
+                               atol=1e-5)
+    # proper rotations
+    dets = np.linalg.det(R)
+    np.testing.assert_allclose(dets, np.ones(len(v)), atol=1e-5)

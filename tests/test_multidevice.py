@@ -1,0 +1,17 @@
+"""Multi-device integration: run tests/multidevice_script.py in a subprocess
+with 8 forced host devices (XLA device count is locked at first jax init, so
+this cannot run inside the main pytest process)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+
+def test_multidevice_integration():
+    script = Path(__file__).parent / "multidevice_script.py"
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, str(script)], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "ALL MULTIDEVICE CHECKS PASSED" in out.stdout

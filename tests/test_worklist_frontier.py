@@ -1,0 +1,144 @@
+"""Coverage for the iteration-primitive layer: updated_edges vs the
+lane-mask oracle, Frontier semantics, union-find properties (hypothesis)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (empty, ensure_capacity, insert_edges,
+                        update_slab_pointers)
+from repro.core.frontier import clear, enqueue, make_frontier, swap
+from repro.core.union_find import (component_labels, compress, init_parents,
+                                   union_batch)
+from repro.core.worklist import (expand_vertices, pool_edges,
+                                 updated_edges, updated_lane_mask)
+
+
+def pad(xs, n):
+    a = np.full(n, 0xFFFFFFFF, np.uint32)
+    a[:len(xs)] = xs
+    return jnp.asarray(a)
+
+
+# ---------------------------------------------------------------------------
+# updated_edges ≡ updated_lane_mask (the O(updates) walk vs the O(pool) mask)
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.lists(st.tuples(st.integers(0, 15), st.integers(0, 15)),
+                         min_size=1, max_size=10),
+                min_size=1, max_size=4),
+       st.integers(0, 3))
+def test_updated_edges_matches_mask_oracle(batches, epoch_after):
+    g = empty(16, np.full(16, 2, np.int32), 256)
+    for i, pairs in enumerate(batches):
+        if i == epoch_after:
+            g = update_slab_pointers(g)
+        src = pad([p[0] for p in pairs], 16)
+        dst = pad([p[1] for p in pairs], 16)
+        g = ensure_capacity(g, 32)
+        g, _ = insert_edges(g, src, dst)
+
+    # oracle: lanes selected by the O(pool) mask
+    mask = np.asarray(updated_lane_mask(g))
+    keys = np.asarray(g.keys)
+    owner = np.asarray(g.slab_vertex)
+    want = set()
+    for s, l in zip(*np.nonzero(mask)):
+        want.add((int(owner[s]), int(keys[s, l])))
+
+    ef = updated_edges(g, max_buckets=64, out_capacity=256)
+    n = int(ef.size)
+    got = {(int(ef.src[i]), int(ef.dst[i])) for i in range(n)}
+    assert got == want
+    assert not bool(ef.overflow)
+
+
+def test_updated_edges_overflow_flag():
+    g = empty(8, np.ones(8, np.int32), 64)
+    g = update_slab_pointers(g)
+    g, _ = insert_edges(g, pad([0] * 6, 8), pad([1, 2, 3, 4, 5, 6], 8))
+    ef = updated_edges(g, max_buckets=8, out_capacity=4)
+    assert bool(ef.overflow)
+    assert int(ef.size) == 4
+
+
+# ---------------------------------------------------------------------------
+# Frontier
+# ---------------------------------------------------------------------------
+class TestFrontier:
+    def test_enqueue_compaction(self):
+        f = make_frontier(8, 2, jnp.float32)
+        vals = jnp.asarray([[1, 10], [2, 20], [3, 30], [4, 40]], jnp.float32)
+        mask = jnp.asarray([True, False, True, True])
+        f = enqueue(f, vals, mask)
+        assert int(f.size) == 3
+        np.testing.assert_array_equal(np.asarray(f.data[:3, 0]), [1, 3, 4])
+        assert not bool(f.overflow)
+
+    def test_enqueue_overflow(self):
+        f = make_frontier(2, 1)
+        vals = jnp.ones((4, 1))
+        f = enqueue(f, vals, jnp.ones(4, bool))
+        assert bool(f.overflow)
+        assert int(f.size) == 2
+
+    def test_swap_clears_next(self):
+        a = make_frontier(4, 1)
+        a = enqueue(a, jnp.ones((2, 1)), jnp.ones(2, bool))
+        b = make_frontier(4, 1)
+        b = enqueue(b, jnp.ones((3, 1)), jnp.ones(3, bool))
+        cur, nxt = swap(a, b)
+        assert int(cur.size) == 3 and int(nxt.size) == 0
+
+
+# ---------------------------------------------------------------------------
+# union-find properties (hypothesis)
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 19), st.integers(0, 19)),
+                min_size=0, max_size=30))
+def test_union_find_matches_networkx(pairs):
+    import networkx as nx
+    n = 20
+    parent = init_parents(n)
+    B = 32
+    u = np.zeros(B, np.int32)
+    v = np.zeros(B, np.int32)
+    m = np.zeros(B, bool)
+    for i, (a, b) in enumerate(pairs[:B]):
+        u[i], v[i], m[i] = a, b, True
+    parent = union_batch(parent, jnp.asarray(u), jnp.asarray(v),
+                         jnp.asarray(m))
+    labels = np.asarray(component_labels(parent))
+
+    G = nx.Graph()
+    G.add_nodes_from(range(n))
+    G.add_edges_from(pairs)
+    for comp in nx.connected_components(G):
+        comp = sorted(comp)
+        assert len({labels[c] for c in comp}) == 1
+        # representative is the min vertex id (union-by-min invariant)
+        assert labels[comp[0]] == comp[0]
+
+
+# ---------------------------------------------------------------------------
+# expand_vertices against a python oracle on random graphs
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_expand_vertices_oracle(seed):
+    rng = np.random.default_rng(seed)
+    n = 24
+    src = rng.integers(0, n, 120).astype(np.uint32)
+    dst = rng.integers(0, n, 120).astype(np.uint32)
+    from repro.core import from_edges_host
+    g = from_edges_host(n, src, dst, hashing=True)
+    mb = int(np.max(np.asarray(g.bucket_count)))
+    query = rng.choice(n, 6, replace=False).astype(np.uint32)
+    ef = expand_vertices(g, jnp.asarray(query), jnp.ones(6, bool),
+                         out_capacity=256, max_bpv=mb)
+    got = {(int(ef.src[i]), int(ef.dst[i])) for i in range(int(ef.size))}
+    uniq = set(zip(src.tolist(), dst.tolist()))
+    want = {(s, d) for s, d in uniq if s in set(query.tolist())}
+    assert got == want
