@@ -21,7 +21,8 @@ def main() -> None:
     scale = "full" if args.full else "quick"
 
     from . import (dynamic_speedup, memory_table, pagerank_bench,
-                   traversal, triangle_bench, update_throughput, wcc_bench)
+                   sweep_bench, traversal, triangle_bench,
+                   update_throughput, wcc_bench)
     suites = {
         "memory_table": memory_table,        # Table 5
         "update_throughput": update_throughput,  # Figs 3–5
@@ -30,6 +31,7 @@ def main() -> None:
         "pagerank": pagerank_bench,          # Figs 8–10
         "triangle": triangle_bench,          # Fig 11
         "wcc": wcc_bench,                    # Fig 12 + Table 6
+        "sweep": sweep_bench,                # old-path vs slab-sweep engine
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

@@ -3,24 +3,25 @@ from .bfs import (UNREACHED, bfs_decremental, bfs_incremental, bfs_tree_static,
                   bfs_vanilla)
 from .pagerank import pagerank, pagerank_dynamic, slab_contrib_sums_ref
 from .sssp import (INF, NO_PARENT, TreeState, init_state, relax_edges,
-                   run_to_convergence, sssp_decremental, sssp_incremental,
-                   sssp_static)
+                   relax_sweep, run_to_convergence, sssp_decremental,
+                   sssp_incremental, sssp_static)
 from .triangle import (count_kernel, search_edges, triangles_decremental,
                        triangles_incremental, triangles_static)
 from .wcc import (count_components, wcc_incremental_batch,
                   wcc_incremental_naive, wcc_incremental_slab_iterator,
-                  wcc_incremental_update_iterator, wcc_static)
+                  wcc_incremental_update_iterator, wcc_labelprop_ref,
+                  wcc_labelprop_sweep, wcc_static)
 
 __all__ = [
     "UNREACHED", "bfs_decremental", "bfs_incremental", "bfs_tree_static",
     "bfs_vanilla",
     "pagerank", "pagerank_dynamic", "slab_contrib_sums_ref",
     "INF", "NO_PARENT", "TreeState", "init_state", "relax_edges",
-    "run_to_convergence", "sssp_decremental", "sssp_incremental",
-    "sssp_static",
+    "relax_sweep", "run_to_convergence", "sssp_decremental",
+    "sssp_incremental", "sssp_static",
     "count_kernel", "search_edges", "triangles_decremental",
     "triangles_incremental", "triangles_static",
     "count_components", "wcc_incremental_batch", "wcc_incremental_naive",
     "wcc_incremental_slab_iterator", "wcc_incremental_update_iterator",
-    "wcc_static",
+    "wcc_labelprop_ref", "wcc_labelprop_sweep", "wcc_static",
 ]

@@ -11,13 +11,14 @@ Two variants, matching the paper's evaluation:
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..core.slab_graph import SlabGraph
 from ..core.worklist import expand_vertices
+from ..kernels.slab_sweep.ops import sweep_vertices
 from .sssp import (INF, TreeState, init_state, run_to_convergence,
                    relax_edges, sssp_decremental, sssp_incremental,
                    _compact_vertices)
@@ -28,9 +29,17 @@ UNREACHED = jnp.int32(2 ** 30)
 @partial(jax.jit, static_argnames=("src", "edge_capacity", "max_bpv",
                                    "max_iters"))
 def bfs_vanilla(g: SlabGraph, *, src: int, edge_capacity: int,
-                max_bpv: int = 1, max_iters: int = 100000
+                max_bpv: int = 1, max_iters: int = 100000,
+                g_in: Optional[SlabGraph] = None
                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Level-based static BFS; returns (levels int32, iterations)."""
+    """Level-based static BFS; returns (levels int32, iterations).
+
+    With ``g_in`` (transposed graph, ``core.transpose_host(g)``) each level
+    is ONE fused sweep: per vertex, count in-neighbors inside the current
+    frontier (sum semiring over the frontier indicator) — no vertex
+    compaction, no EdgeFrontier, no ``edge_capacity`` pressure.  Without it,
+    the expand_vertices reference path runs.
+    """
     n = g.n_vertices
     dist = jnp.full((n,), UNREACHED, jnp.int32).at[src].set(0)
     newly = jnp.zeros((n,), bool).at[src].set(True)
@@ -39,7 +48,14 @@ def bfs_vanilla(g: SlabGraph, *, src: int, edge_capacity: int,
         _, newly, it = carry
         return jnp.any(newly) & (it < max_iters)
 
-    def body(carry):
+    def body_sweep(carry):
+        dist, newly, it = carry
+        hits = sweep_vertices(g_in, newly.astype(jnp.int32), semiring="sum")
+        newly = (hits > 0) & (dist == UNREACHED)
+        dist = jnp.where(newly, it + 1, dist)
+        return dist, newly, it + 1
+
+    def body_expand(carry):
         dist, newly, it = carry
         verts, vmask, _ = _compact_vertices(newly)
         ef = expand_vertices(g, verts, vmask, out_capacity=edge_capacity,
@@ -51,30 +67,37 @@ def bfs_vanilla(g: SlabGraph, *, src: int, edge_capacity: int,
         dist = jnp.where(newly, it + 1, dist)
         return dist, newly, it + 1
 
+    body = body_expand if g_in is None else body_sweep
     dist, _, iters = jax.lax.while_loop(
         cond, body, (dist, newly, jnp.asarray(0, jnp.int32)))
     return dist, iters
 
 
 def bfs_tree_static(g: SlabGraph, src: int, *, edge_capacity: int,
-                    max_bpv: int = 1) -> Tuple[TreeState, jnp.ndarray]:
+                    max_bpv: int = 1,
+                    g_in: Optional[SlabGraph] = None
+                    ) -> Tuple[TreeState, jnp.ndarray]:
     """TREE-BASED static BFS: SSSP engine, unit weights (64-bit pair updates
     on GPU; two-plane lexicographic segment-min here)."""
     state = init_state(g.n_vertices, src)
     improved0 = jnp.zeros((g.n_vertices,), bool).at[src].set(True)
     return run_to_convergence(g, state, improved0,
-                              edge_capacity=edge_capacity, max_bpv=max_bpv)
+                              edge_capacity=edge_capacity, max_bpv=max_bpv,
+                              g_in=g_in)
 
 
 def bfs_incremental(g: SlabGraph, state: TreeState, bsrc, bdst, bmask, *,
-                    edge_capacity: int, max_bpv: int = 1):
+                    edge_capacity: int, max_bpv: int = 1, g_in=None):
     """Unit-weight incremental update via the SSSP engine."""
     bw = jnp.ones_like(bsrc, jnp.float32)
     return sssp_incremental(g, state, bsrc, bdst, bw, bmask,
-                            edge_capacity=edge_capacity, max_bpv=max_bpv)
+                            edge_capacity=edge_capacity, max_bpv=max_bpv,
+                            g_in=g_in)
 
 
 def bfs_decremental(g: SlabGraph, state: TreeState, bsrc, bdst, bmask, *,
-                    src: int, edge_capacity: int, max_bpv: int = 1):
+                    src: int, edge_capacity: int, max_bpv: int = 1,
+                    g_in=None):
     return sssp_decremental(g, state, bsrc, bdst, bmask, src=src,
-                            edge_capacity=edge_capacity, max_bpv=max_bpv)
+                            edge_capacity=edge_capacity, max_bpv=max_bpv,
+                            g_in=g_in)

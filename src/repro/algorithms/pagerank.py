@@ -50,16 +50,24 @@ def pagerank(g_in: SlabGraph, out_degree: jnp.ndarray, *,
     """Static (init_pr=None) or dynamic (init_pr=warm start) PageRank.
 
     Returns (pagerank vector, iterations).  ``contrib_impl`` selects the pool
-    sweep implementation ("ref" jnp / "pallas" kernel).
+    sweep implementation: "ref" is the in-module jnp oracle; "sweep" (alias
+    "pallas") is the shared slab-sweep engine's sum semiring — the kernel
+    under ``kernels/slab_sweep`` of which the historical ``slab_pagerank``
+    kernel is the specialization.
     """
     n = g_in.n_vertices
     view = pool_edges(g_in)
     seg = jnp.where(g_in.slab_vertex >= 0, g_in.slab_vertex, n)
 
-    if contrib_impl == "pallas":
-        from ..kernels.slab_pagerank.ops import slab_contrib_sums as _sums
-    else:
+    if contrib_impl in ("pallas", "sweep"):
+        from ..kernels.slab_sweep.ops import sweep_partials
+
+        def _sums(keys, valid, contrib):
+            return sweep_partials(g_in, contrib, semiring="sum")
+    elif contrib_impl == "ref":
         _sums = slab_contrib_sums_ref
+    else:
+        raise ValueError(f"unknown contrib_impl {contrib_impl!r}")
 
     pr0 = (jnp.full((n,), 1.0 / n, jnp.float32) if init_pr is None
            else init_pr.astype(jnp.float32))

@@ -18,13 +18,14 @@ frontier from every surviving→invalidated edge, then run the same epilogue.
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..core.slab_graph import SlabGraph
 from ..core.worklist import expand_vertices, pool_edges
+from ..kernels.slab_sweep.ops import sweep_vertices
 
 INF = jnp.float32(1e30)
 NO_PARENT = jnp.int32(-1)
@@ -42,13 +43,26 @@ def init_state(n_vertices: int, src: int) -> TreeState:
     return TreeState(dist, parent)
 
 
+def _apply_relax(state: TreeState, dmin: jnp.ndarray, pmin: jnp.ndarray
+                 ) -> Tuple[TreeState, jnp.ndarray]:
+    """Fold the ⟨dmin, pmin⟩ candidate planes into the dependence tree —
+    the shared epilogue of both relaxation data paths."""
+    improved = (dmin < state.dist) | \
+               ((dmin == state.dist) & (pmin < state.parent) & (dmin < INF))
+    dist = jnp.where(improved, dmin, state.dist)
+    parent = jnp.where(improved, pmin, state.parent)
+    return TreeState(dist, parent), improved
+
+
 def relax_edges(state: TreeState, esrc: jnp.ndarray, edst: jnp.ndarray,
                 ew: jnp.ndarray, emask: jnp.ndarray
                 ) -> Tuple[TreeState, jnp.ndarray]:
     """One batched relaxation (the SSSP_Kernel atomicMin, Alg. 10 line 9).
 
     Returns (new state, per-vertex improved mask).  Lexicographic
-    ⟨distance, parent⟩ min via two segment_min passes.
+    ⟨distance, parent⟩ min via two segment_min passes.  This is the
+    edge-list reference path (and the one batch prologues use — a batch IS
+    an edge list); the per-iteration hot loop runs ``relax_sweep``.
     """
     n = state.dist.shape[0]
     s = jnp.where(emask, esrc.astype(jnp.int32), 0)
@@ -58,12 +72,26 @@ def relax_edges(state: TreeState, esrc: jnp.ndarray, edst: jnp.ndarray,
     at_min = emask & (cand <= dmin[jnp.minimum(d, n - 1)]) & (d < n)
     pcand = jnp.where(at_min, s, jnp.int32(2 ** 31 - 1))
     pmin = jax.ops.segment_min(pcand, d, num_segments=n + 1)[:n]
+    return _apply_relax(state, dmin, pmin)
 
-    improved = (dmin < state.dist) | \
-               ((dmin == state.dist) & (pmin < state.parent) & (dmin < INF))
-    dist = jnp.where(improved, dmin, state.dist)
-    parent = jnp.where(improved, pmin, state.parent)
-    return TreeState(dist, parent), improved
+
+def relax_sweep(g_in: SlabGraph, state: TreeState, frontier: jnp.ndarray
+                ) -> Tuple[TreeState, jnp.ndarray]:
+    """One relaxation through the fused slab-sweep engine.
+
+    ``g_in`` is the in-edge (transposed) graph: slab owner = destination,
+    lane keys = source, weight pool = w(src→dst).  Two frontier-masked
+    sweeps — min-plus for the distance plane, arg-min-plus for the
+    deterministic parent tie-break — replace expand_vertices' EdgeFrontier
+    materialization + double scatter.  Bit-identical to ``relax_edges``
+    over the frontier's out-edges (min is exact; the per-edge f32 adds are
+    the same adds).
+    """
+    dmin = sweep_vertices(g_in, state.dist, semiring="min_plus",
+                          frontier=frontier)
+    pmin = sweep_vertices(g_in, state.dist, semiring="arg_min_plus",
+                          frontier=frontier, target=dmin)
+    return _apply_relax(state, dmin, pmin)
 
 
 def _compact_vertices(improved: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
@@ -82,15 +110,29 @@ def _compact_vertices(improved: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, 
 @partial(jax.jit, static_argnames=("edge_capacity", "max_bpv", "max_iters"))
 def run_to_convergence(g: SlabGraph, state: TreeState, improved0: jnp.ndarray,
                        *, edge_capacity: int, max_bpv: int = 1,
-                       max_iters: int = 100000) -> Tuple[TreeState, jnp.ndarray]:
-    """Common epilogue (Alg. 6 lines 22–27): expand improved vertices, relax,
-    repeat until the frontier empties.  Returns (state, iterations)."""
+                       max_iters: int = 100000,
+                       g_in: Optional[SlabGraph] = None
+                       ) -> Tuple[TreeState, jnp.ndarray]:
+    """Common epilogue (Alg. 6 lines 22–27): relax the improved frontier,
+    repeat until it empties.  Returns (state, iterations).
+
+    With ``g_in`` (the transposed graph, ``core.transpose_host(g)``) the hot
+    loop is one fused slab sweep per plane — the improved mask IS the
+    frontier bitmask, no vertex compaction, no EdgeFrontier.  Without it,
+    the expand_vertices reference path runs (also the fallback when only
+    the out-edge view exists, e.g. mid-update-stream).
+    """
 
     def cond(carry):
         _, improved, it = carry
         return jnp.any(improved) & (it < max_iters)
 
-    def body(carry):
+    def body_sweep(carry):
+        state, improved, it = carry
+        state, improved = relax_sweep(g_in, state, improved)
+        return state, improved, it + 1
+
+    def body_expand(carry):
         state, improved, it = carry
         verts, vmask, _ = _compact_vertices(improved)
         ef = expand_vertices(g, verts, vmask, out_capacity=edge_capacity,
@@ -100,6 +142,7 @@ def run_to_convergence(g: SlabGraph, state: TreeState, improved0: jnp.ndarray,
         state, improved = relax_edges(state, ef.src, ef.dst, w, emask)
         return state, improved, it + 1
 
+    body = body_expand if g_in is None else body_sweep
     state, _, iters = jax.lax.while_loop(
         cond, body, (state, improved0, jnp.asarray(0, jnp.int32)))
     return state, iters
@@ -110,12 +153,15 @@ def run_to_convergence(g: SlabGraph, state: TreeState, improved0: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def sssp_static(g: SlabGraph, src: int, *, edge_capacity: int,
-                max_bpv: int = 1) -> Tuple[TreeState, jnp.ndarray]:
+                max_bpv: int = 1,
+                g_in: Optional[SlabGraph] = None
+                ) -> Tuple[TreeState, jnp.ndarray]:
     """Alg. 6 lines 1–9: seed with the source's out-edges, iterate."""
     state = init_state(g.n_vertices, src)
     improved0 = jnp.zeros((g.n_vertices,), bool).at[src].set(True)
     return run_to_convergence(g, state, improved0,
-                              edge_capacity=edge_capacity, max_bpv=max_bpv)
+                              edge_capacity=edge_capacity, max_bpv=max_bpv,
+                              g_in=g_in)
 
 
 # ---------------------------------------------------------------------------
@@ -125,13 +171,17 @@ def sssp_static(g: SlabGraph, src: int, *, edge_capacity: int,
 @partial(jax.jit, static_argnames=("edge_capacity", "max_bpv"))
 def sssp_incremental(g: SlabGraph, state: TreeState, bsrc: jnp.ndarray,
                      bdst: jnp.ndarray, bw: jnp.ndarray, bmask: jnp.ndarray,
-                     *, edge_capacity: int, max_bpv: int = 1
+                     *, edge_capacity: int, max_bpv: int = 1,
+                     g_in: Optional[SlabGraph] = None
                      ) -> Tuple[TreeState, jnp.ndarray]:
     """Incremental prologue (Alg. 6 lines 12–14): the inserted batch IS the
-    initial edge frontier; then the common epilogue."""
+    initial edge frontier (genuinely an edge list — it stays on
+    ``relax_edges``); then the common epilogue, swept when ``g_in`` (the
+    post-update transpose) is supplied."""
     state, improved = relax_edges(state, bsrc, bdst, bw, bmask)
     return run_to_convergence(g, state, improved,
-                              edge_capacity=edge_capacity, max_bpv=max_bpv)
+                              edge_capacity=edge_capacity, max_bpv=max_bpv,
+                              g_in=g_in)
 
 
 # ---------------------------------------------------------------------------
@@ -178,7 +228,9 @@ def _propagate_invalidation(state: TreeState, src: int,
 def sssp_decremental(g: SlabGraph, state: TreeState, bsrc: jnp.ndarray,
                      bdst: jnp.ndarray, bmask: jnp.ndarray, *, src: int,
                      edge_capacity: int, max_bpv: int = 1,
-                     n_rounds: int = 32) -> Tuple[TreeState, jnp.ndarray]:
+                     n_rounds: int = 32,
+                     g_in: Optional[SlabGraph] = None
+                     ) -> Tuple[TreeState, jnp.ndarray]:
     """Decremental prologue (Alg. 6 lines 16–20) + common epilogue.
 
     ``g`` must already have the batch deleted.  The re-seeding frontier is
@@ -202,4 +254,5 @@ def sssp_decremental(g: SlabGraph, state: TreeState, bsrc: jnp.ndarray,
     state, improved = relax_edges(state, fsrc.astype(jnp.uint32),
                                   fdst.astype(jnp.uint32), fw, emask)
     return run_to_convergence(g, state, improved,
-                              edge_capacity=edge_capacity, max_bpv=max_bpv)
+                              edge_capacity=edge_capacity, max_bpv=max_bpv,
+                              g_in=g_in)

@@ -10,7 +10,7 @@ from .slab_graph import (SlabGraph, empty, ensure_capacity, from_edges_host,
 from .batch import delete_edges, insert_edges, query_edges, probe
 from .worklist import (CSR, EdgeFrontier, PoolView, csr_snapshot,
                        expand_vertices, occupancy_stats, pool_edges,
-                       updated_lane_mask, updated_vertices)
+                       transpose_host, updated_lane_mask, updated_vertices)
 from .frontier import Frontier, clear, enqueue, make_frontier, swap
 from .union_find import (component_labels, compress, count_components, find,
                          init_parents, union_batch)
@@ -23,7 +23,8 @@ __all__ = [
     "plan_buckets", "update_slab_pointers",
     "delete_edges", "insert_edges", "query_edges", "probe",
     "CSR", "EdgeFrontier", "PoolView", "csr_snapshot", "expand_vertices",
-    "occupancy_stats", "pool_edges", "updated_lane_mask", "updated_vertices",
+    "occupancy_stats", "pool_edges", "transpose_host", "updated_lane_mask",
+    "updated_vertices",
     "Frontier", "clear", "enqueue", "make_frontier", "swap",
     "component_labels", "compress", "count_components", "find",
     "init_parents", "union_batch",

@@ -231,10 +231,7 @@ def from_edges_host(n_vertices: int, src: np.ndarray, dst: np.ndarray,
 
     # per-bucket fill counts and slab layout
     per_bucket = np.bincount(b_s.astype(np.int64), minlength=n_buckets)
-    extra = np.maximum(0, np.ceil((per_bucket - SLAB_WIDTH) / SLAB_WIDTH)) \
-              .astype(np.int64)
-    extra[per_bucket <= SLAB_WIDTH] = 0
-    extra = np.maximum(0, -(-(per_bucket) // SLAB_WIDTH) - 1)
+    extra = np.maximum(0, -(-per_bucket // SLAB_WIDTH) - 1)
     extra_off = np.zeros(n_buckets + 1, dtype=np.int64)
     np.cumsum(extra, out=extra_off[1:])
     total_slabs = n_buckets + int(extra_off[-1])

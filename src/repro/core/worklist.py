@@ -22,9 +22,10 @@ from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .hashing import INVALID_SLAB, SLAB_WIDTH, is_valid_vertex
-from .slab_graph import SlabGraph
+from .slab_graph import SlabGraph, from_edges_host
 
 
 class PoolView(NamedTuple):
@@ -229,6 +230,35 @@ def csr_snapshot(g: SlabGraph, *, max_edges: int) -> CSR:
     if flat_w is not None:
         w = jnp.where(jnp.arange(take) < n_e, flat_w[order][:take], 0.0)
     return CSR(indptr=indptr, indices=indices, weights=w, n_edges=n_e)
+
+
+def transpose_host(g: SlabGraph, *, symmetric: bool = False,
+                   hashing: bool = False, load_factor: float = 0.7,
+                   slack_slabs: int = 0) -> SlabGraph:
+    """Host-side transpose: the in-edge SlabGraph of ``g`` (owner = dst,
+    lane keys = src), weights carried along.
+
+    The slab-sweep engine reduces into the slab *owner* (pull direction), so
+    push-style relaxations (BFS levels, SSSP waves over out-edge storage)
+    run their sweeps on this transposed view — the same layout PageRank
+    already stores natively.  ``symmetric=True`` keeps both directions
+    (the undirected view WCC label propagation needs).  Host-side by design:
+    rebuilt between update epochs, like ``ensure_capacity``.
+    """
+    view = pool_edges(g)
+    valid = np.asarray(view.valid)
+    src = np.asarray(view.src)[valid].astype(np.uint32)
+    dst = np.asarray(view.dst)[valid].astype(np.uint32)
+    w = np.asarray(view.weight)[valid] if g.weighted else None
+    if symmetric:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+        if w is not None:
+            w = np.concatenate([w, w])
+        return from_edges_host(g.n_vertices, src, dst, w, hashing=hashing,
+                               load_factor=load_factor,
+                               slack_slabs=slack_slabs)
+    return from_edges_host(g.n_vertices, dst, src, w, hashing=hashing,
+                           load_factor=load_factor, slack_slabs=slack_slabs)
 
 
 def occupancy_stats(g: SlabGraph) -> dict:

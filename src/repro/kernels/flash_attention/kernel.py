@@ -22,6 +22,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed TPUCompilerParams -> CompilerParams across jax releases
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+if _CompilerParams is None:  # pragma: no cover - fail loud at import
+    raise ImportError("jax.experimental.pallas.tpu exposes neither "
+                      "CompilerParams nor TPUCompilerParams")
+
 NEG_INF = -1e30
 
 
@@ -131,7 +138,7 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

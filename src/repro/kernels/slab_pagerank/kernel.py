@@ -1,15 +1,11 @@
-"""Pallas kernel for the PageRank slab-pool sweep (paper Alg. 14).
+"""PageRank slab-pool sweep (paper Alg. 14) — sum-semiring specialization.
 
-Per slab row: gather ``contrib[u]`` for each of the 128 lane keys, mask
-invalid lanes (EMPTY/TOMBSTONE/unallocated), reduce across lanes.  This is the
-paper's Compute kernel: a warp reads one slab coalesced and accumulates
-``VertexContribution[u]``; the lane-axis sum is ``warpreduxsum``.
-
-Tiling: the key pool is blocked (rows_per_block, 128) into VMEM; the contrib
-vector stays un-blocked (``pl.ANY``) and is gathered per lane — the TPU analogue
-of the GPU's L2-served random reads.  Output is per-slab partial sums; the
-per-vertex ``segment_sum`` runs outside (it is a plain VPU reduction over the
-already-dense slab→vertex map).
+Historically this was a bespoke Pallas kernel; it is now a thin binding onto
+the generic fused slab-sweep engine (``kernels/slab_sweep``): gather
+``contrib[u]`` at each lane key, mask invalid lanes, sum across lanes — the
+``sum`` semiring with no frontier.  Kept as a named entry point because the
+paper treats the PageRank Compute kernel as its own artifact and the
+benchmarks/tests reference it directly.
 """
 from __future__ import annotations
 
@@ -17,18 +13,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-
-def _pr_kernel(keys_ref, owner_ref, contrib_ref, o_ref, *, n_vertices: int):
-    keys = keys_ref[...]                       # (R, 128) uint32
-    owner = owner_ref[...]                     # (R, 1) int32
-    valid = (keys < jnp.uint32(n_vertices)) & (owner >= 0)
-    idx = jnp.where(valid, keys, jnp.uint32(0)).astype(jnp.int32)
-    vals = contrib_ref[idx]                    # gather (R, 128)
-    vals = jnp.where(valid, vals, 0.0)
-    o_ref[...] = vals.sum(axis=1, keepdims=True)  # (R, 1)
+from ..slab_sweep.kernel import slab_sweep_pallas
 
 
 @functools.partial(jax.jit,
@@ -39,25 +25,7 @@ def slab_contrib_sums_pallas(keys: jnp.ndarray, slab_vertex: jnp.ndarray,
                              rows_per_block: int = 256,
                              interpret: bool = False) -> jnp.ndarray:
     """keys (S,128) uint32, slab_vertex (S,) int32, contrib (V,) f32 → (S,) f32."""
-    S = keys.shape[0]
-    R = min(rows_per_block, S)
-    pad = (-S) % R
-    if pad:
-        keys = jnp.pad(keys, ((0, pad), (0, 0)),
-                       constant_values=jnp.uint32(0xFFFFFFFE))
-        slab_vertex = jnp.pad(slab_vertex, (0, pad), constant_values=-1)
-    Sp = keys.shape[0]
-
-    out = pl.pallas_call(
-        functools.partial(_pr_kernel, n_vertices=n_vertices),
-        grid=(Sp // R,),
-        in_specs=[
-            pl.BlockSpec((R, keys.shape[1]), lambda i: (i, 0)),
-            pl.BlockSpec((R, 1), lambda i: (i, 0)),
-            pl.BlockSpec(memory_space=pl.ANY),
-        ],
-        out_specs=pl.BlockSpec((R, 1), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((Sp, 1), jnp.float32),
-        interpret=interpret,
-    )(keys, slab_vertex[:, None], contrib)
-    return out[:S, 0]
+    return slab_sweep_pallas(keys, slab_vertex, contrib, semiring="sum",
+                             n_vertices=n_vertices,
+                             rows_per_block=rows_per_block,
+                             interpret=interpret)

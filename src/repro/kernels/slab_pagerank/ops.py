@@ -1,7 +1,7 @@
-"""Jit'd wrapper for the slab_pagerank pool sweep.
-
-``pagerank(..., contrib_impl="pallas")`` routes through here; signature is
-adapted to the algorithm layer's (keys, valid, contrib) convention.
+"""Jit'd wrapper for the slab_pagerank pool sweep (sum-semiring
+specialization of ``kernels/slab_sweep`` — see that package for the generic
+frontier-masked engine).  Signature is adapted to the algorithm layer's
+(keys, valid, contrib) convention.
 """
 from __future__ import annotations
 

@@ -1,0 +1,11 @@
+"""Fused slab-sweep engine: frontier-masked semiring sweeps over the pool.
+
+The shared per-super-step data path for BFS / SSSP / WCC / PageRank — see
+DESIGN.md §3 for the semiring API and when to prefer this over
+``expand_vertices`` edge-frontier expansion.
+"""
+from .ops import (SEMIRINGS, slab_sweep_pallas, slab_sweep_ref,
+                  sweep_partials, sweep_vertices)
+
+__all__ = ["SEMIRINGS", "slab_sweep_pallas", "slab_sweep_ref",
+           "sweep_partials", "sweep_vertices"]

@@ -1,0 +1,140 @@
+"""Fused Pallas slab-sweep kernel — frontier-masked semiring sweeps.
+
+Generalizes the ``slab_pagerank`` Compute kernel (paper Alg. 14) into the one
+memory pattern every Meerkat analytic shares: per (rows_per_block, 128) VMEM
+tile of the key pool, gather a per-vertex value at each lane key, combine it
+with the lane weight under a pluggable semiring, mask invalid lanes
+(EMPTY/TOMBSTONE/unallocated) *and* lanes whose key vertex is outside the
+frontier bitmask, then reduce across the 128 lanes into per-slab partials.
+The per-vertex ``segment_sum``/``segment_min`` over ``slab_vertex`` runs
+outside (a plain VPU reduction over the already-dense slab→vertex map).
+
+Tiling mirrors ``slab_pagerank``: blocked pool operands stream through VMEM;
+the (V,) value / frontier vectors stay un-blocked (``pl.ANY``) and are
+gathered per lane — the TPU analogue of the GPU's L2-served random reads.
+The frontier mask is what lets sparse super-steps (BFS levels, SSSP waves)
+ride the same dense sweep without materializing an ``EdgeFrontier``: masked
+lanes contribute the semiring identity and cost nothing but the gather.
+
+Semirings: ``sum`` / ``min`` / ``min_plus`` / ``arg_min_plus`` — see
+``ref.slab_sweep_ref`` for exact lane semantics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .ref import INT32_MAX, SEMIRINGS, semiring_identity
+
+
+def _sweep_kernel(*refs, semiring: str, n_vertices: int, has_weights: bool,
+                  has_frontier: bool, ident):
+    it = iter(refs)
+    keys_ref = next(it)                              # (R, 128) uint32
+    owner_ref = next(it)                             # (R, 1) int32
+    weights_ref = next(it) if has_weights else None  # (R, 128) f32
+    target_ref = next(it) if semiring == "arg_min_plus" else None  # (R, 1)
+    values_ref = next(it)                            # (V,) ANY
+    frontier_ref = next(it) if has_frontier else None  # (V,) int32 ANY
+    o_ref = next(it)                                 # (R, 1)
+
+    keys = keys_ref[...]
+    owner = owner_ref[...]
+    valid = (keys < jnp.uint32(n_vertices)) & (owner >= 0)
+    idx = jnp.where(valid, keys, jnp.uint32(0)).astype(jnp.int32)
+    if has_frontier:
+        valid = valid & (frontier_ref[idx] != 0)
+    vals = values_ref[idx]                           # gather (R, 128)
+
+    if semiring == "sum":
+        if has_weights:
+            vals = vals * weights_ref[...]
+        acc = jnp.where(valid, vals, 0)
+        o_ref[...] = acc.sum(axis=1, keepdims=True)
+        return
+    if semiring == "min":
+        acc = jnp.where(valid, vals, ident)
+        o_ref[...] = acc.min(axis=1, keepdims=True)
+        return
+
+    w = weights_ref[...] if has_weights else jnp.ones((), vals.dtype)
+    cand = vals + w
+    if semiring == "min_plus":
+        acc = jnp.where(valid, cand, ident)
+        o_ref[...] = acc.min(axis=1, keepdims=True)
+        return
+
+    # arg_min_plus: smallest key whose candidate matches the owner's target
+    at_min = valid & (cand <= target_ref[...])
+    acc = jnp.where(at_min, keys.astype(jnp.int32), INT32_MAX)
+    o_ref[...] = acc.min(axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("semiring", "n_vertices",
+                                    "rows_per_block", "interpret"))
+def slab_sweep_pallas(keys: jnp.ndarray, slab_vertex: jnp.ndarray,
+                      values: jnp.ndarray, weights=None, frontier=None,
+                      target=None, *, semiring: str, n_vertices: int,
+                      rows_per_block: int = 256,
+                      interpret: bool = False) -> jnp.ndarray:
+    """keys (S,128) u32, slab_vertex (S,) i32, values (V,) → (S,) partials.
+
+    Optional operands: ``weights`` (S,128) f32 for the ``*_plus`` semirings,
+    ``frontier`` (V,) int32 bitmask (nonzero = active) gathered at lane keys,
+    ``target`` (S,) per-owner reference for ``arg_min_plus``.
+    """
+    if semiring not in SEMIRINGS:
+        raise ValueError(f"unknown semiring {semiring!r}")
+    out_dtype = jnp.int32 if semiring == "arg_min_plus" else values.dtype
+    ident = np.asarray(semiring_identity(semiring, values.dtype))
+
+    S = keys.shape[0]
+    R = min(rows_per_block, S)
+    pad = (-S) % R
+    if pad:
+        keys = jnp.pad(keys, ((0, pad), (0, 0)),
+                       constant_values=jnp.uint32(0xFFFFFFFE))
+        slab_vertex = jnp.pad(slab_vertex, (0, pad), constant_values=-1)
+        if weights is not None:
+            weights = jnp.pad(weights, ((0, pad), (0, 0)))
+        if target is not None:
+            target = jnp.pad(target, (0, pad))
+    Sp = keys.shape[0]
+    W = keys.shape[1]
+
+    blocked = pl.BlockSpec((R, W), lambda i: (i, 0))
+    scalar_col = pl.BlockSpec((R, 1), lambda i: (i, 0))
+    operands = [keys, slab_vertex[:, None]]
+    in_specs = [blocked, scalar_col]
+    if weights is not None:
+        operands.append(weights)
+        in_specs.append(blocked)
+    if semiring == "arg_min_plus":
+        if target is None:
+            raise ValueError("arg_min_plus requires a per-slab target")
+        operands.append(target[:, None])
+        in_specs.append(scalar_col)
+    operands.append(values)
+    in_specs.append(pl.BlockSpec(memory_space=pl.ANY))
+    if frontier is not None:
+        operands.append(frontier.astype(jnp.int32))
+        in_specs.append(pl.BlockSpec(memory_space=pl.ANY))
+
+    out = pl.pallas_call(
+        functools.partial(_sweep_kernel, semiring=semiring,
+                          n_vertices=n_vertices,
+                          has_weights=weights is not None,
+                          has_frontier=frontier is not None,
+                          ident=ident),
+        grid=(Sp // R,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((R, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Sp, 1), out_dtype),
+        interpret=interpret,
+    )(*operands)
+    return out[:S, 0]

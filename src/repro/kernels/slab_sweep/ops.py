@@ -1,0 +1,104 @@
+"""Dispatch layer for the slab-sweep engine: SlabGraph in, per-vertex out.
+
+``sweep_partials`` runs the fused gather–combine–reduce over the pool and
+returns per-slab partials; ``sweep_vertices`` folds those into per-vertex
+outputs with a ``segment_sum``/``segment_min`` keyed by ``slab_vertex`` —
+together they are the whole super-step data path of PageRank (sum), WCC
+label propagation (min), and SSSP/BFS relaxation (min-plus / arg-min-plus).
+
+Implementation selection (``impl``):
+
+  * ``"pallas"`` — the fused Pallas kernel (compiled on TPU; interpret mode
+    elsewhere unless overridden — the interpreter is for validation, not
+    speed).
+  * ``"ref"``    — the pure-jnp oracle, itself a single fused XLA
+    gather+reduce (the fast path off-TPU: still no ``EdgeFrontier``
+    materialization, no cumsum+scatter compaction).
+  * ``"auto"``   — ``"pallas"`` on TPU, ``"ref"`` otherwise.
+
+Both implementations are lane-for-lane identical (integer/min semirings
+bit-exact; sums share the same lane-axis reduction order).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...core.slab_graph import SlabGraph
+from .kernel import slab_sweep_pallas
+from .ref import SEMIRINGS, slab_sweep_ref
+
+_MIN_FAMILY = ("min", "min_plus", "arg_min_plus")
+
+
+def _resolve(impl: str, interpret: Optional[bool]):
+    on_tpu = jax.default_backend() == "tpu"
+    if impl == "auto":
+        impl = "pallas" if on_tpu else "ref"
+    if impl not in ("pallas", "ref"):
+        raise ValueError(f"unknown impl {impl!r}")
+    if interpret is None:
+        interpret = not on_tpu
+    return impl, interpret
+
+
+def sweep_partials(g: SlabGraph, values: jnp.ndarray, *, semiring: str,
+                   frontier: Optional[jnp.ndarray] = None,
+                   target: Optional[jnp.ndarray] = None,
+                   weighted: Optional[bool] = None,
+                   impl: str = "auto", rows_per_block: int = 256,
+                   interpret: Optional[bool] = None) -> jnp.ndarray:
+    """(S,) semiring partials over the pool.
+
+    ``frontier`` is a (V,) bool bitmask over *key* vertices (None = all
+    active).  ``target`` for ``arg_min_plus`` is per-vertex (V,) and is
+    gathered to the slab rows here.  ``weighted`` defaults to using the
+    weight pool exactly for the ``*_plus`` semirings on weighted graphs
+    (unit weight otherwise) — pass explicitly to weight a ``sum`` sweep.
+    """
+    if semiring not in SEMIRINGS:
+        raise ValueError(f"unknown semiring {semiring!r}")
+    if weighted is None:
+        weighted = g.weighted and semiring in ("min_plus", "arg_min_plus")
+    weights = g.weights if weighted else None
+    if target is not None:
+        # per-vertex target → per-slab scalar (owner is uniform per row)
+        target = target[jnp.maximum(g.slab_vertex, 0)]
+    impl, interpret = _resolve(impl, interpret)
+    if impl == "pallas":
+        return slab_sweep_pallas(g.keys, g.slab_vertex, values, weights,
+                                 frontier, target, semiring=semiring,
+                                 n_vertices=g.n_vertices,
+                                 rows_per_block=rows_per_block,
+                                 interpret=interpret)
+    return slab_sweep_ref(g.keys, g.slab_vertex, values, semiring=semiring,
+                          n_vertices=g.n_vertices, weights=weights,
+                          frontier=frontier, target=target)
+
+
+def sweep_vertices(g: SlabGraph, values: jnp.ndarray, *, semiring: str,
+                   frontier: Optional[jnp.ndarray] = None,
+                   target: Optional[jnp.ndarray] = None,
+                   weighted: Optional[bool] = None,
+                   impl: str = "auto", rows_per_block: int = 256,
+                   interpret: Optional[bool] = None) -> jnp.ndarray:
+    """(V,) per-vertex semiring reduction: partials folded over slab_vertex.
+
+    Output lands at the slab *owner* (the pull direction): run on the
+    in-edge/transposed graph for push-style relaxations — see DESIGN.md §3.
+    """
+    partials = sweep_partials(g, values, semiring=semiring, frontier=frontier,
+                              target=target, weighted=weighted, impl=impl,
+                              rows_per_block=rows_per_block,
+                              interpret=interpret)
+    seg = jnp.where(g.slab_vertex >= 0, g.slab_vertex, g.n_vertices)
+    reduce = (jax.ops.segment_sum if semiring == "sum"
+              else jax.ops.segment_min)
+    return reduce(partials, seg, num_segments=g.n_vertices + 1)[:g.n_vertices]
+
+
+__all__ = ["sweep_partials", "sweep_vertices", "slab_sweep_pallas",
+           "slab_sweep_ref", "SEMIRINGS"]

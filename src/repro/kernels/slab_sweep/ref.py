@@ -1,0 +1,92 @@
+"""Pure-jnp oracle for the generic slab-sweep engine.
+
+One fused pass over the (S, 128) pool: gather a per-vertex value at every
+lane key, apply the semiring combine, mask by validity and the optional
+frontier bitmask, reduce across lanes into per-slab partials.  This is the
+single source of truth the Pallas kernel is checked against, and the fast
+path on backends without a Pallas compiler (CPU/GPU interpret would be
+slower than XLA's fused gather+reduce).
+
+Semirings (``combine`` over a lane, ``reduce`` over the 128 lanes):
+
+  * ``sum``          — combine: values[key] (× weight when present);
+                       reduce: +        (PageRank contributions, BFS
+                       frontier-neighbor counts)
+  * ``min``          — combine: values[key];            reduce: min
+                       (WCC min-label propagation)
+  * ``min_plus``     — combine: values[key] + weight;   reduce: min
+                       (SSSP relaxation; unit weight when the pool is
+                       unweighted — BFS tree levels)
+  * ``arg_min_plus`` — combine: key where values[key] + weight <= target
+                       (per-owner scalar); reduce: min — the deterministic
+                       parent tie-break of the two-plane ⟨dist, parent⟩
+                       lexicographic relaxation (output dtype int32)
+
+Lanes failing ``key < n_vertices`` (EMPTY/TOMBSTONE sentinels), rows with a
+negative owner (unallocated slabs), and lanes whose key vertex is outside
+``frontier`` contribute the semiring identity.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+SEMIRINGS = ("sum", "min", "min_plus", "arg_min_plus")
+
+INT32_MAX = np.int32(2 ** 31 - 1)
+
+
+def semiring_identity(semiring: str, dtype) -> np.ndarray:
+    """Reduction identity (host scalar): 0 for sum, dtype-max for min family."""
+    dtype = np.dtype(dtype)
+    if semiring == "sum":
+        return np.zeros((), dtype)
+    if semiring == "arg_min_plus":
+        return INT32_MAX
+    if np.issubdtype(dtype, np.floating):
+        return np.asarray(np.finfo(dtype).max, dtype)
+    return np.asarray(np.iinfo(dtype).max, dtype)
+
+
+def slab_sweep_ref(keys: jnp.ndarray, slab_vertex: jnp.ndarray,
+                   values: jnp.ndarray, *, semiring: str, n_vertices: int,
+                   weights: Optional[jnp.ndarray] = None,
+                   frontier: Optional[jnp.ndarray] = None,
+                   target: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """keys (S,128) uint32, slab_vertex (S,) int32, values (V,) → (S,) partials.
+
+    ``weights`` (S,128) f32 rides along for the ``*_plus`` semirings (unit
+    weight when None), ``frontier`` (V,) bool masks contributions by the
+    *key* vertex, ``target`` (S,) is the per-owner reference value for
+    ``arg_min_plus`` (broadcast per slab row — the owner is uniform per row).
+    """
+    if semiring not in SEMIRINGS:
+        raise ValueError(f"unknown semiring {semiring!r}")
+    valid = (keys < jnp.uint32(n_vertices)) & (slab_vertex[:, None] >= 0)
+    idx = jnp.where(valid, keys, jnp.uint32(0)).astype(jnp.int32)
+    if frontier is not None:
+        valid = valid & frontier[idx]
+    vals = values[idx]
+
+    if semiring == "sum":
+        vals = vals * weights if weights is not None else vals
+        return jnp.where(valid, vals, 0).sum(axis=1)
+
+    if semiring == "min":
+        ident = semiring_identity(semiring, values.dtype)
+        return jnp.where(valid, vals, ident).min(axis=1)
+
+    w = weights if weights is not None else jnp.ones((), vals.dtype)
+    cand = vals + w
+
+    if semiring == "min_plus":
+        ident = semiring_identity(semiring, values.dtype)
+        return jnp.where(valid, cand, ident).min(axis=1)
+
+    # arg_min_plus: smallest key among candidates matching the owner target
+    if target is None:
+        raise ValueError("arg_min_plus requires a per-slab target")
+    at_min = valid & (cand <= target[:, None])
+    return jnp.where(at_min, keys.astype(jnp.int32), INT32_MAX).min(axis=1)

@@ -1,0 +1,74 @@
+"""Import-or-stub shim for ``hypothesis``.
+
+``hypothesis`` is a declared test dependency (requirements.txt), but minimal
+containers may lack it and cannot always install packages.  Rather than skip
+the property tests there, this shim falls back to a tiny deterministic
+generator covering the strategy subset the suite uses (``integers``,
+``sampled_from``, ``tuples``, ``lists``) and runs a fixed number of seeded
+examples per test.  With real hypothesis installed, it is re-exported
+untouched (shrinking, the database, and the full strategy language apply).
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: rng.choice(seq))
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(
+                lambda rng: tuple(s.example(rng) for s in strats))
+
+        @staticmethod
+        def lists(strat, *, min_size=0, max_size=10):
+            def draw(rng):
+                k = rng.randint(min_size, max_size)
+                return [strat.example(rng) for _ in range(k)]
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    def settings(max_examples=None, **_kw):
+        """Honors max_examples; everything else (deadline, shrinking) is
+        meaningless in the fallback and ignored."""
+        def decorate(fn):
+            if max_examples is not None:
+                fn._max_examples = max_examples
+            return fn
+        return decorate
+
+    def given(*strats):
+        # NB: no functools.wraps — the wrapper must NOT expose the wrapped
+        # function's parameters, or pytest treats them as fixtures.
+        def decorate(fn):
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", _FALLBACK_EXAMPLES)
+                rng = random.Random(0xC0FFEE)
+                for _ in range(n):
+                    fn(*(s.example(rng) for s in strats))
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return decorate

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (EMPTY_KEY, INVALID_VERTEX, SLAB_WIDTH, TOMBSTONE_KEY,
                         SlabGraph, csr_snapshot, delete_edges, empty,

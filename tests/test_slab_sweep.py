@@ -1,0 +1,368 @@
+"""Slab-sweep engine equivalence suite.
+
+Checks, on randomized *dynamic* graphs (tombstoned lanes, chained overflow
+slabs, multiple ``update_slab_pointers`` epochs):
+
+  * Pallas kernel (interpret mode) == pure-jnp ref, bit-exact, per semiring
+  * engine sweeps == ``expand_vertices`` / ``slab_contrib_sums_ref`` oracles
+  * every algorithm hot loop (BFS vanilla, BFS tree, SSSP static +
+    incremental, WCC label propagation, PageRank) produces bit-identical
+    results through the engine and through the seed's reference path
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (SLAB_WIDTH, delete_edges, empty, expand_vertices,
+                        from_edges_host, insert_edges, pool_edges,
+                        transpose_host, update_slab_pointers)
+from repro.kernels.slab_sweep.kernel import slab_sweep_pallas
+from repro.kernels.slab_sweep.ops import sweep_partials, sweep_vertices
+from repro.kernels.slab_sweep.ref import (INT32_MAX, SEMIRINGS,
+                                          semiring_identity, slab_sweep_ref)
+
+
+def pad(arr, n, fill=0xFFFFFFFF):
+    a = np.full(n, fill, dtype=np.uint32)
+    a[:len(arr)] = arr
+    return jnp.asarray(a)
+
+
+def dynamic_graph(seed=0, n=200, weighted=False, epochs=2):
+    """Insert/delete churn across update epochs: leaves tombstoned lanes,
+    a >SLAB_WIDTH-degree vertex (chained overflow slabs), and a non-trivial
+    epoch watermark."""
+    rng = np.random.default_rng(seed)
+    bpv = 2 if seed % 2 else 1
+    g = empty(n, np.full(n, bpv, np.int32), 1024, weighted=weighted)
+    B = 256
+    all_edges = []
+    for _ in range(epochs):
+        src = rng.integers(0, n, 150).astype(np.uint32)
+        dst = rng.integers(0, n, 150).astype(np.uint32)
+        args = (pad(src, B), pad(dst, B))
+        if weighted:
+            w = np.zeros(B, np.float32)
+            w[:150] = rng.uniform(0.1, 2.0, 150)
+            g, _ = insert_edges(g, *args, jnp.asarray(w))
+        else:
+            g, _ = insert_edges(g, *args)
+        all_edges += list(zip(src.tolist(), dst.tolist()))
+        # heavy vertex -> chained overflow slabs
+        hdst = rng.choice(n, SLAB_WIDTH + 24, replace=False).astype(np.uint32)
+        hsrc = np.full(len(hdst), seed % n, np.uint32)
+        if weighted:
+            w = np.zeros(B, np.float32)
+            w[:len(hdst)] = rng.uniform(0.1, 2.0, len(hdst))
+            g, _ = insert_edges(g, pad(hsrc, B), pad(hdst, B), jnp.asarray(w))
+        else:
+            g, _ = insert_edges(g, pad(hsrc, B), pad(hdst, B))
+        all_edges += list(zip(hsrc.tolist(), hdst.tolist()))
+        # tombstones
+        if all_edges:
+            k = min(40, len(all_edges))
+            pick = rng.choice(len(all_edges), k, replace=False)
+            ds = np.asarray([all_edges[i][0] for i in pick], np.uint32)
+            dd = np.asarray([all_edges[i][1] for i in pick], np.uint32)
+            g, _ = delete_edges(g, pad(ds, B), pad(dd, B))
+        g = update_slab_pointers(g)
+    # a post-epoch batch so epoch_next_free < next_free
+    src = rng.integers(0, n, 60).astype(np.uint32)
+    dst = rng.integers(0, n, 60).astype(np.uint32)
+    if weighted:
+        w = np.zeros(B, np.float32)
+        w[:60] = rng.uniform(0.1, 2.0, 60)
+        g, _ = insert_edges(g, pad(src, B), pad(dst, B), jnp.asarray(w))
+    else:
+        g, _ = insert_edges(g, pad(src, B), pad(dst, B))
+    return g
+
+
+# ---------------------------------------------------------------------------
+# kernel (interpret) vs jnp ref — bit-exact across semirings
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("semiring", SEMIRINGS)
+def test_kernel_matches_ref_on_dynamic_graph(semiring, seed):
+    weighted = semiring in ("min_plus", "arg_min_plus")
+    g = dynamic_graph(seed=seed, weighted=weighted)
+    n = g.n_vertices
+    rng = np.random.default_rng(100 + seed)
+    if semiring == "min":
+        values = jnp.asarray(rng.integers(0, n, n).astype(np.int32))
+    else:
+        values = jnp.asarray(rng.uniform(0.0, 5.0, n).astype(np.float32))
+    frontier = jnp.asarray(rng.random(n) < 0.5)
+    weights = g.weights if weighted else None
+    target = None
+    if semiring == "arg_min_plus":
+        tpv = jax.ops.segment_min(
+            slab_sweep_ref(g.keys, g.slab_vertex, values, semiring="min_plus",
+                           n_vertices=n, weights=weights, frontier=frontier),
+            jnp.where(g.slab_vertex >= 0, g.slab_vertex, n),
+            num_segments=n + 1)[:n]
+        target = tpv[jnp.maximum(g.slab_vertex, 0)]
+
+    for R in (8, 64, 256):
+        got = slab_sweep_pallas(g.keys, g.slab_vertex, values, weights,
+                                frontier, target, semiring=semiring,
+                                n_vertices=n, rows_per_block=R,
+                                interpret=True)
+        want = slab_sweep_ref(g.keys, g.slab_vertex, values,
+                              semiring=semiring, n_vertices=n,
+                              weights=weights, frontier=frontier,
+                              target=target)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=f"{semiring} R={R}")
+
+
+def test_ops_impls_agree():
+    """sweep_partials impl='pallas' (interpret) == impl='ref', g-level API."""
+    g = dynamic_graph(seed=2, weighted=True)
+    n = g.n_vertices
+    rng = np.random.default_rng(3)
+    values = jnp.asarray(rng.uniform(0.0, 5.0, n).astype(np.float32))
+    frontier = jnp.asarray(rng.random(n) < 0.3)
+    for semiring in ("sum", "min", "min_plus"):
+        a = sweep_partials(g, values, semiring=semiring, frontier=frontier,
+                           impl="pallas", interpret=True)
+        b = sweep_partials(g, values, semiring=semiring, frontier=frontier,
+                           impl="ref")
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=semiring)
+
+
+# ---------------------------------------------------------------------------
+# engine vs the seed oracles (expand_vertices / slab_contrib_sums_ref)
+# ---------------------------------------------------------------------------
+def test_sum_partials_match_slab_contrib_sums_ref():
+    from repro.algorithms import slab_contrib_sums_ref
+    g = dynamic_graph(seed=4)
+    rng = np.random.default_rng(5)
+    contrib = jnp.asarray(rng.standard_normal(g.n_vertices).astype(np.float32))
+    view = pool_edges(g)
+    want = slab_contrib_sums_ref(view.dst, view.valid, contrib)
+    for impl in ("ref", "pallas"):
+        got = sweep_partials(g, contrib, semiring="sum", impl=impl,
+                             interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=impl)
+
+
+@pytest.mark.parametrize("seed", [6, 7])
+def test_min_plus_sweep_matches_expand_vertices(seed):
+    """Pull sweep over g == frontier-filtered relaxation of the edge list
+    expand_vertices emits, min-exact."""
+    g = dynamic_graph(seed=seed, weighted=True)
+    n = g.n_vertices
+    rng = np.random.default_rng(50 + seed)
+    values = rng.uniform(0.0, 5.0, n).astype(np.float32)
+    frontier = rng.random(n) < 0.5
+
+    cap = int(g.capacity_slabs) * SLAB_WIDTH
+    mb = int(np.max(np.asarray(g.bucket_count)))
+    ef = expand_vertices(g, jnp.arange(n, dtype=jnp.uint32),
+                         jnp.ones(n, bool), out_capacity=cap, max_bpv=mb)
+    sz = int(ef.size)
+    es = np.asarray(ef.src)[:sz].astype(np.int64)
+    ed = np.asarray(ef.dst)[:sz].astype(np.int64)
+    ew = np.asarray(ef.weight)[:sz]
+
+    fmax = np.finfo(np.float32).max
+    want = np.full(n, fmax, np.float32)
+    for u, v, w in zip(es, ed, ew):
+        if frontier[v]:
+            want[u] = min(want[u], np.float32(values[v] + np.float32(w)))
+
+    got = np.asarray(sweep_vertices(g, jnp.asarray(values),
+                                    semiring="min_plus",
+                                    frontier=jnp.asarray(frontier)))
+    has = want < fmax
+    np.testing.assert_array_equal(got[has], want[has])
+    assert (got[~has] >= np.float32(1e30)).all()
+
+
+# ---------------------------------------------------------------------------
+# transpose_host
+# ---------------------------------------------------------------------------
+def test_transpose_host_reverses_edges():
+    g = dynamic_graph(seed=8, weighted=True)
+    view = pool_edges(g)
+    valid = np.asarray(view.valid)
+    fwd = set(zip(np.asarray(view.src)[valid].tolist(),
+                  np.asarray(view.dst)[valid].astype(np.int64).tolist()))
+    gt = transpose_host(g)
+    vt = pool_edges(gt)
+    validt = np.asarray(vt.valid)
+    rev = set(zip(np.asarray(vt.src)[validt].tolist(),
+                  np.asarray(vt.dst)[validt].astype(np.int64).tolist()))
+    assert rev == {(v, u) for u, v in fwd}
+    gs = transpose_host(g, symmetric=True)
+    vs = pool_edges(gs)
+    valids = np.asarray(vs.valid)
+    sym = set(zip(np.asarray(vs.src)[valids].tolist(),
+                  np.asarray(vs.dst)[valids].astype(np.int64).tolist()))
+    assert sym == fwd | {(v, u) for u, v in fwd}
+    # weights ride along
+    wmap = {}
+    for i, j in zip(*np.nonzero(valid)):
+        wmap[(int(np.asarray(view.src)[i, j]),
+              int(np.asarray(view.dst)[i, j]))] = float(
+                  np.asarray(view.weight)[i, j])
+    for i, j in zip(*np.nonzero(validt)):
+        u = int(np.asarray(vt.src)[i, j])
+        v = int(np.asarray(vt.dst)[i, j])
+        assert wmap[(v, u)] == float(np.asarray(vt.weight)[i, j])
+
+
+# ---------------------------------------------------------------------------
+# algorithms: engine path bit-identical to the reference path
+# ---------------------------------------------------------------------------
+def random_graph(seed, n=250, e=1200, weighted=False, hashing=False):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e).astype(np.uint32)
+    dst = rng.integers(0, n, e).astype(np.uint32)
+    w = rng.uniform(0.1, 3.0, e).astype(np.float32) if weighted else None
+    return from_edges_host(n, src, dst, w, hashing=hashing), (src, dst, w)
+
+
+@pytest.mark.parametrize("seed,hashing", [(10, False), (11, True)])
+def test_bfs_vanilla_sweep_identical(seed, hashing):
+    from repro.algorithms import bfs_vanilla
+    g, _ = random_graph(seed, hashing=hashing)
+    g_in = transpose_host(g)
+    mb = int(np.max(np.asarray(g.bucket_count)))
+    cap = 4096
+    d0, i0 = bfs_vanilla(g, src=0, edge_capacity=cap, max_bpv=mb)
+    d1, i1 = bfs_vanilla(g, src=0, edge_capacity=cap, max_bpv=mb, g_in=g_in)
+    assert np.array_equal(np.asarray(d0), np.asarray(d1))
+    assert int(i0) == int(i1)
+
+
+@pytest.mark.parametrize("seed", [12, 13])
+def test_sssp_static_sweep_identical(seed):
+    from repro.algorithms import sssp_static
+    g, _ = random_graph(seed, weighted=True)
+    g_in = transpose_host(g)
+    s0, i0 = sssp_static(g, 0, edge_capacity=4096)
+    s1, i1 = sssp_static(g, 0, edge_capacity=4096, g_in=g_in)
+    assert np.array_equal(np.asarray(s0.dist), np.asarray(s1.dist))
+    assert np.array_equal(np.asarray(s0.parent), np.asarray(s1.parent))
+    assert int(i0) == int(i1)
+
+
+def test_bfs_tree_sweep_identical():
+    from repro.algorithms import bfs_tree_static
+    g, _ = random_graph(14)
+    g_in = transpose_host(g)
+    s0, _ = bfs_tree_static(g, 0, edge_capacity=4096)
+    s1, _ = bfs_tree_static(g, 0, edge_capacity=4096, g_in=g_in)
+    assert np.array_equal(np.asarray(s0.dist), np.asarray(s1.dist))
+    assert np.array_equal(np.asarray(s0.parent), np.asarray(s1.parent))
+
+
+def test_sssp_incremental_sweep_identical():
+    from repro.algorithms import sssp_incremental, sssp_static
+    g, (src, dst, w) = random_graph(15, weighted=True)
+    state, _ = sssp_static(g, 0, edge_capacity=4096,
+                           g_in=transpose_host(g))
+    rng = np.random.default_rng(16)
+    B = 64
+    bs = rng.integers(0, g.n_vertices, 32).astype(np.uint32)
+    bd = rng.integers(0, g.n_vertices, 32).astype(np.uint32)
+    bw = np.zeros(B, np.float32)
+    bw[:32] = rng.uniform(0.1, 0.5, 32)
+    g2, _ = insert_edges(g, pad(bs, B), pad(bd, B), jnp.asarray(bw))
+    g2_in = transpose_host(g2)
+    bmask = jnp.arange(B) < 32
+    s0, _ = sssp_incremental(g2, state, pad(bs, B), pad(bd, B),
+                             jnp.asarray(bw), bmask, edge_capacity=4096)
+    s1, _ = sssp_incremental(g2, state, pad(bs, B), pad(bd, B),
+                             jnp.asarray(bw), bmask, edge_capacity=4096,
+                             g_in=g2_in)
+    assert np.array_equal(np.asarray(s0.dist), np.asarray(s1.dist))
+    assert np.array_equal(np.asarray(s0.parent), np.asarray(s1.parent))
+
+
+def test_sssp_decremental_sweep_identical():
+    from repro.algorithms import sssp_decremental, sssp_static
+    g, _ = random_graph(22, weighted=True)
+    state, _ = sssp_static(g, 0, edge_capacity=4096)
+    # delete a slice of tree + non-tree edges, then compare epilogues
+    view = pool_edges(g)
+    valid = np.asarray(view.valid)
+    es = np.asarray(view.src)[valid].astype(np.uint32)
+    ed = np.asarray(view.dst)[valid].astype(np.uint32)
+    rng = np.random.default_rng(23)
+    parent = np.asarray(state.parent)
+    is_tree = parent[ed.astype(np.int64)] == es.astype(np.int64)
+    tree_idx = np.nonzero(is_tree)[0]
+    pick = np.concatenate([rng.choice(tree_idx, min(12, len(tree_idx)),
+                                      replace=False),
+                           rng.choice(len(es), 12, replace=False)])
+    B = 64
+    bs, bd = es[pick], ed[pick]
+    g2, _ = delete_edges(g, pad(bs, B), pad(bd, B))
+    g2_in = transpose_host(g2)
+    bmask = jnp.arange(B) < len(pick)
+    s0, _ = sssp_decremental(g2, state, pad(bs, B), pad(bd, B), bmask,
+                             src=0, edge_capacity=4096)
+    s1, _ = sssp_decremental(g2, state, pad(bs, B), pad(bd, B), bmask,
+                             src=0, edge_capacity=4096, g_in=g2_in)
+    assert np.array_equal(np.asarray(s0.dist), np.asarray(s1.dist))
+    assert np.array_equal(np.asarray(s0.parent), np.asarray(s1.parent))
+
+
+@pytest.mark.parametrize("seed,n,e", [(17, 300, 260), (18, 120, 700)])
+def test_wcc_labelprop_sweep(seed, n, e):
+    from repro.algorithms import (count_components, wcc_labelprop_ref,
+                                  wcc_labelprop_sweep, wcc_static)
+    g, _ = random_graph(seed, n=n, e=e)
+    g_sym = transpose_host(g, symmetric=True)
+    l_ref, it_ref = wcc_labelprop_ref(g_sym)
+    l_swp, it_swp = wcc_labelprop_sweep(g_sym)
+    assert np.array_equal(np.asarray(l_ref), np.asarray(l_swp))
+    assert int(it_ref) == int(it_swp)
+    # same partition as union-find (representatives are min ids both ways)
+    uf = np.asarray(wcc_static(g_sym))
+    assert np.array_equal(uf, np.asarray(l_swp))
+    assert count_components(l_swp) == int(
+        np.sum(uf == np.arange(n)))
+
+
+def test_pagerank_sweep_identical():
+    from repro.algorithms import pagerank
+    rng = np.random.default_rng(19)
+    n, e = 150, 800
+    src = rng.integers(0, n, e).astype(np.uint32)
+    dst = rng.integers(0, n, e).astype(np.uint32)
+    g_in = from_edges_host(n, dst, src, hashing=False)
+    out_deg = np.zeros(n, np.int32)
+    for s, d in set(zip(src.tolist(), dst.tolist())):
+        out_deg[s] += 1
+    pr0, i0 = pagerank(g_in, jnp.asarray(out_deg), contrib_impl="ref")
+    pr1, i1 = pagerank(g_in, jnp.asarray(out_deg), contrib_impl="sweep")
+    assert np.array_equal(np.asarray(pr0), np.asarray(pr1))
+    assert int(i0) == int(i1)
+
+
+def test_sweep_on_post_epoch_graph_matches_fresh_rebuild():
+    """Epoch bookkeeping (update_slab_pointers watermarks) must not leak
+    into sweep results: a churned graph sweeps identically to a fresh
+    host-build of its surviving edge set."""
+    g = dynamic_graph(seed=20, weighted=True, epochs=3)
+    view = pool_edges(g)
+    valid = np.asarray(view.valid)
+    src = np.asarray(view.src)[valid].astype(np.uint32)
+    dst = np.asarray(view.dst)[valid].astype(np.uint32)
+    w = np.asarray(view.weight)[valid]
+    fresh = from_edges_host(g.n_vertices, src, dst, w, hashing=False)
+
+    rng = np.random.default_rng(21)
+    values = jnp.asarray(rng.uniform(0.0, 5.0, g.n_vertices)
+                         .astype(np.float32))
+    frontier = jnp.asarray(rng.random(g.n_vertices) < 0.6)
+    a = sweep_vertices(g, values, semiring="min_plus", frontier=frontier)
+    b = sweep_vertices(fresh, values, semiring="min_plus", frontier=frontier)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
