@@ -21,7 +21,7 @@ def main() -> None:
     scale = "full" if args.full else "quick"
 
     from . import (dynamic_speedup, memory_table, pagerank_bench,
-                   sweep_bench, traversal, triangle_bench,
+                   serve_bench, sweep_bench, traversal, triangle_bench,
                    update_throughput, wcc_bench)
     suites = {
         "memory_table": memory_table,        # Table 5
@@ -32,6 +32,7 @@ def main() -> None:
         "triangle": triangle_bench,          # Fig 11
         "wcc": wcc_bench,                    # Fig 12 + Table 6
         "sweep": sweep_bench,                # old-path vs slab-sweep engine
+        "serve": serve_bench,                # legacy loop vs repro.stream
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

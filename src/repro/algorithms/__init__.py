@@ -1,16 +1,25 @@
-"""Dynamic graph algorithms built on the Meerkat core (paper §4)."""
+"""Dynamic graph algorithms built on the Meerkat core (paper §4).
+
+Each module also exports a ``stream_property`` registration hook (re-exported
+here as ``<algo>_stream_property``) that packages its incremental maintainer
+for the `repro.stream` property registry.
+"""
 from .bfs import (UNREACHED, bfs_decremental, bfs_incremental, bfs_tree_static,
                   bfs_vanilla)
+from .bfs import stream_property as bfs_stream_property
 from .pagerank import pagerank, pagerank_dynamic, slab_contrib_sums_ref
+from .pagerank import stream_property as pagerank_stream_property
 from .sssp import (INF, NO_PARENT, TreeState, init_state, relax_edges,
                    relax_sweep, run_to_convergence, sssp_decremental,
                    sssp_incremental, sssp_static)
+from .sssp import stream_property as sssp_stream_property
 from .triangle import (count_kernel, search_edges, triangles_decremental,
                        triangles_incremental, triangles_static)
 from .wcc import (count_components, wcc_incremental_batch,
                   wcc_incremental_naive, wcc_incremental_slab_iterator,
                   wcc_incremental_update_iterator, wcc_labelprop_ref,
                   wcc_labelprop_sweep, wcc_static)
+from .wcc import stream_property as wcc_stream_property
 
 __all__ = [
     "UNREACHED", "bfs_decremental", "bfs_incremental", "bfs_tree_static",
@@ -24,4 +33,6 @@ __all__ = [
     "count_components", "wcc_incremental_batch", "wcc_incremental_naive",
     "wcc_incremental_slab_iterator", "wcc_incremental_update_iterator",
     "wcc_labelprop_ref", "wcc_labelprop_sweep", "wcc_static",
+    "bfs_stream_property", "pagerank_stream_property",
+    "sssp_stream_property", "wcc_stream_property",
 ]

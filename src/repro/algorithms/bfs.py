@@ -101,3 +101,46 @@ def bfs_decremental(g: SlabGraph, state: TreeState, bsrc, bdst, bmask, *,
     return sssp_decremental(g, state, bsrc, bdst, bmask, src=src,
                             edge_capacity=edge_capacity, max_bpv=max_bpv,
                             g_in=g_in)
+
+
+# ---------------------------------------------------------------------------
+# repro.stream registration hook
+# ---------------------------------------------------------------------------
+
+def stream_property(src: int, *, edge_capacity: int, max_bpv: int = 1):
+    """PropertySpec: ⟨distance, parent⟩ BFS tree from ``src``, maintained
+    with the incremental/decremental SSSP engine (unit weights).  Deletions
+    are handled first (the store applies them first), then insertions; the
+    convergence loop sweeps the store's transpose view.
+
+    Requires an UNWEIGHTED store: on a weighted one the batch prologue's unit
+    weights would disagree with the sweep's stored weights (use
+    ``sssp.stream_property`` there instead)."""
+    from ..stream.properties import PropertySpec
+
+    def _init(store):
+        assert not store.weighted, \
+            "bfs stream_property needs an unweighted GraphStore; " \
+            "register sssp.stream_property on weighted stores"
+        state, _ = bfs_tree_static(store.forward, src,
+                                   edge_capacity=edge_capacity,
+                                   max_bpv=max_bpv, g_in=store.transpose)
+        return state
+
+    def _on_batch(store, state, batch):
+        if batch.del_src is not None:
+            state, _ = bfs_decremental(store.forward, state, batch.del_src,
+                                       batch.del_dst, batch.del_mask, src=src,
+                                       edge_capacity=edge_capacity,
+                                       max_bpv=max_bpv, g_in=store.transpose)
+        if batch.ins_src is not None:
+            state, _ = bfs_incremental(store.forward, state, batch.ins_src,
+                                       batch.ins_dst, batch.ins_mask,
+                                       edge_capacity=edge_capacity,
+                                       max_bpv=max_bpv, g_in=store.transpose)
+        return state
+
+    return PropertySpec(
+        name=f"bfs_{src}", init=_init, on_batch=_on_batch, refresh=_init,
+        state_like=lambda n: TreeState(jnp.zeros((n,), jnp.float32),
+                                       jnp.zeros((n,), jnp.int32)))

@@ -107,3 +107,29 @@ def pagerank_dynamic(g_in: SlabGraph, out_degree: jnp.ndarray,
     static-PageRank algorithm is applied on the entire graph after performing
     insertion/deletion', seeded with the pre-update vector)."""
     return pagerank(g_in, out_degree, init_pr=prev_pr, **kw)
+
+
+# ---------------------------------------------------------------------------
+# repro.stream registration hook
+# ---------------------------------------------------------------------------
+
+def stream_property(*, damping: float = 0.85, error_margin: float = 1e-5,
+                    max_iter: int = 100, contrib_impl: str = "ref"):
+    """PropertySpec for the stream registry: PageRank over the store's
+    transpose view with device-resident out-degrees; incremental ==
+    decremental == warm start, so ``on_batch`` ignores the batch contents."""
+    from ..stream.properties import PropertySpec
+
+    def _run(store, init_pr=None):
+        pr, _ = pagerank(store.transpose, store.out_degree, init_pr=init_pr,
+                         damping=damping, error_margin=error_margin,
+                         max_iter=max_iter, contrib_impl=contrib_impl)
+        return pr
+
+    return PropertySpec(
+        name="pagerank",
+        init=lambda store: _run(store),
+        on_batch=lambda store, state, batch: _run(store, init_pr=state),
+        refresh=lambda store: _run(store),
+        state_like=lambda n_vertices: jnp.zeros((n_vertices,), jnp.float32),
+        collapse_replay=True)  # warm start only reads the current graph

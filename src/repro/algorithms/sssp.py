@@ -256,3 +256,43 @@ def sssp_decremental(g: SlabGraph, state: TreeState, bsrc: jnp.ndarray,
     return run_to_convergence(g, state, improved,
                               edge_capacity=edge_capacity, max_bpv=max_bpv,
                               g_in=g_in)
+
+
+# ---------------------------------------------------------------------------
+# repro.stream registration hook
+# ---------------------------------------------------------------------------
+
+def stream_property(src: int, *, edge_capacity: int, max_bpv: int = 1,
+                    n_rounds: int = 32):
+    """PropertySpec: the ⟨distance, parent⟩ SSSP dependence tree from ``src``.
+    Deleted batch edges run the decremental invalidate/reseed path, inserted
+    edges the incremental relax prologue; both converge by sweeping the
+    store's transpose view.  Unweighted stores fall back to unit weights."""
+    from ..stream.properties import PropertySpec
+
+    def _init(store):
+        state, _ = sssp_static(store.forward, src,
+                               edge_capacity=edge_capacity, max_bpv=max_bpv,
+                               g_in=store.transpose)
+        return state
+
+    def _on_batch(store, state, batch):
+        if batch.del_src is not None:
+            state, _ = sssp_decremental(store.forward, state, batch.del_src,
+                                        batch.del_dst, batch.del_mask,
+                                        src=src, edge_capacity=edge_capacity,
+                                        max_bpv=max_bpv, n_rounds=n_rounds,
+                                        g_in=store.transpose)
+        if batch.ins_src is not None:
+            w = (batch.ins_w if batch.ins_w is not None
+                 else jnp.ones_like(batch.ins_src, jnp.float32))
+            state, _ = sssp_incremental(store.forward, state, batch.ins_src,
+                                        batch.ins_dst, w, batch.ins_mask,
+                                        edge_capacity=edge_capacity,
+                                        max_bpv=max_bpv, g_in=store.transpose)
+        return state
+
+    return PropertySpec(
+        name=f"sssp_{src}", init=_init, on_batch=_on_batch, refresh=_init,
+        state_like=lambda n: TreeState(jnp.zeros((n,), jnp.float32),
+                                       jnp.zeros((n,), jnp.int32)))

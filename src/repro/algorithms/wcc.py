@@ -193,3 +193,30 @@ def wcc_labelprop_ref(g: SlabGraph, *, max_iters: int = 100000
 
 def count_components(labels: jnp.ndarray) -> int:
     return int(jnp.sum((labels == jnp.arange(labels.shape[0])).astype(jnp.int32)))
+
+
+# ---------------------------------------------------------------------------
+# repro.stream registration hook
+# ---------------------------------------------------------------------------
+
+def stream_property(*, cap: int | None = None):
+    """PropertySpec: per-vertex component labels (min-id roots).  Insert-only
+    epochs advance with ``wcc_incremental_batch``; epochs that actually delete
+    edges fall back to the static recompute — decremental WCC on GPUs is an
+    open problem (paper §6.4), and the same holds here."""
+    from ..stream.properties import PropertySpec
+
+    def _refresh(store):
+        return wcc_static(store.forward, cap=cap)
+
+    def _on_batch(store, labels, batch):
+        if batch.n_deleted > 0:
+            return _refresh(store)
+        if batch.ins_src is not None:
+            labels = wcc_incremental_batch(labels, batch.ins_src,
+                                           batch.ins_dst, batch.ins_mask)
+        return labels
+
+    return PropertySpec(
+        name="wcc", init=_refresh, on_batch=_on_batch, refresh=_refresh,
+        state_like=lambda n: jnp.zeros((n,), jnp.int32))

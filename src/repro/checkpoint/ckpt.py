@@ -86,6 +86,22 @@ def latest_step(ckpt_dir: str | Path) -> Optional[int]:
     return None
 
 
+def read_manifest(ckpt_dir: str | Path, *, step: Optional[int] = None) -> Dict:
+    """Load a checkpoint's manifest without touching its leaves.
+
+    Restore paths that must rebuild a ``like`` pytree first (e.g. the stream
+    GraphStore, whose SlabGraph metadata lives in ``extra``) read this to
+    learn the structure, then call ``restore`` with the resolved step.
+    """
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    with open(ckpt_dir / f"step_{step:010d}" / "manifest.msgpack", "rb") as f:
+        return msgpack.unpackb(f.read())
+
+
 def restore(ckpt_dir: str | Path, like: Any, *, step: Optional[int] = None,
             shardings: Any = None) -> Tuple[Any, Dict]:
     """Restore into the structure of ``like``.

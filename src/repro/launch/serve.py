@@ -1,19 +1,82 @@
 """Serving launcher — the paper's kind of serving: a streaming dynamic-graph
-analytics service.
+analytics service, now a thin driver over the `repro.stream` subsystem.
 
-Accepts batched edge updates (insert/delete) interleaved with analytics
-queries (PageRank / BFS / WCC / membership) over the live SlabGraph, the
-pattern Meerkat's evaluation drives (batch updates → incremental recompute).
-``--requests`` synthesises a request stream; each request is served by the
-incremental algorithms, not a static recompute.
+The request stream mixes batched edge updates (inserts AND deletes — the
+paper benchmarks both directions) with analytics queries (PageRank / BFS /
+WCC / membership).  All state lives in the subsystem: the ``GraphStore``
+keeps the forward/transposed/symmetric views consistent and closes every
+update epoch via ``update_slab_pointers``; out-degrees are the store's
+device-resident ``degree`` field (no host-side ``np.add.at`` shadow); the
+``PropertyRegistry`` maintains each analytic incrementally under the chosen
+policy, and the ``RequestPipeline`` coalesces update bursts and batches
+membership queries.
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax.numpy as jnp
 import numpy as np
+
+
+def build_requests(store, rng, *, n_requests: int, batch: int,
+                   delete_frac: float, prop_names):
+    """Synthesize the request mix, one generator step per served request.
+
+    Deletions are sampled from a host-side ledger of currently-present edges
+    (the workload generator's bookkeeping, not graph state — the store owns
+    the graph).  Yields (kind, request) pairs lazily so each update samples
+    from the post-update ledger.
+    """
+    from ..core import pool_edges
+    from ..stream import MembershipQuery, PropertyRead, UpdateBatch
+
+    view = pool_edges(store.forward)
+    m = np.asarray(view.valid)
+    present = set(zip(np.asarray(view.src)[m].tolist(),
+                      np.asarray(view.dst)[m].astype(np.int64).tolist()))
+    kinds = ["update"] + [f"read:{p}" for p in prop_names] + ["member"]
+    V = store.n_vertices
+
+    for i in range(n_requests):
+        kind = kinds[i % len(kinds)]
+        if kind == "update":
+            n_del = int(batch * delete_frac)
+            n_ins = batch - n_del
+            ins = rng.integers(0, V, (n_ins, 2)).astype(np.uint32)
+            ins = ins[ins[:, 0] != ins[:, 1]]
+            pool = np.array(sorted(present), np.uint32) if present else \
+                np.zeros((0, 2), np.uint32)
+            dels = pool[rng.choice(len(pool), min(n_del, len(pool)),
+                                   replace=False)] if len(pool) else pool
+            present -= {(int(s), int(d)) for s, d in dels}
+            present |= {(int(s), int(d)) for s, d in ins}
+            yield kind, UpdateBatch(ins_src=ins[:, 0], ins_dst=ins[:, 1],
+                                    del_src=dels[:, 0] if len(dels) else (),
+                                    del_dst=dels[:, 1] if len(dels) else ())
+        elif kind.startswith("read:"):
+            yield kind, PropertyRead(kind.split(":", 1)[1])
+        else:
+            q = rng.integers(0, V, (1024, 2)).astype(np.uint32)
+            yield kind, MembershipQuery(src=q[:, 0], dst=q[:, 1])
+
+
+def describe(resp, n_vertices: int) -> str:
+    """One-line detail per response kind for the serve log."""
+    p = resp.payload
+    if resp.kind == "update":
+        return f"inserted={p['inserted']} deleted={p['deleted']}"
+    if resp.kind == "member":
+        return f"hits={p['hits']}/{len(p['found'])}"
+    if resp.kind == "property":
+        v = np.asarray(p["value"].dist if hasattr(p["value"], "dist")
+                       else p["value"])
+        if p["name"].startswith("bfs"):
+            return f"reachable={int((v < 1e29).sum())}"
+        if p["name"] == "wcc":
+            return f"components={int((v == np.arange(n_vertices)).sum())}"
+        return f"top={float(v.max()):.5f}"
+    return ""
 
 
 def main():
@@ -22,79 +85,52 @@ def main():
     ap.add_argument("--initial-edges", type=int, default=100000)
     ap.add_argument("--requests", type=int, default=30)
     ap.add_argument("--batch", type=int, default=2048)
+    ap.add_argument("--delete-frac", type=float, default=0.25,
+                    help="fraction of each update batch that deletes")
+    ap.add_argument("--policy", choices=["lazy", "eager"], default="lazy")
+    ap.add_argument("--checkpoint", default=None,
+                    help="directory to snapshot the store into at the end")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    from ..algorithms import (bfs_incremental, bfs_tree_static,
-                              pagerank, pagerank_dynamic,
-                              wcc_incremental_batch, wcc_static)
-    from ..core import (ensure_capacity, from_edges_host, insert_edges,
-                        query_edges, update_slab_pointers)
+    from ..algorithms import (bfs_stream_property, pagerank_stream_property,
+                              wcc_stream_property)
     from ..data.synth import rmat_edges
+    from ..stream import GraphStore, PropertyRegistry, RequestPipeline
 
     rng = np.random.default_rng(args.seed)
     V = args.vertices
     src, dst = rmat_edges(V, args.initial_edges, seed=args.seed)
-    print(f"[serve] boot: V={V} E={len(src)}")
-
-    g = from_edges_host(V, src, dst, hashing=False,
-                        slack_slabs=args.requests * args.batch // 64 + 512)
-    g_in = from_edges_host(V, dst, src, hashing=False,
-                           slack_slabs=args.requests * args.batch // 64 + 512)
-    out_deg = np.bincount(src, minlength=V).astype(np.int32)
+    # pagerank/bfs/wcc read only the forward + transpose views; skip the
+    # symmetric one rather than pay its maintenance every epoch
+    store = GraphStore.from_edges(
+        V, src, dst, hashing=False, with_symmetric=False,
+        slack_slabs=args.requests * args.batch // 64 + 512)
+    print(f"[serve] boot: V={V} E={store.n_edges}")
+    registry = PropertyRegistry(store)
     cap = len(src) + args.requests * args.batch + 4096
+    registry.register(pagerank_stream_property(), policy=args.policy)
+    registry.register(bfs_stream_property(0, edge_capacity=cap),
+                      policy=args.policy)
+    registry.register(wcc_stream_property(), policy=args.policy)
+    pipeline = RequestPipeline(store, registry)
 
-    pr, _ = pagerank(g_in, jnp.asarray(out_deg))
-    bfs_state, _ = bfs_tree_static(g, 0, edge_capacity=cap)
-    labels = wcc_static(g)
-
-    def pad(a, n):
-        out = np.full(n, 0xFFFFFFFF, np.uint32)
-        out[:len(a)] = a
-        return jnp.asarray(out)
-
-    kinds = ["update", "pagerank", "bfs", "wcc", "member"]
     t0 = time.time()
-    for i in range(args.requests):
-        kind = kinds[i % len(kinds)]
-        t = time.time()
-        if kind == "update":
-            bs = rng.integers(0, V, args.batch).astype(np.uint32)
-            bd = rng.integers(0, V, args.batch).astype(np.uint32)
-            g = ensure_capacity(g, args.batch + 64)
-            g_in = ensure_capacity(g_in, args.batch + 64)
-            g, ins = insert_edges(g, pad(bs, args.batch),
-                                  pad(bd, args.batch))
-            g_in, _ = insert_edges(g_in, pad(bd, args.batch),
-                                   pad(bs, args.batch))
-            ins_np = np.asarray(ins)
-            np.add.at(out_deg, bs[ins_np].astype(np.int64), 1)
-            # incremental maintenance of every live analytic
-            bfs_state, _ = bfs_incremental(
-                g, bfs_state, pad(bs, args.batch), pad(bd, args.batch),
-                jnp.asarray(ins), edge_capacity=cap)
-            labels = wcc_incremental_batch(labels, pad(bs, args.batch),
-                                           pad(bd, args.batch),
-                                           jnp.asarray(ins))
-            detail = f"inserted={int(ins_np.sum())}"
-        elif kind == "pagerank":
-            pr, iters = pagerank_dynamic(g_in, jnp.asarray(out_deg), pr)
-            detail = f"iters={int(iters)} top={float(pr.max()):.5f}"
-        elif kind == "bfs":
-            reach = int((np.asarray(bfs_state.dist) < 1e29).sum())
-            detail = f"reachable={reach}"
-        elif kind == "wcc":
-            n_comp = int((np.asarray(labels) ==
-                          np.arange(V)).sum())
-            detail = f"components={n_comp}"
-        else:
-            qs = rng.integers(0, V, 1024).astype(np.uint32)
-            qd = rng.integers(0, V, 1024).astype(np.uint32)
-            found = query_edges(g, jnp.asarray(qs), jnp.asarray(qd))
-            detail = f"hits={int(np.asarray(found).sum())}/1024"
-        print(f"[serve] req {i:03d} {kind:9s} {1e3 * (time.time() - t):8.1f}"
-              f" ms  {detail}")
-    print(f"[serve] {args.requests} requests in {time.time() - t0:.1f}s")
+    stream = build_requests(store, rng, n_requests=args.requests,
+                            batch=args.batch, delete_frac=args.delete_frac,
+                            prop_names=["pagerank", "bfs_0", "wcc"])
+    for i, (kind, req) in enumerate(stream):
+        resp = pipeline.run([req])[0]
+        print(f"[serve] req {i:03d} {kind:13s} {1e3 * resp.latency_s:8.1f}"
+              f" ms  v{resp.version:<4d} {describe(resp, V)}")
+    elapsed = time.time() - t0
+    print(f"[serve] {args.requests} requests in {elapsed:.1f}s "
+          f"({args.requests / elapsed:.2f} req/s), "
+          f"store v{store.version}, E={store.n_edges}")
+
+    if args.checkpoint:
+        path = store.save(args.checkpoint, registry=registry)
+        print(f"[serve] checkpointed store+properties -> {path}")
 
 
 if __name__ == "__main__":

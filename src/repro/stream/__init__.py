@@ -1,0 +1,22 @@
+"""`repro.stream` — versioned GraphStore subsystem (DESIGN.md §5).
+
+The streaming-graph serving layer over the Meerkat core: a multi-view update
+plane (``GraphStore``), an incremental-property registry keyed to store
+versions (``PropertyRegistry`` + the ``stream_property`` hooks in
+``repro.algorithms``), and a batched request pipeline with update coalescing
+(``RequestPipeline``).
+"""
+from .store import (ALL_VIEWS, FORWARD, SYMMETRIC, TRANSPOSE, AppliedBatch,
+                    GraphStore, dedup_pairs)
+from .properties import EAGER, LAZY, PropertyRegistry, PropertySpec
+from .requests import (MembershipQuery, NeighborsQuery, PropertyRead, Request,
+                       RequestPipeline, Response, UpdateBatch,
+                       coalesce_updates)
+
+__all__ = [
+    "ALL_VIEWS", "FORWARD", "SYMMETRIC", "TRANSPOSE",
+    "AppliedBatch", "GraphStore", "dedup_pairs",
+    "EAGER", "LAZY", "PropertyRegistry", "PropertySpec",
+    "MembershipQuery", "NeighborsQuery", "PropertyRead", "Request",
+    "RequestPipeline", "Response", "UpdateBatch", "coalesce_updates",
+]

@@ -1,0 +1,209 @@
+"""Typed requests + batched execution pipeline for `repro.stream`.
+
+The request plane of the streaming service: updates and queries arrive as
+typed records, and the pipeline turns a request sequence into the minimum
+number of device calls:
+
+* consecutive ``UpdateBatch`` requests coalesce (net-effect per edge: the
+  LAST operation on a pair wins, matching sequential application) into one
+  ``GraphStore.apply`` — one epoch, one capacity check, one notification,
+* consecutive ``MembershipQuery`` requests merge into one ``query_edges``
+  call and split back per-request,
+* ``PropertyRead`` hits the registry (lazy properties catch up here —
+  queries only pay for the properties they read).
+
+Every request gets a ``Response`` carrying the store version it observed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from .properties import PropertyRegistry
+from .store import GraphStore
+
+
+# ---------------------------------------------------------------------------
+# request / response records
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class UpdateBatch:
+    """Mixed edge update: deletions apply before insertions (store contract)."""
+    ins_src: Any = ()
+    ins_dst: Any = ()
+    ins_w: Any = None
+    del_src: Any = ()
+    del_dst: Any = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class MembershipQuery:
+    src: Any
+    dst: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class NeighborsQuery:
+    vertices: Any
+    out_capacity: int = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class PropertyRead:
+    name: str
+
+
+Request = Union[UpdateBatch, MembershipQuery, NeighborsQuery, PropertyRead]
+
+
+@dataclasses.dataclass
+class Response:
+    kind: str
+    version: int
+    payload: Dict[str, Any]
+    latency_s: float
+
+
+# ---------------------------------------------------------------------------
+# update coalescing
+# ---------------------------------------------------------------------------
+
+def coalesce_updates(batches: Sequence[UpdateBatch]) -> UpdateBatch:
+    """Net a run of update batches into one equivalent batch.
+
+    Sequential semantics: within one batch deletions precede insertions, and
+    batches apply in order — so per edge the LAST operation in that flattened
+    sequence decides whether it ends up inserted or deleted.  Weights ride
+    along with their insert; an edge deleted and later re-inserted stays in
+    the delete list too (``apply`` deletes first), so the re-insert lands its
+    new weight instead of being rejected against the still-present edge.
+    """
+    srcs, dsts, ws, ops = [], [], [], []
+    for b in batches:
+        d_s = np.asarray(b.del_src, np.uint32)
+        if len(d_s):
+            srcs.append(d_s)
+            dsts.append(np.asarray(b.del_dst, np.uint32))
+            ws.append(np.zeros(len(d_s), np.float32))
+            ops.append(np.zeros(len(d_s), np.int8))
+        i_s = np.asarray(b.ins_src, np.uint32)
+        if len(i_s):
+            srcs.append(i_s)
+            dsts.append(np.asarray(b.ins_dst, np.uint32))
+            ws.append(np.ones(len(i_s), np.float32) if b.ins_w is None
+                      else np.asarray(b.ins_w, np.float32))
+            ops.append(np.ones(len(i_s), np.int8))
+    if not srcs:
+        return UpdateBatch()
+    src = np.concatenate(srcs)
+    dst = np.concatenate(dsts)
+    w = np.concatenate(ws)
+    op = np.concatenate(ops)
+    key = (src.astype(np.uint64) << np.uint64(32)) | dst.astype(np.uint64)
+    order = np.argsort(key, kind="stable")      # stable: sequence order kept
+    k_s = key[order]
+    start = np.ones(len(k_s), bool)
+    start[1:] = k_s[1:] != k_s[:-1]
+    last = np.ones(len(k_s), bool)
+    last[:-1] = start[1:]                       # last occurrence per edge
+    take = order[last]
+    ins = op[take] == 1
+    had_del = np.minimum.reduceat(op[order], np.nonzero(start)[0]) == 0
+    has_w = any(b.ins_w is not None for b in batches)
+    deleted = ~ins | (ins & had_del)            # re-inserts delete first
+    return UpdateBatch(
+        ins_src=src[take][ins], ins_dst=dst[take][ins],
+        ins_w=w[take][ins] if has_w else None,
+        del_src=src[take][deleted], del_dst=dst[take][deleted])
+
+
+# ---------------------------------------------------------------------------
+# pipeline
+# ---------------------------------------------------------------------------
+
+class RequestPipeline:
+    """Executes a request sequence against (store, registry) with coalescing
+    and query batching; responses align 1:1 with the input requests."""
+
+    def __init__(self, store: GraphStore,
+                 registry: Optional[PropertyRegistry] = None, *,
+                 coalesce: bool = True, batch_membership: bool = True):
+        self.store = store
+        self.registry = registry
+        self.coalesce = coalesce
+        self.batch_membership = batch_membership
+
+    # -- group runners ------------------------------------------------------
+    def _apply_updates(self, group: List[UpdateBatch]) -> Dict[str, Any]:
+        net = group[0] if len(group) == 1 else coalesce_updates(group)
+        applied = self.store.apply(net.ins_src, net.ins_dst, net.ins_w,
+                                   net.del_src, net.del_dst)
+        return {"inserted": applied.n_inserted, "deleted": applied.n_deleted,
+                "coalesced": len(group)}
+
+    def _run_membership(self, group: List[MembershipQuery]) -> List[dict]:
+        src = np.concatenate([np.asarray(q.src, np.uint32) for q in group])
+        dst = np.concatenate([np.asarray(q.dst, np.uint32) for q in group])
+        found = self.store.query(src, dst)
+        out, at = [], 0
+        for q in group:
+            n = len(np.asarray(q.src))
+            out.append({"found": found[at:at + n],
+                        "hits": int(found[at:at + n].sum()),
+                        "merged": len(group)})
+            at += n
+        return out
+
+    # -- driver -------------------------------------------------------------
+    def run(self, requests: Sequence[Request]) -> List[Response]:
+        responses: List[Optional[Response]] = [None] * len(requests)
+        i = 0
+        while i < len(requests):
+            r = requests[i]
+            j = i + 1
+            if isinstance(r, UpdateBatch):
+                while (self.coalesce and j < len(requests)
+                       and isinstance(requests[j], UpdateBatch)):
+                    j += 1
+                t0 = time.perf_counter()
+                payload = self._apply_updates(list(requests[i:j]))
+                dt = time.perf_counter() - t0
+                for k in range(i, j):
+                    responses[k] = Response("update", self.store.version,
+                                            payload, dt)
+            elif isinstance(r, MembershipQuery):
+                while (self.batch_membership and j < len(requests)
+                       and isinstance(requests[j], MembershipQuery)):
+                    j += 1
+                t0 = time.perf_counter()
+                payloads = self._run_membership(list(requests[i:j]))
+                dt = time.perf_counter() - t0
+                for k, p in zip(range(i, j), payloads):
+                    responses[k] = Response("member", self.store.version,
+                                            p, dt)
+            elif isinstance(r, NeighborsQuery):
+                t0 = time.perf_counter()
+                ef = self.store.neighbors(r.vertices,
+                                          out_capacity=r.out_capacity)
+                n = int(ef.size)
+                payload = {"src": np.asarray(ef.src)[:n],
+                           "dst": np.asarray(ef.dst)[:n],
+                           "count": n, "overflow": bool(ef.overflow)}
+                responses[i] = Response("neighbors", self.store.version,
+                                        payload, time.perf_counter() - t0)
+            elif isinstance(r, PropertyRead):
+                assert self.registry is not None, \
+                    "PropertyRead requires a PropertyRegistry"
+                t0 = time.perf_counter()
+                value = self.registry.read(r.name)
+                responses[i] = Response("property", self.store.version,
+                                        {"name": r.name, "value": value},
+                                        time.perf_counter() - t0)
+            else:
+                raise TypeError(f"unknown request {type(r).__name__}")
+            i = j
+        return responses

@@ -1,0 +1,388 @@
+"""GraphStore — the versioned multi-view update plane of `repro.stream`.
+
+Meerkat's evaluation loop (apply a batch of edge inserts/deletes, then
+incrementally recompute analytics) is the inner loop of a streaming-graph
+service.  The store owns that loop end-to-end: it holds the forward,
+transposed, and symmetric `SlabGraph` views as ONE versioned unit and applies
+every update batch to all of them consistently, so algorithm code can always
+pick the view its sweep direction wants (DESIGN.md §3) without ever seeing a
+half-updated pair of views.
+
+Contract per ``apply(inserts, deletes)`` (DESIGN.md §5):
+
+  1. batches are deduped on the host and padded to a power-of-two lane count
+     (bounds the number of jit shape specialisations),
+  2. ``ensure_capacity`` runs automatically on every live view,
+  3. deletions apply before insertions (a pair present in both ends the epoch
+     *present*),
+  4. the symmetric view is maintained as the true union of both directions:
+     deleting (s,d) removes (s,d)/(d,s) from it only when the reverse edge
+     (d,s) is itself absent from the post-delete forward view,
+  5. out-degrees stay on device (``store.out_degree`` IS the forward view's
+     ``degree`` field — no host shadow),
+  6. registered listeners (the property registry) are notified while the
+     update epoch is still OPEN, then every view's epoch is closed via
+     ``update_slab_pointers`` and the monotonic ``version`` has been bumped.
+
+A bounded log of applied batches supports lazy property catch-up
+(``batches_since``); when the log has been truncated the registry falls back
+to a static refresh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.batch import delete_edges, insert_edges, query_edges
+from ..core.hashing import INVALID_VERTEX, SLAB_WIDTH
+from ..core.slab_graph import (SlabGraph, empty, ensure_capacity,
+                               from_edges_host, update_slab_pointers)
+from ..core.worklist import EdgeFrontier, expand_vertices
+
+FORWARD = "forward"
+TRANSPOSE = "transpose"
+SYMMETRIC = "symmetric"
+ALL_VIEWS = (FORWARD, TRANSPOSE, SYMMETRIC)
+
+
+def _pow2(n: int, lo: int = 64) -> int:
+    p = lo
+    while p < n:
+        p *= 2
+    return p
+
+
+def _pad_u32(a: np.ndarray, n: int) -> jnp.ndarray:
+    out = np.full(n, INVALID_VERTEX, np.uint32)
+    out[:len(a)] = a
+    return jnp.asarray(out)
+
+
+def _pad_f32(a: Optional[np.ndarray], n: int) -> Optional[jnp.ndarray]:
+    if a is None:
+        return None
+    out = np.zeros(n, np.float32)
+    out[:len(a)] = a
+    return jnp.asarray(out)
+
+
+def dedup_pairs(src, dst, w=None) -> Tuple[np.ndarray, np.ndarray,
+                                           Optional[np.ndarray]]:
+    """Host-side (src,dst) dedup, first occurrence wins (insert semantics)."""
+    src = np.asarray(src, dtype=np.uint32)
+    dst = np.asarray(dst, dtype=np.uint32)
+    w = None if w is None else np.asarray(w, dtype=np.float32)
+    if len(src) == 0:
+        return src, dst, w
+    key = (src.astype(np.uint64) << np.uint64(32)) | dst.astype(np.uint64)
+    _, idx = np.unique(key, return_index=True)
+    idx.sort()
+    return src[idx], dst[idx], None if w is None else w[idx]
+
+
+@dataclasses.dataclass(frozen=True)
+class AppliedBatch:
+    """One closed update epoch, as seen by incremental property maintainers.
+
+    Arrays are the padded device batches the views were mutated with; the
+    masks mark edges *actually* inserted into / deleted from the forward view
+    (duplicates and misses excluded).  ``ins_src is None`` means the epoch had
+    no insert phase (likewise deletes).
+    """
+    version: int
+    ins_src: Optional[jnp.ndarray]
+    ins_dst: Optional[jnp.ndarray]
+    ins_w: Optional[jnp.ndarray]
+    ins_mask: Optional[jnp.ndarray]
+    del_src: Optional[jnp.ndarray]
+    del_dst: Optional[jnp.ndarray]
+    del_mask: Optional[jnp.ndarray]
+    n_inserted: int
+    n_deleted: int
+
+
+class GraphStore:
+    """Forward + transposed + symmetric SlabGraph views as one versioned unit."""
+
+    def __init__(self, views: Dict[str, SlabGraph], *, weighted: bool,
+                 version: int = 0, log_capacity: int = 64):
+        assert FORWARD in views, "a GraphStore always carries the forward view"
+        unknown = set(views) - set(ALL_VIEWS)
+        assert not unknown, f"unknown views {unknown}"
+        self._views = dict(views)
+        self.weighted = bool(weighted)
+        self.version = int(version)
+        self._log_capacity = int(log_capacity)
+        self._log: List[AppliedBatch] = []
+        self._log_floor = int(version)  # version the oldest logged batch follows
+        self._listeners: List[Callable[[AppliedBatch], None]] = []
+        self._max_bpv = int(np.max(np.asarray(
+            views[FORWARD].bucket_count))) if views[FORWARD].n_vertices else 1
+
+    # ------------------------------------------------------------- construct
+    @classmethod
+    def from_edges(cls, n_vertices: int, src, dst, w=None, *,
+                   hashing: bool = False, load_factor: float = 0.7,
+                   slack_slabs: int = 0, with_symmetric: bool = True,
+                   log_capacity: int = 64) -> "GraphStore":
+        """Bulk-build every view from one host edge list (dedup shared)."""
+        src, dst, w = dedup_pairs(src, dst, w)
+        kw = dict(hashing=hashing, load_factor=load_factor,
+                  slack_slabs=slack_slabs)
+        views = {
+            FORWARD: from_edges_host(n_vertices, src, dst, w, **kw),
+            TRANSPOSE: from_edges_host(n_vertices, dst, src, w, **kw),
+        }
+        if with_symmetric:
+            s2 = np.concatenate([src, dst])
+            d2 = np.concatenate([dst, src])
+            w2 = None if w is None else np.concatenate([w, w])
+            views[SYMMETRIC] = from_edges_host(n_vertices, s2, d2, w2, **kw)
+        return cls(views, weighted=w is not None, log_capacity=log_capacity)
+
+    # ------------------------------------------------------------- accessors
+    @property
+    def forward(self) -> SlabGraph:
+        return self._views[FORWARD]
+
+    @property
+    def transpose(self) -> SlabGraph:
+        return self._views[TRANSPOSE]
+
+    @property
+    def symmetric(self) -> Optional[SlabGraph]:
+        return self._views.get(SYMMETRIC)
+
+    @property
+    def views(self) -> Dict[str, SlabGraph]:
+        return dict(self._views)
+
+    @property
+    def n_vertices(self) -> int:
+        return self.forward.n_vertices
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.forward.n_edges)
+
+    @property
+    def out_degree(self) -> jnp.ndarray:
+        """Device-resident out-degrees — the forward view's ``degree`` field."""
+        return self.forward.degree
+
+    @property
+    def in_degree(self) -> jnp.ndarray:
+        return self.transpose.degree
+
+    @property
+    def max_bpv(self) -> int:
+        return self._max_bpv
+
+    def add_listener(self, fn: Callable[[AppliedBatch], None]) -> None:
+        """Subscribe to applied batches (called with the epoch still open)."""
+        self._listeners.append(fn)
+
+    def batches_since(self, version: int) -> Optional[List[AppliedBatch]]:
+        """Applied batches after ``version``, oldest first; None if the
+        bounded log no longer reaches back that far."""
+        if version == self.version:
+            return []
+        if version < self._log_floor:
+            return None
+        return [b for b in self._log if b.version > version]
+
+    # ----------------------------------------------------------------- apply
+    def apply(self, ins_src=None, ins_dst=None, ins_w=None,
+              del_src=None, del_dst=None) -> AppliedBatch:
+        """Apply one mixed update batch to every view; close the epoch.
+
+        Deletions apply first, then insertions (both deduped).  Weighted
+        stores default missing insert weights to 1.0.  Returns the
+        ``AppliedBatch`` record (also appended to the catch-up log).
+        """
+        i_s, i_d, i_w = dedup_pairs(
+            () if ins_src is None else ins_src,
+            () if ins_dst is None else ins_dst, ins_w)
+        d_s, d_d, _ = dedup_pairs(
+            () if del_src is None else del_src,
+            () if del_dst is None else del_dst)
+        if self.weighted and len(i_s) and i_w is None:
+            i_w = np.ones(len(i_s), np.float32)
+
+        fwd, tr, sym = self.forward, self.transpose, self.symmetric
+
+        # -- capacity (inserts allocate at most one slab per batch lane) ----
+        if len(i_s):
+            p = _pow2(len(i_s))
+            fwd = ensure_capacity(fwd, p + 64)
+            tr = ensure_capacity(tr, p + 64)
+            if sym is not None:
+                sym = ensure_capacity(sym, 2 * p + 64)
+
+        # -- delete phase ---------------------------------------------------
+        del_sj = del_dj = del_mask = None
+        n_deleted = 0
+        if len(d_s):
+            p = _pow2(len(d_s))
+            del_sj, del_dj = _pad_u32(d_s, p), _pad_u32(d_d, p)
+            fwd, del_mask = delete_edges(fwd, del_sj, del_dj)
+            tr, _ = delete_edges(tr, del_dj, del_sj)
+            if sym is not None:
+                # (s,d)/(d,s) leave the symmetric union only when the reverse
+                # edge is absent from the post-delete forward view.
+                rev = query_edges(fwd, del_dj, del_sj)
+                gone = ~rev
+                s2 = jnp.concatenate([jnp.where(gone, del_sj, INVALID_VERTEX),
+                                      jnp.where(gone, del_dj, INVALID_VERTEX)])
+                d2 = jnp.concatenate([del_dj, del_sj])
+                sym, _ = delete_edges(sym, s2, d2)
+            n_deleted = int(jnp.sum(del_mask.astype(jnp.int32)))
+
+        # -- insert phase ---------------------------------------------------
+        ins_sj = ins_dj = ins_wj = ins_mask = None
+        n_inserted = 0
+        if len(i_s):
+            p = _pow2(len(i_s))
+            ins_sj, ins_dj = _pad_u32(i_s, p), _pad_u32(i_d, p)
+            ins_wj = _pad_f32(i_w, p)
+            fwd, ins_mask = insert_edges(fwd, ins_sj, ins_dj, ins_wj)
+            tr, _ = insert_edges(tr, ins_dj, ins_sj, ins_wj)
+            if sym is not None:
+                sym, _ = insert_edges(
+                    sym, jnp.concatenate([ins_sj, ins_dj]),
+                    jnp.concatenate([ins_dj, ins_sj]),
+                    None if ins_wj is None
+                    else jnp.concatenate([ins_wj, ins_wj]))
+            n_inserted = int(jnp.sum(ins_mask.astype(jnp.int32)))
+
+        self._views[FORWARD] = fwd
+        self._views[TRANSPOSE] = tr
+        if sym is not None:
+            self._views[SYMMETRIC] = sym
+
+        # -- version bump + notification (epoch still open) -----------------
+        self.version += 1
+        batch = AppliedBatch(
+            version=self.version,
+            ins_src=ins_sj, ins_dst=ins_dj, ins_w=ins_wj, ins_mask=ins_mask,
+            del_src=del_sj, del_dst=del_dj, del_mask=del_mask,
+            n_inserted=n_inserted, n_deleted=n_deleted)
+        self._log.append(batch)
+        if len(self._log) > self._log_capacity:
+            self._log = self._log[-self._log_capacity:]
+            self._log_floor = self._log[0].version - 1
+        for fn in self._listeners:
+            fn(batch)
+
+        # -- close the epoch on every view ----------------------------------
+        for name, g in self._views.items():
+            self._views[name] = update_slab_pointers(g)
+        return batch
+
+    # --------------------------------------------------------------- queries
+    def query(self, src, dst) -> np.ndarray:
+        """Batched edge-membership against the forward view (host arrays in,
+        host bool array out, trimmed to the query length)."""
+        src = np.asarray(src, np.uint32)
+        dst = np.asarray(dst, np.uint32)
+        p = _pow2(max(len(src), 1))
+        found = query_edges(self.forward, _pad_u32(src, p), _pad_u32(dst, p))
+        return np.asarray(found)[:len(src)]
+
+    def neighbors(self, vertices, *, out_capacity: int = 4096
+                  ) -> EdgeFrontier:
+        """Current out-edges of ``vertices`` (forward view) as an EdgeFrontier."""
+        vertices = np.asarray(vertices, np.uint32)
+        p = _pow2(max(len(vertices), 1))
+        verts = _pad_u32(vertices, p)
+        vmask = jnp.asarray(np.arange(p) < len(vertices))
+        return expand_vertices(self.forward, verts, vmask,
+                               out_capacity=_pow2(out_capacity),
+                               max_bpv=self._max_bpv)
+
+    # ------------------------------------------------------------ checkpoint
+    def save(self, ckpt_dir, step: Optional[int] = None, *, registry=None,
+             extra: Optional[dict] = None, keep_last: int = 3):
+        """Persist all views (+ registered property states) atomically.
+
+        The manifest's ``extra`` carries everything ``restore`` needs to
+        rebuild the pytree structure: per-view bucket metadata, the store
+        version, and per-property versions.
+        """
+        from ..checkpoint import ckpt
+        step = self.version if step is None else int(step)
+        props = {} if registry is None else registry.states()
+        prop_versions = {} if registry is None else registry.versions()
+        meta = {
+            "stream_store": True,
+            "version": int(self.version),
+            "n_vertices": int(self.n_vertices),
+            "weighted": bool(self.weighted),
+            "views": {name: int(g.n_buckets)
+                      for name, g in self._views.items()},
+            "prop_versions": {k: int(v) for k, v in prop_versions.items()},
+        }
+        if extra:
+            meta.update(extra)
+        return ckpt.save(ckpt_dir, step, {"views": dict(self._views),
+                                          "props": props}, extra=meta,
+                         keep_last=keep_last)
+
+    @classmethod
+    def restore(cls, ckpt_dir, *, step: Optional[int] = None,
+                specs: Sequence = (), policies: Optional[Dict[str, str]] = None,
+                log_capacity: int = 64):
+        """Rebuild (store, registry) from a checkpoint.
+
+        ``specs`` must cover every property saved in the checkpoint (their
+        ``state_like`` builds the restore skeleton; their maintainers resume
+        from the saved states + versions).  Returns ``(store, registry)``;
+        the registry is None when the checkpoint carried no properties and
+        no specs were given.
+        """
+        from ..checkpoint import ckpt
+        manifest = ckpt.read_manifest(ckpt_dir, step=step)
+        meta = manifest["extra"]
+        assert meta.get("stream_store"), \
+            f"{ckpt_dir} step {manifest['step']} is not a GraphStore checkpoint"
+        V = int(meta["n_vertices"])
+        weighted = bool(meta["weighted"])
+
+        def view_like(n_buckets: int) -> SlabGraph:
+            bc = np.zeros(V, np.int32)
+            bc[0] = n_buckets
+            return empty(V, bc, n_buckets + 1, weighted=weighted)
+
+        like_views = {name: view_like(nb)
+                      for name, nb in meta["views"].items()}
+        spec_by_name = {s.name: s for s in specs}
+        like_props = {}
+        for name in meta["prop_versions"]:
+            if name not in spec_by_name:
+                raise KeyError(
+                    f"checkpoint stores property {name!r}; pass its "
+                    f"PropertySpec via specs= to restore it")
+            like_props[name] = spec_by_name[name].state_like(V)
+        tree, _ = ckpt.restore(ckpt_dir, {"views": like_views,
+                                          "props": like_props},
+                               step=manifest["step"])
+        store = cls(tree["views"], weighted=weighted,
+                    version=meta["version"], log_capacity=log_capacity)
+
+        registry = None
+        if spec_by_name:
+            from .properties import PropertyRegistry
+            registry = PropertyRegistry(store)
+            policies = policies or {}
+            for name, spec in spec_by_name.items():
+                if name in tree["props"]:
+                    registry.register(spec,
+                                      policy=policies.get(name, "lazy"),
+                                      _state=tree["props"][name],
+                                      _version=meta["prop_versions"][name])
+                else:
+                    registry.register(spec, policy=policies.get(name, "lazy"))
+        return store, registry
