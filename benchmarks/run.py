@@ -22,7 +22,7 @@ def main() -> None:
 
     from . import (dynamic_speedup, memory_table, pagerank_bench,
                    serve_bench, sweep_bench, traversal, triangle_bench,
-                   update_throughput, wcc_bench)
+                   update_bench, update_throughput, wcc_bench)
     suites = {
         "memory_table": memory_table,        # Table 5
         "update_throughput": update_throughput,  # Figs 3–5
@@ -33,6 +33,7 @@ def main() -> None:
         "wcc": wcc_bench,                    # Fig 12 + Table 6
         "sweep": sweep_bench,                # old-path vs slab-sweep engine
         "serve": serve_bench,                # legacy loop vs repro.stream
+        "update": update_bench,              # Fig 5 old-path vs update engine
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

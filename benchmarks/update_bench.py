@@ -1,0 +1,284 @@
+"""Old path vs slab-update engine — the paper's Fig. 5-style update plane.
+
+Reproduces the query / insert / delete / mixed throughput sweep over batch
+sizes, A/B-ing the pre-engine path (the whole-pool jnp oracle the entry
+points used to be) against the fused engine, plus the GraphStore multi-view
+apply per view count (legacy per-view pipeline vs the single stacked
+``update_views`` dispatch).  Engine/oracle agreement is asserted on every
+workload (final graphs must be leaf-for-leaf identical) — this module
+doubles as the CI update-plane smoke.
+
+Two measurement styles:
+
+* ``*_stream`` rows — the streaming regime the engine is built for: a
+  sequence of batches threads the graph through the op, the engine donating
+  buffers (in-place pool mutation), the old path paying the functional
+  copy.  ``mixed_stream`` (delete+insert per round, one fused dispatch) is
+  the paper's update benchmark shape and the acceptance metric.
+* plain rows — one stateless call on a fixed graph (no donation possible
+  for either side), isolating the run-local-planning win alone.
+
+Results append to the CSV stream and are written to ``BENCH_update.json``.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (ensure_capacity, from_edges_host, next_pow2,
+                        update_slab_pointers)
+from repro.core.batch import (apply_update, delete_edges, insert_edges,
+                              query_edges)
+from repro.core.hashing import INVALID_VERTEX
+from repro.data.synth import rmat_edges
+from repro.stream import GraphStore
+from repro.stream.store import _pad_f32, _pad_u32
+
+from .timing import row, time_fn
+
+_OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_update.json"
+
+_pad = _pad_u32
+
+
+def _copy(g):
+    return jax.tree_util.tree_map(jnp.array, g)
+
+
+def _tree_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def _stream(g0, batches, step, iters=3):
+    """Median wall-time (us) of threading ``batches`` through ``step``."""
+    ts = []
+    out = None
+    for _ in range(iters):
+        g = _copy(g0)
+        jax.block_until_ready(g.keys)
+        t0 = time.perf_counter()
+        for b in batches:
+            g = step(g, b)
+        jax.block_until_ready(g.keys)
+        ts.append(time.perf_counter() - t0)
+        out = g
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6, out
+
+
+def _legacy_store_apply(views, weighted, ins_src, ins_dst, ins_w,
+                        del_src, del_dst):
+    """The PR-2 GraphStore.apply pipeline: per-phase jit calls through the
+    oracle path, one functional copy per view per phase, host syncs between
+    phases.  Kept here as the A/B baseline for the stacked dispatch."""
+    from repro.stream.store import dedup_pairs
+    i_s, i_d, i_w = dedup_pairs(ins_src, ins_dst, ins_w)
+    d_s, d_d, _ = dedup_pairs(del_src, del_dst)
+    if weighted and len(i_s) and i_w is None:
+        i_w = np.ones(len(i_s), np.float32)
+    fwd = views.get("forward")
+    tr = views.get("transpose")
+    sym = views.get("symmetric")
+    kw = dict(impl="oracle")
+    if len(i_s):
+        p = next_pow2(len(i_s))
+        fwd = ensure_capacity(fwd, p + 64)
+        if tr is not None:
+            tr = ensure_capacity(tr, p + 64)
+        if sym is not None:
+            sym = ensure_capacity(sym, 2 * p + 64)
+    if len(d_s):
+        p = next_pow2(len(d_s))
+        ds, dd = _pad_u32(d_s, p), _pad_u32(d_d, p)
+        fwd, dm = delete_edges(fwd, ds, dd, **kw)
+        if tr is not None:
+            tr, _ = delete_edges(tr, dd, ds, **kw)
+        if sym is not None:
+            rev = query_edges(fwd, dd, ds, **kw)
+            gone = ~rev
+            s2 = jnp.concatenate([jnp.where(gone, ds, INVALID_VERTEX),
+                                  jnp.where(gone, dd, INVALID_VERTEX)])
+            d2 = jnp.concatenate([dd, ds])
+            sym, _ = delete_edges(sym, s2, d2, **kw)
+        int(jnp.sum(dm.astype(jnp.int32)))          # legacy host sync
+    if len(i_s):
+        p = next_pow2(len(i_s))
+        s, d = _pad_u32(i_s, p), _pad_u32(i_d, p)
+        w = _pad_f32(i_w, p)
+        fwd, im = insert_edges(fwd, s, d, w, **kw)
+        if tr is not None:
+            tr, _ = insert_edges(tr, d, s, w, **kw)
+        if sym is not None:
+            sym, _ = insert_edges(sym, jnp.concatenate([s, d]),
+                                  jnp.concatenate([d, s]),
+                                  None if w is None
+                                  else jnp.concatenate([w, w]), **kw)
+        int(jnp.sum(im.astype(jnp.int32)))          # legacy host sync
+    out = {}
+    for name, g in (("forward", fwd), ("transpose", tr), ("symmetric", sym)):
+        if g is not None:
+            out[name] = update_slab_pointers(g)
+    return out
+
+
+def run(scale: str = "quick"):
+    V, E = (20000, 150000) if scale == "quick" else (200000, 2000000)
+    rounds = 6
+    src, dst = rmat_edges(V, E, seed=21)
+    E = len(src)
+    rng = np.random.default_rng(42)
+    g0 = from_edges_host(V, src, dst, hashing=True, slack_slabs=4096)
+
+    results = []
+
+    def record(name, old_us, new_us, extra=""):
+        results.append({"name": name,
+                        "old_us": round(old_us, 1),
+                        "new_us": round(new_us, 1),
+                        "speedup": round(old_us / new_us, 3) if new_us
+                        else None})
+        row(f"update_{name}_old", old_us)
+        row(f"update_{name}_engine", new_us,
+            f"speedup={old_us / new_us:.2f}x" + (f";{extra}" if extra else ""))
+
+    for bs in (2048, 4096, 8192):
+        gq = ensure_capacity(g0, rounds * bs + 64)
+
+        # --- query (Fig. 5): random batches against the static graph ------
+        qs = _pad(rng.integers(0, V, bs), bs)
+        qd = _pad(rng.integers(0, V, bs), bs)
+        ref = np.asarray(query_edges(gq, qs, qd, impl="oracle"))
+        got = np.asarray(query_edges(gq, qs, qd))
+        assert np.array_equal(ref, got), "query engine/oracle disagreement"
+        old = time_fn(lambda: query_edges(gq, qs, qd, impl="oracle"))
+        new = time_fn(lambda: query_edges(gq, qs, qd))
+        record(f"query_b{bs}", old, new, f"Mqps={bs / new:.2f}")
+
+        # --- streaming batch stream (same batches for every path) ---------
+        ins_batches = [( _pad(rng.integers(0, V, bs), bs),
+                         _pad(rng.integers(0, V, bs), bs))
+                       for _ in range(rounds)]
+        del_idx = [rng.choice(E, bs, replace=False) for _ in range(rounds)]
+        del_batches = [(_pad(src[i], bs), _pad(dst[i], bs)) for i in del_idx]
+
+        # insert stream: old functional path vs donated engine
+        old, g_old = _stream(
+            gq, ins_batches,
+            lambda g, b: insert_edges(g, b[0], b[1], impl="oracle")[0])
+        new, g_new = _stream(
+            gq, ins_batches,
+            lambda g, b: insert_edges(g, b[0], b[1], donate=True)[0])
+        assert _tree_equal(g_old, g_new), "insert engine/oracle disagreement"
+        record(f"insert_stream_b{bs}", old / rounds, new / rounds,
+               f"Meps={bs / (new / rounds):.2f}")
+
+        # delete stream
+        old, g_old = _stream(
+            gq, del_batches,
+            lambda g, b: delete_edges(g, b[0], b[1], impl="oracle")[0])
+        new, g_new = _stream(
+            gq, del_batches,
+            lambda g, b: delete_edges(g, b[0], b[1], donate=True)[0])
+        assert _tree_equal(g_old, g_new), "delete engine/oracle disagreement"
+        record(f"delete_stream_b{bs}", old / rounds, new / rounds,
+               f"Meps={bs / (new / rounds):.2f}")
+
+        # mixed stream — the acceptance workload: delete+insert per round;
+        # old = two functional oracle dispatches, engine = one fused donated
+        mixed = list(zip(del_batches, ins_batches))
+
+        def old_step(g, b):
+            g, _ = delete_edges(g, b[0][0], b[0][1], impl="oracle")
+            g, _ = insert_edges(g, b[1][0], b[1][1], impl="oracle")
+            return g
+
+        def new_step(g, b):
+            g, _, _ = apply_update(g, b[1][0], b[1][1], None,
+                                   b[0][0], b[0][1])
+            return g
+
+        old, g_old = _stream(gq, mixed, old_step)
+        new, g_new = _stream(gq, mixed, new_step)
+        assert _tree_equal(g_old, g_new), "mixed engine/oracle disagreement"
+        record(f"mixed_stream_b{bs}", old / rounds, new / rounds,
+               f"Meps={2 * bs / (new / rounds):.2f}")
+
+    # --- GraphStore.apply per view count ----------------------------------
+    bs = 2048
+    batches = [
+        dict(ins_src=rng.integers(0, V, bs).astype(np.uint32),
+             ins_dst=rng.integers(0, V, bs).astype(np.uint32),
+             del_src=src[rng.choice(E, bs, replace=False)],
+             del_dst=dst[rng.choice(E, bs, replace=False)])
+        for _ in range(rounds)
+    ]
+    for n_views, (wt, ws) in {1: (False, False), 2: (True, False),
+                              3: (True, True)}.items():
+        # hashing=True is the paper's update-benchmark configuration (short
+        # bucket chains); it also matches the raw-op sweep above.
+        store = GraphStore.from_edges(V, src, dst, hashing=True,
+                                      with_transpose=wt,
+                                      with_symmetric=ws, slack_slabs=4096)
+        legacy_views = {k: _copy(v) for k, v in store.views.items()}
+
+        # warmup both paths over the FULL batch sequence on throwaway state:
+        # capacity growth walks the pow2 pool ladder, and every rung's jit
+        # specialisation must be out of the steady-state timing for both
+        # pipelines
+        warm = {k: _copy(v) for k, v in store.views.items()}
+        warm_store = GraphStore.from_edges(V, src, dst, hashing=True,
+                                           with_transpose=wt,
+                                           with_symmetric=ws,
+                                           slack_slabs=4096)
+        for b in batches:
+            warm = _legacy_store_apply(warm, False, ins_w=None, **b)
+            warm_store.apply(ins_src=b["ins_src"], ins_dst=b["ins_dst"],
+                             del_src=b["del_src"], del_dst=b["del_dst"])
+
+        t0 = time.perf_counter()
+        for b in batches:
+            legacy_views = _legacy_store_apply(legacy_views, False, ins_w=None,
+                                               **b)
+        jax.block_until_ready(legacy_views["forward"].keys)
+        legacy_us = (time.perf_counter() - t0) * 1e6
+
+        t0 = time.perf_counter()
+        for b in batches:
+            store.apply(ins_src=b["ins_src"], ins_dst=b["ins_dst"],
+                        del_src=b["del_src"], del_dst=b["del_dst"])
+        jax.block_until_ready(store.forward.keys)
+        store_us = (time.perf_counter() - t0) * 1e6
+
+        for name, g in store.views.items():
+            assert _tree_equal(g, legacy_views[name]), \
+                f"store view {name} diverged from legacy pipeline"
+        record(f"store_apply_views{n_views}", legacy_us / rounds,
+               store_us / rounds, f"batch={bs}ins+{bs}del")
+
+    payload = {
+        "backend": jax.default_backend(),
+        "scale": scale,
+        "graph": {"V": V, "E": int(E)},
+        "note": ("old = pre-engine whole-pool jnp path (impl='oracle', "
+                 "functional copies, per-phase dispatches); engine = "
+                 "kernels/slab_update (impl='auto': Pallas on TPU, "
+                 "run-local jnp elsewhere; *_stream rows donate buffers "
+                 "for in-place pool mutation). store_apply rows A/B the "
+                 "legacy per-view pipeline against the stacked "
+                 "update_views dispatch with one host-side dedup."),
+        "results": results,
+    }
+    _OUT.write_text(json.dumps(payload, indent=2) + "\n")
+    row("update_bench_json", 0.0, str(_OUT.name))
+
+    mixed_rows = [r for r in results if r["name"].startswith("mixed_stream")]
+    worst = min(r["speedup"] for r in mixed_rows)
+    assert worst >= 2.0, \
+        f"mixed-workload speedup regressed below 2x: {mixed_rows}"

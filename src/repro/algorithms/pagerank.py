@@ -121,6 +121,9 @@ def stream_property(*, damping: float = 0.85, error_margin: float = 1e-5,
     from ..stream.properties import PropertySpec
 
     def _run(store, init_pr=None):
+        if store.transpose is None:
+            raise ValueError("pagerank stream property sweeps the transpose "
+                             "view; build the store with with_transpose=True")
         pr, _ = pagerank(store.transpose, store.out_degree, init_pr=init_pr,
                          damping=damping, error_margin=error_margin,
                          max_iter=max_iter, contrib_impl=contrib_impl)

@@ -6,8 +6,9 @@ allocation, iterator set, warp-level APIs as lane-vector ops) lives here.
 from .hashing import (EMPTY_KEY, INVALID_LANE, INVALID_SLAB, INVALID_VERTEX,
                       SLAB_WIDTH, TOMBSTONE_KEY, bucket_hash, is_valid_vertex)
 from .slab_graph import (SlabGraph, empty, ensure_capacity, from_edges_host,
-                         plan_buckets, update_slab_pointers)
-from .batch import delete_edges, insert_edges, query_edges, probe
+                         next_pow2, plan_buckets, update_slab_pointers)
+from .batch import (apply_update, delete_edges, insert_edges, query_edges,
+                    probe, update_views)
 from .worklist import (CSR, EdgeFrontier, PoolView, csr_snapshot,
                        expand_vertices, occupancy_stats, pool_edges,
                        transpose_host, updated_lane_mask, updated_vertices)
@@ -20,8 +21,9 @@ __all__ = [
     "EMPTY_KEY", "INVALID_LANE", "INVALID_SLAB", "INVALID_VERTEX",
     "SLAB_WIDTH", "TOMBSTONE_KEY", "bucket_hash", "is_valid_vertex",
     "SlabGraph", "empty", "ensure_capacity", "from_edges_host",
-    "plan_buckets", "update_slab_pointers",
-    "delete_edges", "insert_edges", "query_edges", "probe",
+    "next_pow2", "plan_buckets", "update_slab_pointers",
+    "apply_update", "delete_edges", "insert_edges", "query_edges", "probe",
+    "update_views",
     "CSR", "EdgeFrontier", "PoolView", "csr_snapshot", "expand_vertices",
     "occupancy_stats", "pool_edges", "transpose_host", "updated_lane_mask",
     "updated_vertices",

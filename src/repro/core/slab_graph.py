@@ -146,16 +146,26 @@ def empty(n_vertices: int, bucket_count: np.ndarray, capacity_slabs: int, *,
     )
 
 
+def next_pow2(n: int, lo: int = 64) -> int:
+    """Smallest power of two ≥ max(n, lo)."""
+    return 1 << max(int(n) - 1, lo - 1, 1).bit_length()
+
+
 def ensure_capacity(g: SlabGraph, extra_slabs: int) -> SlabGraph:
     """Host-side pool growth (outside jit) — the SlabAlloc re-pool analogue.
 
-    Guarantees at least ``extra_slabs`` free slabs.  Growth doubles the free
-    region so the amortised cost matches GPU pool allocators.
+    Guarantees at least ``extra_slabs`` free slabs.  Grown capacities are
+    quantized to powers of two (and grow by ≥ 1.5× so the amortised cost
+    matches GPU pool allocators): a stream of update batches walks a small
+    ladder of pool shapes instead of retriggering jit specialization of
+    every entry point on each growth step.
     """
     free = g.capacity_slabs - int(g.next_free)
     if free >= extra_slabs:
         return g
-    grow = max(extra_slabs - free, g.capacity_slabs // 2, 64)
+    target = max(int(g.next_free) + extra_slabs,
+                 g.capacity_slabs + g.capacity_slabs // 2)
+    grow = next_pow2(target) - g.capacity_slabs
 
     def pad_rows(a, fill, dtype):
         pad = jnp.full((grow,) + a.shape[1:], fill, dtype=dtype)
@@ -263,15 +273,22 @@ def from_edges_host(n_vertices: int, src: np.ndarray, dst: np.ndarray,
     if wpool is not None:
         wpool[slab_of, lane_of] = w_s
 
-    # chain links + ownership for overflow slabs
-    for_b = np.nonzero(extra > 0)[0]
-    for bb in for_b:
-        first = n_buckets + extra_off[bb]
-        cnt = extra[bb]
-        nxt[bb] = first
-        if cnt > 1:
-            nxt[first:first + cnt - 1] = np.arange(first + 1, first + cnt)
-        slab_vertex[first:first + cnt] = bucket_vertex[bb]
+    # chain links + ownership for overflow slabs — fully vectorised (the
+    # interpreted per-bucket loop here was O(#buckets) on every bulk build):
+    # overflow slab k (global row n_buckets+k) belongs to the bucket whose
+    # [extra_off[b], extra_off[b+1]) range contains k, links to row k+1
+    # unless it is its bucket's last overflow slab, and the bucket's head
+    # chain enters at its first overflow slab.
+    total_extra = int(extra_off[-1])
+    if total_extra:
+        has = extra > 0
+        nxt[np.nonzero(has)[0]] = (n_buckets + extra_off[:-1][has]).astype(
+            np.int32)
+        own = np.repeat(np.arange(n_buckets, dtype=np.int64), extra)
+        ids = n_buckets + np.arange(total_extra, dtype=np.int64)
+        slab_vertex[ids] = bucket_vertex[own]
+        is_last = (ids - n_buckets + 1) == extra_off[own + 1]
+        nxt[ids[~is_last]] = (ids[~is_last] + 1).astype(np.int32)
 
     tail_slab = np.where(extra > 0, n_buckets + extra_off[:-1] + extra - 1,
                          np.arange(n_buckets)).astype(np.int32)

@@ -1,0 +1,204 @@
+"""Pallas kernels for the slab-update engine: tiled probe + fused commit.
+
+``slab_probe_pallas`` is the throughput-critical kernel of the update plane
+(the literature's "batched hash-table mutation" hot spot): a tiled chain
+walk over the slab lists.  Each grid step owns a tile of
+``queries_per_tile`` batch lanes; per hop it gathers the tile's current
+slab rows from the pooled key store ((Q, 128) rows staged through VMEM —
+the TPU analogue of the GPU's warp-coalesced slab read), compares all 128
+lanes against the query key (lane-wide equality as the warp ballot
+analogue), and advances via a gathered ``next_slab`` hop.  Termination is
+**per tile**: a tile whose chains are all resolved exits its while-loop
+immediately instead of idling until the globally longest chain finishes —
+the whole-batch ``lax.while_loop`` of the jnp oracle cannot do this.
+
+``slab_commit_pallas`` is the fused placement/tombstone commit: one pass
+that scatters the planned key values (dst on insert, TOMBSTONE on delete),
+the matching weight lanes, and the per-source degree deltas directly into
+the pooled buffers via ``input_output_aliases`` — the in-place mutation
+step that replaces three separate XLA scatter+copy rounds.  Inserts and
+deletes share it; only the planned values differ.
+
+Both kernels are validated in ``interpret=True`` mode against the
+``ref.py`` oracle (tests/test_slab_update.py); TPU is the compile target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...core.hashing import INVALID_SLAB
+
+
+# ----------------------------------------------------------------------------
+# tiled probe
+# ----------------------------------------------------------------------------
+
+def _probe_kernel(start_ref, dst_ref, keys_ref, next_ref,
+                  found_ref, slab_ref, lane_ref, *, slab_width: int):
+    Q = start_ref.shape[0]
+    end = jnp.int32(-1)                         # INVALID_SLAB, as a literal
+    cur0 = start_ref[...]                       # (Q, 1) int32; -1 = inactive
+    dstv = dst_ref[...]                         # (Q, 1) uint32
+    lane_iota = jax.lax.broadcasted_iota(jnp.int32, (1, slab_width), 1)
+
+    found = jnp.zeros((Q, 1), dtype=jnp.bool_)
+    slab = jnp.full((Q, 1), end, dtype=jnp.int32)
+    lane = jnp.full((Q, 1), end, dtype=jnp.int32)
+
+    def cond(state):
+        cur, *_ = state
+        return jnp.any(cur != end)              # per-tile termination
+
+    def body(state):
+        cur, found, slab, lane = state
+        walking = cur != end
+        idx = jnp.maximum(cur, 0) * slab_width + lane_iota      # (Q, W)
+        rows = keys_ref[idx]                                    # (Q, W) u32
+        hit = (rows == dstv) & walking
+        hit_any = jnp.any(hit, axis=1, keepdims=True)
+        hit_lane = jnp.argmax(hit, axis=1).astype(jnp.int32)[:, None]
+        newly = hit_any & ~found
+        slab = jnp.where(newly, cur, slab)
+        lane = jnp.where(newly, hit_lane, lane)
+        found = found | hit_any
+        nxt = next_ref[jnp.maximum(cur, 0)]                     # (Q, 1) i32
+        cur = jnp.where(~walking | found, end, nxt)
+        return cur, found, slab, lane
+
+    _, found, slab, lane = jax.lax.while_loop(
+        cond, body, (cur0, found, slab, lane))
+    found_ref[...] = found.astype(jnp.int32)
+    slab_ref[...] = slab
+    lane_ref[...] = lane
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("queries_per_tile", "interpret"))
+def slab_probe_pallas(keys: jnp.ndarray, next_slab: jnp.ndarray,
+                      start: jnp.ndarray, dst: jnp.ndarray, *,
+                      queries_per_tile: int = 256,
+                      interpret: bool = False):
+    """Chain-walk probe: (B,) start slabs (-1 = inactive) → (found, slab, lane).
+
+    ``keys`` (S, W) uint32 pool, ``next_slab`` (S,) int32, ``start`` (B,)
+    int32 head-slab (= global bucket) per query, ``dst`` (B,) uint32 key to
+    locate.  Returns bool found plus the (slab, lane) of the first hit along
+    the chain (-1 where absent), bit-identical to ``ref.probe``.
+    """
+    B = start.shape[0]
+    W = keys.shape[1]
+    Q = max(8, min(queries_per_tile, B))
+    pad = (-B) % Q
+    if pad:
+        start = jnp.pad(start, (0, pad), constant_values=INVALID_SLAB)
+        dst = jnp.pad(dst, (0, pad))
+    Bp = start.shape[0]
+
+    col = pl.BlockSpec((Q, 1), lambda i: (i, 0))
+    found, slab, lane = pl.pallas_call(
+        functools.partial(_probe_kernel, slab_width=W),
+        grid=(Bp // Q,),
+        in_specs=[col, col,
+                  pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=(col, col, col),
+        out_shape=(jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((Bp, 1), jnp.int32)),
+        interpret=interpret,
+    )(start.astype(jnp.int32)[:, None], dst.astype(jnp.uint32)[:, None],
+      keys.reshape(-1), next_slab)
+    return (found[:B, 0].astype(bool), slab[:B, 0], lane[:B, 0])
+
+
+# ----------------------------------------------------------------------------
+# fused commit (placement / tombstone)
+# ----------------------------------------------------------------------------
+
+def _commit_kernel(*refs, has_weights: bool, n_vertices: int,
+                   capacity_slabs: int, slab_width: int, batch: int):
+    it = iter(refs)
+    keys_in = next(it)                        # (S*W,) u32 (aliased to out 0)
+    deg_in = next(it)                         # (V,) i32   (aliased to out 1)
+    w_in = next(it) if has_weights else None  # (S*W,) f32 (aliased to out 2)
+    slab_ref = next(it)                       # (B,) i32; >= capacity = parked
+    lane_ref = next(it)                       # (B,) i32
+    val_ref = next(it)                        # (B,) u32 planned key value
+    didx_ref = next(it)                       # (B,) i32; >= V = parked
+    ddel_ref = next(it)                       # (B,) i32 degree delta
+    wval_ref = next(it) if has_weights else None
+    keys_out = next(it)
+    deg_out = next(it)
+    w_out = next(it) if has_weights else None
+
+    def body(i, _):
+        s = slab_ref[i]
+
+        @pl.when(s < capacity_slabs)
+        def _():
+            at = s * slab_width + lane_ref[i]
+            keys_out[at] = val_ref[i]
+            if has_weights:
+                w_out[at] = wval_ref[i]
+
+        di = didx_ref[i]
+
+        @pl.when(di < n_vertices)
+        def _():
+            deg_out[di] = deg_out[di] + ddel_ref[i]
+
+        return 0
+
+    jax.lax.fori_loop(0, batch, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def slab_commit_pallas(keys: jnp.ndarray, degree: jnp.ndarray,
+                       weights, e_slab: jnp.ndarray, e_lane: jnp.ndarray,
+                       vals: jnp.ndarray, deg_idx: jnp.ndarray,
+                       deg_delta: jnp.ndarray, wvals=None, *,
+                       interpret: bool = False):
+    """One fused scatter pass: keys[slab,lane]=val, weights, degree[idx]+=Δ.
+
+    Parked lanes use slab >= capacity / deg_idx >= V (the jnp paths' scatter
+    ``mode="drop"`` convention).  The pooled buffers are updated through
+    ``input_output_aliases`` — no copy of the pool.  Returns
+    (keys, degree[, weights]) with the original shapes.
+    """
+    S, W = keys.shape
+    V = degree.shape[0]
+    B = e_slab.shape[0]
+    has_w = weights is not None
+
+    operands = [keys.reshape(-1), degree]
+    aliases = {0: 0, 1: 1}
+    if has_w:
+        operands.append(weights.reshape(-1))
+        aliases[2] = 2
+    operands += [e_slab, e_lane, vals.astype(jnp.uint32),
+                 deg_idx, deg_delta]
+    if has_w:
+        operands.append(jnp.zeros((B,), jnp.float32) if wvals is None
+                        else wvals.astype(jnp.float32))
+    out_shape = [jax.ShapeDtypeStruct((S * W,), jnp.uint32),
+                 jax.ShapeDtypeStruct((V,), jnp.int32)]
+    if has_w:
+        out_shape.append(jax.ShapeDtypeStruct((S * W,), jnp.float32))
+
+    out = pl.pallas_call(
+        functools.partial(_commit_kernel, has_weights=has_w, n_vertices=V,
+                          capacity_slabs=S, slab_width=W, batch=B),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * len(operands),
+        out_specs=tuple([pl.BlockSpec(memory_space=pl.ANY)] * len(out_shape)),
+        out_shape=tuple(out_shape),
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(*operands)
+    keys2 = out[0].reshape(S, W)
+    deg2 = out[1]
+    w2 = out[2].reshape(S, W) if has_w else None
+    return keys2, deg2, w2

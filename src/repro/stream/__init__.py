@@ -7,7 +7,7 @@ versions (``PropertyRegistry`` + the ``stream_property`` hooks in
 (``RequestPipeline``).
 """
 from .store import (ALL_VIEWS, FORWARD, SYMMETRIC, TRANSPOSE, AppliedBatch,
-                    GraphStore, dedup_pairs)
+                    GraphStore, canonical_batch, dedup_pairs)
 from .properties import EAGER, LAZY, PropertyRegistry, PropertySpec
 from .requests import (MembershipQuery, NeighborsQuery, PropertyRead, Request,
                        RequestPipeline, Response, UpdateBatch,
@@ -15,7 +15,7 @@ from .requests import (MembershipQuery, NeighborsQuery, PropertyRead, Request,
 
 __all__ = [
     "ALL_VIEWS", "FORWARD", "SYMMETRIC", "TRANSPOSE",
-    "AppliedBatch", "GraphStore", "dedup_pairs",
+    "AppliedBatch", "GraphStore", "canonical_batch", "dedup_pairs",
     "EAGER", "LAZY", "PropertyRegistry", "PropertySpec",
     "MembershipQuery", "NeighborsQuery", "PropertyRead", "Request",
     "RequestPipeline", "Response", "UpdateBatch", "coalesce_updates",

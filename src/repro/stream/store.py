@@ -8,11 +8,15 @@ every update batch to all of them consistently, so algorithm code can always
 pick the view its sweep direction wants (DESIGN.md §3) without ever seeing a
 half-updated pair of views.
 
-Contract per ``apply(inserts, deletes)`` (DESIGN.md §5):
+Contract per ``apply(inserts, deletes)`` (DESIGN.md §5/§6):
 
-  1. batches are deduped on the host and padded to a power-of-two lane count
-     (bounds the number of jit shape specialisations),
-  2. ``ensure_capacity`` runs automatically on every live view,
+  1. the batch is canonicalised ONCE on the host (``canonical_batch``:
+     dedup both halves, pad to a power-of-two lane count) — the transpose
+     and symmetric batches are *derived* from that one canonical batch on
+     device (swap / concat), never re-deduped or re-hashed per view,
+  2. ``ensure_capacity`` runs automatically on every live view (growth is
+     power-of-two quantized, so repeated growth walks a small ladder of
+     pool shapes),
   3. deletions apply before insertions (a pair present in both ends the epoch
      *present*),
   4. the symmetric view is maintained as the true union of both directions:
@@ -23,6 +27,13 @@ Contract per ``apply(inserts, deletes)`` (DESIGN.md §5):
   6. registered listeners (the property registry) are notified while the
      update epoch is still OPEN, then every view's epoch is closed via
      ``update_slab_pointers`` and the monotonic ``version`` has been bumped.
+
+All live views mutate through ONE ``update_views`` dispatch (the stacked
+slab-update engine invocation, DESIGN.md §6) with their buffers donated —
+the pools update in place.  Consequence: a ``SlabGraph`` obtained from
+``store.forward``/``.transpose``/``.symmetric`` is only valid until the
+next ``apply``; re-read the property after each epoch (move semantics,
+like the GPU original's in-place slab writes).
 
 A bounded log of applied batches supports lazy property catch-up
 (``batches_since``); when the log has been truncated the registry falls back
@@ -36,10 +47,11 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.batch import delete_edges, insert_edges, query_edges
-from ..core.hashing import INVALID_VERTEX, SLAB_WIDTH
+from ..core.batch import query_edges, update_views
+from ..core.hashing import INVALID_VERTEX
 from ..core.slab_graph import (SlabGraph, empty, ensure_capacity,
-                               from_edges_host, update_slab_pointers)
+                               from_edges_host, next_pow2,
+                               update_slab_pointers)
 from ..core.worklist import EdgeFrontier, expand_vertices
 
 FORWARD = "forward"
@@ -48,11 +60,8 @@ SYMMETRIC = "symmetric"
 ALL_VIEWS = (FORWARD, TRANSPOSE, SYMMETRIC)
 
 
-def _pow2(n: int, lo: int = 64) -> int:
-    p = lo
-    while p < n:
-        p *= 2
-    return p
+# Batch lane counts quantize through the same pow2 ladder as pool growth.
+_pow2 = next_pow2
 
 
 def _pad_u32(a: np.ndarray, n: int) -> jnp.ndarray:
@@ -81,6 +90,23 @@ def dedup_pairs(src, dst, w=None) -> Tuple[np.ndarray, np.ndarray,
     _, idx = np.unique(key, return_index=True)
     idx.sort()
     return src[idx], dst[idx], None if w is None else w[idx]
+
+
+def canonical_batch(ins_src, ins_dst, ins_w, del_src, del_dst, *,
+                    weighted: bool):
+    """THE one host-side canonicalisation per ``apply``: dedup the insert
+    and delete halves (first occurrence wins) and default missing insert
+    weights on weighted stores.  Every per-view batch is derived from this
+    canonical batch on device — no view re-dedups."""
+    i_s, i_d, i_w = dedup_pairs(
+        () if ins_src is None else ins_src,
+        () if ins_dst is None else ins_dst, ins_w)
+    d_s, d_d, _ = dedup_pairs(
+        () if del_src is None else del_src,
+        () if del_dst is None else del_dst)
+    if weighted and len(i_s) and i_w is None:
+        i_w = np.ones(len(i_s), np.float32)
+    return i_s, i_d, i_w, d_s, d_d
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,16 +152,16 @@ class GraphStore:
     @classmethod
     def from_edges(cls, n_vertices: int, src, dst, w=None, *,
                    hashing: bool = False, load_factor: float = 0.7,
-                   slack_slabs: int = 0, with_symmetric: bool = True,
+                   slack_slabs: int = 0, with_transpose: bool = True,
+                   with_symmetric: bool = True,
                    log_capacity: int = 64) -> "GraphStore":
         """Bulk-build every view from one host edge list (dedup shared)."""
         src, dst, w = dedup_pairs(src, dst, w)
         kw = dict(hashing=hashing, load_factor=load_factor,
                   slack_slabs=slack_slabs)
-        views = {
-            FORWARD: from_edges_host(n_vertices, src, dst, w, **kw),
-            TRANSPOSE: from_edges_host(n_vertices, dst, src, w, **kw),
-        }
+        views = {FORWARD: from_edges_host(n_vertices, src, dst, w, **kw)}
+        if with_transpose:
+            views[TRANSPOSE] = from_edges_host(n_vertices, dst, src, w, **kw)
         if with_symmetric:
             s2 = np.concatenate([src, dst])
             d2 = np.concatenate([dst, src])
@@ -149,8 +175,8 @@ class GraphStore:
         return self._views[FORWARD]
 
     @property
-    def transpose(self) -> SlabGraph:
-        return self._views[TRANSPOSE]
+    def transpose(self) -> Optional[SlabGraph]:
+        return self._views.get(TRANSPOSE)
 
     @property
     def symmetric(self) -> Optional[SlabGraph]:
@@ -175,6 +201,9 @@ class GraphStore:
 
     @property
     def in_degree(self) -> jnp.ndarray:
+        if self.transpose is None:
+            raise ValueError("in-degrees live on the transpose view; build "
+                             "the store with with_transpose=True")
         return self.transpose.degree
 
     @property
@@ -199,69 +228,50 @@ class GraphStore:
               del_src=None, del_dst=None) -> AppliedBatch:
         """Apply one mixed update batch to every view; close the epoch.
 
-        Deletions apply first, then insertions (both deduped).  Weighted
-        stores default missing insert weights to 1.0.  Returns the
+        Deletions apply first, then insertions.  The batch is deduped and
+        padded exactly once (``canonical_batch``); all live views mutate
+        through one donated ``update_views`` dispatch.  Weighted stores
+        default missing insert weights to 1.0.  Returns the
         ``AppliedBatch`` record (also appended to the catch-up log).
         """
-        i_s, i_d, i_w = dedup_pairs(
-            () if ins_src is None else ins_src,
-            () if ins_dst is None else ins_dst, ins_w)
-        d_s, d_d, _ = dedup_pairs(
-            () if del_src is None else del_src,
-            () if del_dst is None else del_dst)
-        if self.weighted and len(i_s) and i_w is None:
-            i_w = np.ones(len(i_s), np.float32)
+        i_s, i_d, i_w, d_s, d_d = canonical_batch(
+            ins_src, ins_dst, ins_w, del_src, del_dst,
+            weighted=self.weighted)
 
-        fwd, tr, sym = self.forward, self.transpose, self.symmetric
+        roles = tuple(v for v in ALL_VIEWS if v in self._views)
 
         # -- capacity (inserts allocate at most one slab per batch lane) ----
         if len(i_s):
             p = _pow2(len(i_s))
-            fwd = ensure_capacity(fwd, p + 64)
-            tr = ensure_capacity(tr, p + 64)
-            if sym is not None:
-                sym = ensure_capacity(sym, 2 * p + 64)
+            for name in roles:
+                need = 2 * p + 64 if name == SYMMETRIC else p + 64
+                self._views[name] = ensure_capacity(self._views[name], need)
 
-        # -- delete phase ---------------------------------------------------
+        # -- canonical device batches (every view derives from these) -------
         del_sj = del_dj = del_mask = None
-        n_deleted = 0
+        ins_sj = ins_dj = ins_wj = ins_mask = None
+        dels = ins = None
         if len(d_s):
             p = _pow2(len(d_s))
             del_sj, del_dj = _pad_u32(d_s, p), _pad_u32(d_d, p)
-            fwd, del_mask = delete_edges(fwd, del_sj, del_dj)
-            tr, _ = delete_edges(tr, del_dj, del_sj)
-            if sym is not None:
-                # (s,d)/(d,s) leave the symmetric union only when the reverse
-                # edge is absent from the post-delete forward view.
-                rev = query_edges(fwd, del_dj, del_sj)
-                gone = ~rev
-                s2 = jnp.concatenate([jnp.where(gone, del_sj, INVALID_VERTEX),
-                                      jnp.where(gone, del_dj, INVALID_VERTEX)])
-                d2 = jnp.concatenate([del_dj, del_sj])
-                sym, _ = delete_edges(sym, s2, d2)
-            n_deleted = int(jnp.sum(del_mask.astype(jnp.int32)))
-
-        # -- insert phase ---------------------------------------------------
-        ins_sj = ins_dj = ins_wj = ins_mask = None
-        n_inserted = 0
+            dels = (del_sj, del_dj)
         if len(i_s):
             p = _pow2(len(i_s))
             ins_sj, ins_dj = _pad_u32(i_s, p), _pad_u32(i_d, p)
             ins_wj = _pad_f32(i_w, p)
-            fwd, ins_mask = insert_edges(fwd, ins_sj, ins_dj, ins_wj)
-            tr, _ = insert_edges(tr, ins_dj, ins_sj, ins_wj)
-            if sym is not None:
-                sym, _ = insert_edges(
-                    sym, jnp.concatenate([ins_sj, ins_dj]),
-                    jnp.concatenate([ins_dj, ins_sj]),
-                    None if ins_wj is None
-                    else jnp.concatenate([ins_wj, ins_wj]))
-            n_inserted = int(jnp.sum(ins_mask.astype(jnp.int32)))
+            ins = (ins_sj, ins_dj, ins_wj)
 
-        self._views[FORWARD] = fwd
-        self._views[TRANSPOSE] = tr
-        if sym is not None:
-            self._views[SYMMETRIC] = sym
+        # -- single stacked engine dispatch over every live view ------------
+        n_inserted = n_deleted = 0
+        if ins is not None or dels is not None:
+            new_views, ins_mask, del_mask = update_views(
+                tuple(self._views[r] for r in roles), roles, ins, dels)
+            for r, g in zip(roles, new_views):
+                self._views[r] = g
+            if del_mask is not None:
+                n_deleted = int(jnp.sum(del_mask.astype(jnp.int32)))
+            if ins_mask is not None:
+                n_inserted = int(jnp.sum(ins_mask.astype(jnp.int32)))
 
         # -- version bump + notification (epoch still open) -----------------
         self.version += 1
