@@ -1,0 +1,256 @@
+"""Sharded stream plane A/B — BENCH_sharded.json.
+
+Three comparisons on an 8-virtual-device host mesh (the same
+``--xla_force_host_platform_device_count=8`` rig as the multidevice test):
+
+* ``sharded_mixed_stream`` — the acceptance row: the legacy sharded update
+  path (owner routing + per-op ``vmap(B.insert_edges)`` / ``vmap(
+  B.delete_edges)``, functional pool copies, two dispatches per round)
+  vs the engine-backed path (``apply_update_sharded``: one fused, donated
+  ``update_shards`` dispatch per round).  Final pools are asserted
+  leaf-for-leaf identical; the engine must not lose.
+* ``store_apply`` — ``ShardedGraphStore.apply`` (8 shards) vs the 1-shard
+  ``GraphStore.apply`` on the same mixed stream: the cost of the sharded
+  plane's routing exchange vs the unsharded multi-view apply.
+* ``sweep_*`` — distributed analytics super-step throughput:
+  ``pagerank_sharded`` / ``wcc_sharded`` vs the single-graph engines on the
+  unsharded union.
+
+XLA locks the device count at first init, so ``run()`` re-execs this module
+in a subprocess with the forced-device env (benchmarks.run stays usable
+in-process).  Absolute times on a host-platform mesh are NOT a model of TPU
+all-to-all cost — the ratios track engine-vs-legacy work, not the wire.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import time
+
+_OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_sharded.json"
+
+
+def run(scale: str = "quick"):
+    """benchmarks.run entry point: re-exec with the 8-device env."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.sharded_bench", "--scale", scale],
+        env=env, cwd=pathlib.Path(__file__).resolve().parent.parent)
+    if out.returncode != 0:
+        raise RuntimeError(f"sharded_bench subprocess failed "
+                           f"(rc={out.returncode})")
+
+
+def _main(scale: str):
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    import dataclasses
+
+    from repro.algorithms import pagerank, wcc_labelprop_sweep
+    from repro.core import batch as B
+    from repro.core import from_edges_host
+    from repro.data.synth import rmat_edges
+    from repro.distributed.sharded_graph import (apply_update_sharded,
+                                                 ensure_capacity_sharded,
+                                                 pagerank_sharded,
+                                                 route_edges, wcc_sharded)
+    from repro.stream import GraphStore, ShardedGraphStore
+
+    from .timing import row
+
+    S = min(8, len(jax.devices()))
+    V, E, bs, rounds = ((1 << 13, 60000, 2048, 4) if scale == "quick"
+                        else (1 << 17, 1000000, 8192, 6))
+    rng = np.random.default_rng(33)
+    src, dst = rmat_edges(V, E, seed=33)
+    E = len(src)
+
+    mesh = jax.make_mesh((S,), ("shard",))
+
+    def place_sg(sg):
+        def place(x):
+            if x.ndim == 0:
+                return x
+            return jax.device_put(x, NamedSharding(
+                mesh, P(*(("shard",) + (None,) * (x.ndim - 1)))))
+        return dataclasses.replace(sg, graphs=jax.tree.map(place, sg.graphs))
+
+    def copy_sg(sg):
+        return dataclasses.replace(
+            sg, graphs=jax.tree.map(jnp.array, sg.graphs))
+
+    def tree_equal(a, b):
+        return all(np.array_equal(np.asarray(x), np.asarray(y))
+                   for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+    results = []
+
+    def record(name, old_us, new_us, extra=""):
+        results.append({"name": name, "old_us": round(old_us, 1),
+                        "new_us": round(new_us, 1),
+                        "speedup": round(old_us / new_us, 3)})
+        row(f"sharded_{name}_old", old_us)
+        row(f"sharded_{name}_new", new_us,
+            f"speedup={old_us / new_us:.2f}x" + (f";{extra}" if extra else ""))
+
+    # -- mixed update stream: legacy vmap-per-op vs fused donated engine ----
+    ins_batches = [(jnp.asarray(rng.integers(0, V, bs).astype(np.uint32)),
+                    jnp.asarray(rng.integers(0, V, bs).astype(np.uint32)))
+                   for _ in range(rounds)]
+    del_idx = [rng.choice(E, bs, replace=False) for _ in range(rounds)]
+    del_batches = [(jnp.asarray(src[i]), jnp.asarray(dst[i]))
+                   for i in del_idx]
+
+    from repro.distributed.sharded_graph import shard_from_edges_host
+
+    def build_sharded(s_arr, d_arr, slack):
+        # compact host bulk build (dense pools), then reserve the engine's
+        # worst-case per-lane slab headroom for the update stream
+        sg = shard_from_edges_host(V, S, s_arr, d_arr)
+        return place_sg(ensure_capacity_sharded(sg, slack))
+
+    sg0 = build_sharded(src, dst, (rounds + 1) * bs + 64)
+
+    def legacy_step(sg, dels, ins):
+        # the pre-engine path: route + one vmapped engine entry per op,
+        # no donation (a functional copy of every shard pool per op)
+        ds, dd, _, _, _ = route_edges(dels[0], dels[1], n_shards=S, cap=bs)
+        graphs, _ = jax.vmap(B.delete_edges)(sg.graphs, ds, dd)
+        sg = dataclasses.replace(sg, graphs=graphs)
+        bsrc, bdst, _, _, _ = route_edges(ins[0], ins[1], n_shards=S, cap=bs)
+        graphs, _ = jax.vmap(B.insert_edges)(sg.graphs, bsrc, bdst)
+        return dataclasses.replace(sg, graphs=graphs)
+
+    def engine_step(sg, dels, ins):
+        sg, _, _ = apply_update_sharded(sg, ins[0], ins[1], None,
+                                        dels[0], dels[1], cap=bs,
+                                        donate=True)
+        return sg
+
+    def stream(step, iters=3):
+        ts, out = [], None
+        for _ in range(iters):
+            sg = copy_sg(sg0)
+            jax.block_until_ready(sg.graphs.keys)
+            t0 = time.perf_counter()
+            for dels, ins in zip(del_batches, ins_batches):
+                sg = step(sg, dels, ins)
+            jax.block_until_ready(sg.graphs.keys)
+            ts.append(time.perf_counter() - t0)
+            out = sg
+        ts.sort()
+        return ts[len(ts) // 2] * 1e6, out
+
+    old_us, g_old = stream(legacy_step)
+    new_us, g_new = stream(engine_step)
+    assert tree_equal(g_old.graphs, g_new.graphs), \
+        "sharded engine/legacy pool disagreement"
+    record(f"mixed_stream_b{bs}", old_us / rounds, new_us / rounds,
+           f"Meps={2 * bs / (new_us / rounds):.2f}")
+    assert new_us <= old_us, \
+        f"engine-backed sharded apply lost to legacy: {new_us} vs {old_us}"
+
+    # -- store apply: 8-shard sharded store vs 1-shard GraphStore -----------
+    batches = [dict(ins_src=np.asarray(i[0]), ins_dst=np.asarray(i[1]),
+                    del_src=np.asarray(d[0]), del_dst=np.asarray(d[1]))
+               for i, d in zip(ins_batches, del_batches)]
+
+    def store_stream(make):
+        st = make()      # warmup pass on throwaway state
+        for b in batches:
+            st.apply(**b)
+        st = make()
+        t0 = time.perf_counter()
+        for b in batches:
+            st.apply(**b)
+        jax.block_until_ready(
+            st.forward.graphs.keys if hasattr(st.forward, "graphs")
+            else st.forward.keys)
+        return (time.perf_counter() - t0) * 1e6
+
+    def make_sharded():
+        st = ShardedGraphStore.from_edges(V, S, src, dst)
+        for name, view in st.views.items():
+            st._views[name] = place_sg(view)
+        return st
+
+    one_us = store_stream(lambda: GraphStore.from_edges(
+        V, src, dst, hashing=False, slack_slabs=(rounds + 1) * bs // 16))
+    sh_us = store_stream(make_sharded)
+    record("store_apply_8shard_vs_1shard", one_us / rounds, sh_us / rounds,
+           f"batch={bs}ins+{bs}del")
+
+    # -- sweep throughput: distributed analytics vs unsharded union ---------
+    g_in = from_edges_host(V, dst, src, hashing=False)
+    sg_in = build_sharded(dst, src, bs + 64)
+    out_deg = from_edges_host(V, src, dst, hashing=False).degree
+
+    iters = 20
+    for name, fn_old, fn_new in (
+        ("pagerank",
+         lambda: pagerank(g_in, out_deg, max_iter=iters,
+                          error_margin=0.0)[0],
+         lambda: pagerank_sharded(sg_in, out_deg, max_iter=iters,
+                                  error_margin=0.0)[0]),
+    ):
+        jax.block_until_ready(fn_old())
+        jax.block_until_ready(fn_new())
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_old())
+        t_old = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_new())
+        t_new = (time.perf_counter() - t0) * 1e6
+        record(f"sweep_{name}", t_old / iters, t_new / iters,
+               f"us_per_superstep;S={S}")
+
+    # wcc sweeps over the symmetric union (iteration counts are identical,
+    # labels bit-identical — asserted)
+    s2 = np.concatenate([src, dst])
+    d2 = np.concatenate([dst, src])
+    g_sym = from_edges_host(V, s2, d2, hashing=False)
+    sg_sym = build_sharded(s2, d2, bs + 64)
+    lab_old, it_old = wcc_labelprop_sweep(g_sym)
+    lab_new, it_new = wcc_sharded(sg_sym)
+    assert np.array_equal(np.asarray(lab_old), np.asarray(lab_new))
+    jax.block_until_ready(wcc_labelprop_sweep(g_sym)[0])
+    t0 = time.perf_counter()
+    jax.block_until_ready(wcc_labelprop_sweep(g_sym)[0])
+    t_old = (time.perf_counter() - t0) * 1e6
+    jax.block_until_ready(wcc_sharded(sg_sym)[0])
+    t0 = time.perf_counter()
+    jax.block_until_ready(wcc_sharded(sg_sym)[0])
+    t_new = (time.perf_counter() - t0) * 1e6
+    record("sweep_wcc", t_old / int(it_old), t_new / int(it_new),
+           f"us_per_superstep;S={S}")
+
+    payload = {
+        "backend": jax.default_backend(),
+        "devices": len(jax.devices()),
+        "scale": scale,
+        "graph": {"V": V, "E": int(E), "shards": S},
+        "note": ("host-platform 8-device mesh; old = legacy sharded path "
+                 "(route + per-op vmap(B.insert/delete_edges), functional "
+                 "pool copies) or the 1-shard store / unsharded analytics; "
+                 "new = engine-backed sharded plane (fused donated "
+                 "update_shards dispatch; slab-sweep super-steps).  Ratios "
+                 "track compute, not TPU interconnect."),
+        "results": results,
+    }
+    _OUT.write_text(json.dumps(payload, indent=2) + "\n")
+    row("sharded_bench_json", 0.0, str(_OUT.name))
+
+
+if __name__ == "__main__":
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="quick")
+    _main(ap.parse_args().scale)

@@ -25,6 +25,7 @@ from __future__ import annotations
 # Engine entry points (jit'd in ops.py; accept impl=/donate= kwargs).
 from ..kernels.slab_update.ops import (apply_update, delete_edges,
                                        insert_edges, query_edges,
+                                       query_shards, update_shards,
                                        update_views)
 # Shared building blocks — the probe/hash helpers other layers reuse
 # (triangle counting, slab_intersect) and the bit-exact oracle path.
@@ -37,7 +38,7 @@ _sort_by_bucket = sort_by_bucket
 
 __all__ = [
     "apply_update", "delete_edges", "insert_edges", "query_edges",
-    "update_views",
+    "query_shards", "update_shards", "update_views",
     "batch_valid", "edge_buckets", "probe", "sort_by_bucket",
     "delete_edges_ref", "insert_edges_ref", "query_edges_ref",
 ]

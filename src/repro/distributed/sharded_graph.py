@@ -1,20 +1,30 @@
 """ShardedSlabGraph — the paper's dynamic graph, vertex-partitioned across a
-mesh (DESIGN.md §3: 'the paper's technique as a first-class distributed
-feature').
+mesh (DESIGN.md §7: the sharded stream plane).
 
 Partitioning: vertex v lives on shard ``v % n_shards``; its local id is
 ``v // n_shards`` (modulo striping balances power-law degree mass across
 shards far better than contiguous blocks).  Every shard holds an independent
-SlabGraph over its local vertices; the pool arrays get a leading shard dim
-that is sharded over the mesh's batch-like axes, and every per-shard
-operation is ``jax.vmap``-ed over that dim — under pjit this compiles to
-pure shard-local compute, while the batch ROUTING step (sort by owner +
-scatter into per-owner buckets) is the one genuinely global exchange and
-lowers to the expected all-to-all pattern.
+SlabGraph over its local vertices — stored src ids are LOCAL, stored dst
+keys are GLOBAL (the update plane's dst guard is sentinel-based for exactly
+this reason, DESIGN.md §6).  The pool arrays carry a leading shard dim that
+is sharded over the mesh's batch-like axes; every per-shard operation runs
+through the fused slab-update / slab-sweep engines ``vmap``-ed over that dim
+— under pjit this compiles to pure shard-local compute, while the batch
+ROUTING step (sort by owner + scatter into per-owner buckets) is the one
+genuinely global exchange and lowers to the expected all-to-all pattern.
 
-Ops: batched insert/delete/query routing, distributed incremental PageRank
-(contrib exchange = one all-gather-sized reassembly per super-step),
-distributed WCC labels.
+Routing overflow contract: ``route_edges`` buckets are fixed-``cap`` (shapes
+are static under jit), so it also returns the number of edges the fullest
+owner bucket could NOT place.  The ``*_edges_sharded`` entry points resolve
+that on the host — ``cap=None`` defaults to the always-safe full batch
+size, an explicit smaller ``cap`` is grown (pow2) and re-routed until every
+edge lands.  Nothing is ever silently dropped.
+
+Ops: batched insert/delete/query routing through the donated slab-update
+engine, and distributed analytics on the slab-sweep engine — incremental
+PageRank (sum sweeps; contrib reassembly = the one global exchange per
+super-step), WCC (min-label sweeps over the symmetric sharded adjacency),
+and BFS (unit min-plus sweeps with cross-shard frontier exchange).
 """
 from __future__ import annotations
 
@@ -28,8 +38,11 @@ import numpy as np
 
 from ..core import batch as B
 from ..core import slab_graph as SG
-from ..core.hashing import INVALID_VERTEX
-from ..core.worklist import pool_edges
+from ..core.hashing import EMPTY_KEY, INVALID_SLAB, INVALID_VERTEX
+from ..core.slab_graph import next_pow2
+from ..kernels.slab_sweep.ops import sweep_vertices
+
+UNREACHED = jnp.int32(2 ** 30)   # matches algorithms.bfs.UNREACHED
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -37,7 +50,7 @@ from ..core.worklist import pool_edges
          meta_fields=["n_shards", "n_vertices_global"])
 @dataclasses.dataclass(frozen=True)
 class ShardedSlabGraph:
-    graphs: SG.SlabGraph          # every leaf has leading dim n_shards
+    graphs: SG.SlabGraph          # every data leaf has leading dim n_shards
     n_shards: int
     n_vertices_global: int
 
@@ -50,6 +63,64 @@ def shard_empty(n_vertices_global: int, n_shards: int, *,
                   capacity_slabs_per_shard, weighted=weighted)
     graphs = jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (n_shards,) + x.shape), g0)
+    return ShardedSlabGraph(graphs=graphs, n_shards=n_shards,
+                            n_vertices_global=n_vertices_global)
+
+
+def shard_slice(sg: ShardedSlabGraph, k: int) -> SG.SlabGraph:
+    """Shard ``k``'s local SlabGraph (host-side inspection / testing)."""
+    return jax.tree.map(lambda x: x[k], sg.graphs)
+
+
+def _grow_to(g: SG.SlabGraph, capacity: int) -> SG.SlabGraph:
+    """Pad one shard's pools to an exact row count (stacking needs uniform
+    shapes; unlike ``ensure_capacity`` this targets a capacity, not slack)."""
+    grow = capacity - g.capacity_slabs
+    if grow <= 0:
+        return g
+
+    def pad_rows(a, fill, dtype):
+        pad = jnp.full((grow,) + a.shape[1:], fill, dtype=dtype)
+        return jnp.concatenate([a, pad], axis=0)
+
+    return dataclasses.replace(
+        g,
+        keys=pad_rows(g.keys, EMPTY_KEY, jnp.uint32),
+        weights=(pad_rows(g.weights, 0.0, jnp.float32)
+                 if g.weighted else None),
+        next_slab=pad_rows(g.next_slab, INVALID_SLAB, jnp.int32),
+        slab_vertex=pad_rows(g.slab_vertex, -1, jnp.int32),
+    )
+
+
+def shard_from_edges_host(n_vertices_global: int, n_shards: int, src, dst,
+                          weights=None, *, slack_slabs: int = 0
+                          ) -> ShardedSlabGraph:
+    """Host-side bulk construction of the sharded graph (the compact
+    ``from_edges_host`` analogue): partition edges by owner, build each
+    shard's local pool densely (single-bucket mode, local src / GLOBAL dst
+    keys), pad every pool to one common pow2 capacity, stack.
+
+    Semantically identical to routing the edges through
+    ``insert_edges_sharded`` on ``shard_empty`` — without the engine's
+    worst-case one-slab-per-lane capacity reservation, so pools come out
+    sized to the edges actually stored (what every later O(pool) sweep
+    pays for).
+    """
+    src = np.asarray(src, dtype=np.uint32)
+    dst = np.asarray(dst, dtype=np.uint32)
+    w = None if weights is None else np.asarray(weights, dtype=np.float32)
+    n_local = -(-n_vertices_global // n_shards)
+    shards = []
+    for k in range(n_shards):
+        m = (src % np.uint32(n_shards)) == k
+        shards.append(SG.from_edges_host(
+            n_local, src[m] // np.uint32(n_shards), dst[m],
+            None if w is None else w[m],
+            hashing=False, slack_slabs=slack_slabs))
+    cap = next_pow2(max(g.capacity_slabs for g in shards))
+    shards = [_grow_to(g, cap) for g in shards]
+    graphs = jax.tree.map(lambda *xs: jnp.stack(xs), *shards)
     return ShardedSlabGraph(graphs=graphs, n_shards=n_shards,
                             n_vertices_global=n_vertices_global)
 
@@ -68,13 +139,55 @@ def global_id(local: jnp.ndarray, shard: jnp.ndarray,
         + shard.astype(jnp.uint32)
 
 
-@partial(jax.jit, static_argnames=("n_shards", "cap"))
-def route_edges(src: jnp.ndarray, dst: jnp.ndarray, *, n_shards: int,
-                cap: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Owner-routing: (B,) global edges → (n_shards, cap) per-owner buckets
-    (src localised; INVALID padding).  Returns (bsrc, bdst, origin_index)
-    where origin_index maps bucket slots back to batch positions (-1 pad).
+def reassemble_global(x_local: jnp.ndarray, n_vertices_global: int
+                      ) -> jnp.ndarray:
+    """(n_shards, n_local) per-shard-local vector → (V,) global.
+
+    Global id ``v = local * n_shards + shard``, so the shard axis interleaves:
+    transpose to (n_local, n_shards), flatten, trim the tail padding of the
+    last local row when ``V % n_shards != 0``.
     """
+    return jnp.swapaxes(x_local, 0, 1).reshape(-1)[:n_vertices_global]
+
+
+def ensure_capacity_sharded(sg: ShardedSlabGraph,
+                            extra_slabs: int) -> ShardedSlabGraph:
+    """Host-side pool growth for the stacked pools (axis 1 = slab rows).
+
+    Guarantees every shard has at least ``extra_slabs`` free slabs; grown
+    capacities walk the same pow2 ladder as the unsharded
+    ``ensure_capacity``.
+    """
+    g = sg.graphs
+    cap = g.keys.shape[1]
+    high = int(jnp.max(g.next_free))
+    if cap - high >= extra_slabs:
+        return sg
+    target = max(high + extra_slabs, cap + cap // 2)
+    grow = next_pow2(target) - cap
+
+    def pad_rows(a, fill, dtype):
+        pad = jnp.full((a.shape[0], grow) + a.shape[2:], fill, dtype=dtype)
+        return jnp.concatenate([a, pad], axis=1)
+
+    graphs = dataclasses.replace(
+        g,
+        keys=pad_rows(g.keys, EMPTY_KEY, jnp.uint32),
+        weights=(pad_rows(g.weights, 0.0, jnp.float32)
+                 if g.weighted else None),
+        next_slab=pad_rows(g.next_slab, INVALID_SLAB, jnp.int32),
+        slab_vertex=pad_rows(g.slab_vertex, -1, jnp.int32),
+    )
+    return dataclasses.replace(sg, graphs=graphs)
+
+
+# ----------------------------------------------------------------------------
+# owner routing — the one global exchange
+# ----------------------------------------------------------------------------
+
+def _route_body(src, dst, w, *, n_shards: int, cap: int):
+    """Traced owner-routing body (also inlined by the sharded store's fused
+    apply): (B,) global edges → (n_shards, cap) per-owner buckets."""
     valid = src != INVALID_VERTEX
     own = jnp.where(valid, owner_of(src, n_shards), n_shards)
     order = jnp.argsort(own, stable=True)
@@ -83,6 +196,10 @@ def route_edges(src: jnp.ndarray, dst: jnp.ndarray, *, n_shards: int,
     run_start = jnp.ones_like(so, dtype=bool).at[1:].set(so[1:] != so[:-1])
     base = jax.lax.cummax(jnp.where(run_start, idx, -1))
     rank = idx - base
+    # true max per-owner run length — the overflow witness (initial=0:
+    # an empty batch has no runs, not an undefined reduction)
+    max_run = jnp.max(jnp.where(so < n_shards, rank + 1, 0), initial=0)
+    overflow = jnp.maximum(max_run - cap, 0)
     ok = (so < n_shards) & (rank < cap)
     slot = jnp.where(ok, so * cap + rank, n_shards * cap)
 
@@ -92,92 +209,192 @@ def route_edges(src: jnp.ndarray, dst: jnp.ndarray, *, n_shards: int,
         .at[slot].set(sd, mode="drop")
     origin = jnp.full((n_shards * cap,), -1, jnp.int32) \
         .at[slot].set(order.astype(jnp.int32), mode="drop")
-    return (bsrc.reshape(n_shards, cap), bdst.reshape(n_shards, cap),
-            origin.reshape(n_shards, cap))
+    bw = None
+    if w is not None:
+        bw = jnp.zeros((n_shards * cap,), jnp.float32) \
+            .at[slot].set(w[order].astype(jnp.float32), mode="drop") \
+            .reshape(n_shards, cap)
+    return (bsrc.reshape(n_shards, cap), bdst.reshape(n_shards, cap), bw,
+            origin.reshape(n_shards, cap), overflow)
 
 
-@partial(jax.jit, static_argnames=("cap",))
+@partial(jax.jit, static_argnames=("n_shards", "cap"))
+def route_edges(src: jnp.ndarray, dst: jnp.ndarray,
+                w: Optional[jnp.ndarray] = None, *, n_shards: int,
+                cap: int):
+    """Owner-routing: (B,) global edges → (n_shards, cap) per-owner buckets
+    (src localised; INVALID padding; weights ride along when given).
+
+    Returns ``(bsrc, bdst, bw, origin, overflow)``: ``origin`` maps bucket
+    slots back to batch positions (-1 pad), ``bw`` is None when ``w`` is,
+    and ``overflow`` is the number of edges beyond ``cap`` in the fullest
+    owner bucket.  ``overflow > 0`` means the buckets are TOO SMALL and the
+    unrouted edges are absent from them — callers must grow ``cap`` and
+    re-route (the ``*_edges_sharded`` entry points do) rather than treat
+    the buckets as complete.
+    """
+    return _route_body(src, dst, w, n_shards=n_shards, cap=cap)
+
+
+def routing_cap(src, n_shards: int) -> int:
+    """Host-side exact bucket sizing: pow2 of the max per-owner edge count
+    (pow2 quantization bounds the jit specialisations a batch stream sees)."""
+    src = np.asarray(src).astype(np.uint64)
+    src = src[src != np.uint64(np.uint32(INVALID_VERTEX))]
+    if src.size == 0:
+        return 1
+    counts = np.bincount((src % n_shards).astype(np.int64),
+                         minlength=n_shards)
+    return next_pow2(int(counts.max()), lo=1)
+
+
+def _resolve_routing(sg: ShardedSlabGraph, src, dst, w, cap: Optional[int]):
+    """Route with a guaranteed-complete cap.
+
+    ``cap=None`` (and only None — ``cap=0`` is an explicit, growable size)
+    defaults to the full batch length, which no owner bucket can exceed.
+    Smaller explicit caps are checked against the routing's overflow
+    witness on the host and grown (pow2) until every edge lands.
+    """
+    n = src.shape[0]
+    if cap is None:
+        cap = n
+    while True:
+        bsrc, bdst, bw, origin, overflow = route_edges(
+            src, dst, w, n_shards=sg.n_shards, cap=cap)
+        if cap >= n:        # statically safe — no host sync, trace-friendly
+            return bsrc, bdst, bw, origin
+        if isinstance(overflow, jax.core.Tracer):
+            raise ValueError(
+                "insert/delete/query_edges_sharded traced with cap "
+                f"{cap} < batch {n}: overflow cannot be checked inside "
+                "jit — pass cap=None (safe default) or cap >= batch size")
+        over = int(overflow)
+        if over == 0:
+            return bsrc, bdst, bw, origin
+        cap = next_pow2(cap + over, lo=1)
+
+
+def _scatter_back(mask: jnp.ndarray, origin: jnp.ndarray,
+                  n: int) -> jnp.ndarray:
+    """(n_shards, cap) per-slot results → (B,) batch-aligned results."""
+    return jnp.zeros((n,), bool).at[
+        jnp.where(origin >= 0, origin, n).reshape(-1)
+    ].set(mask.reshape(-1), mode="drop")
+
+
+# ----------------------------------------------------------------------------
+# batched mutation through the fused engine
+# ----------------------------------------------------------------------------
+
 def insert_edges_sharded(sg: ShardedSlabGraph, src: jnp.ndarray,
-                         dst: jnp.ndarray, *, cap: Optional[int] = None
+                         dst: jnp.ndarray, w: Optional[jnp.ndarray] = None,
+                         *, cap: Optional[int] = None, donate: bool = False
                          ) -> Tuple[ShardedSlabGraph, jnp.ndarray]:
-    """Batched insert across shards.  ``cap`` bounds per-shard batch size
-    (default: full batch — safe, all-to-all capacity)."""
-    cap = cap or src.shape[0]
-    bsrc, bdst, origin = route_edges(src, dst, n_shards=sg.n_shards, cap=cap)
-    graphs, ins = jax.vmap(B.insert_edges)(sg.graphs, bsrc, bdst)
-    inserted = jnp.zeros(src.shape, bool).at[
-        jnp.where(origin >= 0, origin, src.shape[0]).reshape(-1)
-    ].set(ins.reshape(-1), mode="drop")
-    return dataclasses.replace(sg, graphs=graphs), inserted
+    """Batched insert across shards: one owner-routing exchange + one
+    engine dispatch (``update_shards``).  ``cap`` bounds per-shard batch
+    size (None = full batch, always safe; smaller caps grow on overflow —
+    no edge is ever dropped).  ``donate=True`` mutates the pools in place.
+    """
+    if src.shape[0] == 0:
+        return sg, jnp.zeros((0,), bool)
+    bsrc, bdst, bw, origin = _resolve_routing(sg, src, dst, w, cap)
+    graphs, ins, _ = B.update_shards(sg.graphs, ins=(bsrc, bdst, bw),
+                                     donate=donate)
+    return (dataclasses.replace(sg, graphs=graphs),
+            _scatter_back(ins, origin, src.shape[0]))
 
 
-@partial(jax.jit, static_argnames=("cap",))
+def delete_edges_sharded(sg: ShardedSlabGraph, src: jnp.ndarray,
+                         dst: jnp.ndarray, *, cap: Optional[int] = None,
+                         donate: bool = False
+                         ) -> Tuple[ShardedSlabGraph, jnp.ndarray]:
+    if src.shape[0] == 0:
+        return sg, jnp.zeros((0,), bool)
+    bsrc, bdst, _, origin = _resolve_routing(sg, src, dst, None, cap)
+    graphs, _, dele = B.update_shards(sg.graphs, dels=(bsrc, bdst),
+                                      donate=donate)
+    return (dataclasses.replace(sg, graphs=graphs),
+            _scatter_back(dele, origin, src.shape[0]))
+
+
 def query_edges_sharded(sg: ShardedSlabGraph, src: jnp.ndarray,
                         dst: jnp.ndarray, *, cap: Optional[int] = None
                         ) -> jnp.ndarray:
-    cap = cap or src.shape[0]
-    bsrc, bdst, origin = route_edges(src, dst, n_shards=sg.n_shards, cap=cap)
-    found = jax.vmap(B.query_edges)(sg.graphs, bsrc, bdst)
-    out = jnp.zeros(src.shape, bool).at[
-        jnp.where(origin >= 0, origin, src.shape[0]).reshape(-1)
-    ].set(found.reshape(-1), mode="drop")
-    return out
+    if src.shape[0] == 0:
+        return jnp.zeros((0,), bool)
+    bsrc, bdst, _, origin = _resolve_routing(sg, src, dst, None, cap)
+    found = B.query_shards(sg.graphs, bsrc, bdst)
+    return _scatter_back(found, origin, src.shape[0])
 
 
-@partial(jax.jit, static_argnames=("cap",))
-def delete_edges_sharded(sg: ShardedSlabGraph, src: jnp.ndarray,
-                         dst: jnp.ndarray, *, cap: Optional[int] = None):
-    cap = cap or src.shape[0]
-    bsrc, bdst, origin = route_edges(src, dst, n_shards=sg.n_shards, cap=cap)
-    graphs, dele = jax.vmap(B.delete_edges)(sg.graphs, bsrc, bdst)
-    out = jnp.zeros(src.shape, bool).at[
-        jnp.where(origin >= 0, origin, src.shape[0]).reshape(-1)
-    ].set(dele.reshape(-1), mode="drop")
-    return dataclasses.replace(sg, graphs=graphs), out
+def apply_update_sharded(sg: ShardedSlabGraph, ins_src=None, ins_dst=None,
+                         ins_w=None, del_src=None, del_dst=None, *,
+                         cap: Optional[int] = None, donate: bool = True
+                         ) -> Tuple[ShardedSlabGraph,
+                                    Optional[jnp.ndarray],
+                                    Optional[jnp.ndarray]]:
+    """One mixed epoch (deletes before inserts) in ONE engine dispatch:
+    both halves are routed, then ``update_shards`` applies them fused with
+    the stacked pools donated — the sharded analogue of ``apply_update``.
+    """
+    ins = dels = None
+    ins_origin = del_origin = None
+    if del_src is not None and del_src.shape[0] > 0:
+        ds, dd, _, del_origin = _resolve_routing(sg, del_src, del_dst,
+                                                 None, cap)
+        dels = (ds, dd)
+    if ins_src is not None and ins_src.shape[0] > 0:
+        is_, id_, iw, ins_origin = _resolve_routing(sg, ins_src, ins_dst,
+                                                    ins_w, cap)
+        ins = (is_, id_, iw)
+    if ins is None and dels is None:
+        return sg, None, None
+    graphs, ins_m, del_m = B.update_shards(sg.graphs, ins=ins, dels=dels,
+                                           donate=donate)
+    sg = dataclasses.replace(sg, graphs=graphs)
+    ins_mask = (None if ins_m is None
+                else _scatter_back(ins_m, ins_origin, ins_src.shape[0]))
+    del_mask = (None if del_m is None
+                else _scatter_back(del_m, del_origin, del_src.shape[0]))
+    return sg, ins_mask, del_mask
 
 
-@partial(jax.jit, static_argnames=("damping", "max_iter"))
+# ----------------------------------------------------------------------------
+# distributed analytics on the slab-sweep engine
+# ----------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("damping", "max_iter", "impl"))
 def pagerank_sharded(sg_in: ShardedSlabGraph, out_degree: jnp.ndarray, *,
                      init_pr: Optional[jnp.ndarray] = None,
                      damping: float = 0.85, error_margin: float = 1e-5,
-                     max_iter: int = 100) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                     max_iter: int = 100,
+                     impl: str = "auto") -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Distributed PageRank over the IN-edge sharded graph.
 
-    Per super-step the only cross-shard traffic is the reassembly of the
+    Per super-step each shard runs ONE slab-sweep engine sum sweep
+    (``sweep_vertices`` vmapped over the shard dim, global-key bound
+    ``n_keys=V``); the only cross-shard traffic is the reassembly of the
     global contrib vector ((V,) f32 — an all-gather over the shard axis)
-    consumed by every shard's pool gather; everything else is shard-local
-    VPU work.  ``out_degree`` is the GLOBAL out-degree vector.
+    consumed by every shard's gather.  ``out_degree`` is the GLOBAL
+    out-degree vector.
     """
-    S = sg_in.n_shards
     V = sg_in.n_vertices_global
-    n_local = sg_in.graphs.keys.shape[1] and sg_in.graphs.bucket_count.shape[1]
-    n_local = sg_in.graphs.bucket_count.shape[1]
     pr0 = (jnp.full((V,), 1.0 / V, jnp.float32) if init_pr is None
            else init_pr.astype(jnp.float32))
     zero_out = out_degree == 0
     has_sink = jnp.any(zero_out)
 
-    def shard_sums(graphs, contrib):
-        """Per-shard: slab-pool gather + per-local-vertex sums."""
-        def one(g):
-            view_src = g.slab_vertex
-            valid = (g.slab_vertex[:, None] >= 0) \
-                & (g.keys < jnp.uint32(V))
-            vals = jnp.where(valid, contrib[jnp.where(
-                valid, g.keys, 0).astype(jnp.int32)], 0.0)
-            partial_sums = vals.sum(axis=1)
-            seg = jnp.where(g.slab_vertex >= 0, g.slab_vertex, n_local)
-            return jax.ops.segment_sum(partial_sums, seg,
-                                       num_segments=n_local + 1)[:n_local]
-        return jax.vmap(one)(graphs)          # (S, n_local)
+    def shard_sums(contrib):
+        return jax.vmap(lambda g: sweep_vertices(
+            g, contrib, semiring="sum", n_keys=V, impl=impl))(sg_in.graphs)
 
     def body(carry):
         pr, _, it = carry
         contrib = jnp.where(out_degree > 0,
                             pr / jnp.maximum(out_degree, 1), 0.0)
-        sums_local = shard_sums(sg_in.graphs, contrib)    # (S, n_local)
-        # reassemble global: v = local * S + shard  →  transpose layout
-        sums = jnp.swapaxes(sums_local, 0, 1).reshape(-1)[:V]
+        sums_local = shard_sums(contrib)                  # (S, n_local)
+        sums = reassemble_global(sums_local, V)
         new_pr = (1.0 - damping) / V + damping * sums
         teleport = jnp.sum(jnp.where(zero_out, pr, 0.0)) / V
         new_pr = jnp.where(has_sink, new_pr + damping * teleport, new_pr)
@@ -192,3 +409,75 @@ def pagerank_sharded(sg_in: ShardedSlabGraph, out_degree: jnp.ndarray, *,
         cond, body, (pr0, jnp.asarray(jnp.inf, jnp.float32),
                      jnp.asarray(0, jnp.int32)))
     return pr, iters
+
+
+@partial(jax.jit, static_argnames=("max_iters", "impl"))
+def wcc_sharded(sg_sym: ShardedSlabGraph, *,
+                init_labels: Optional[jnp.ndarray] = None,
+                max_iters: int = 100000,
+                impl: str = "auto") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Distributed WCC: frontier-masked min-label sweeps over the SYMMETRIC
+    sharded adjacency to a fixpoint.  Integer min is exact, so the labels
+    (min vertex id per component) are bit-identical to
+    ``wcc_labelprop_sweep`` on the unsharded union.  ``init_labels`` warm
+    starts insert-only incremental runs (labels only ever decrease).
+    """
+    V = sg_sym.n_vertices_global
+    labels0 = (jnp.arange(V, dtype=jnp.int32) if init_labels is None
+               else init_labels.astype(jnp.int32))
+    changed0 = jnp.ones((V,), bool)
+
+    def cond(carry):
+        _, changed, it = carry
+        return jnp.any(changed) & (it < max_iters)
+
+    def body(carry):
+        labels, changed, it = carry
+        nbr = jax.vmap(lambda g: sweep_vertices(
+            g, labels, semiring="min", frontier=changed, n_keys=V,
+            impl=impl))(sg_sym.graphs)
+        new = jnp.minimum(labels, reassemble_global(nbr, V))
+        return new, new < labels, it + 1
+
+    labels, _, iters = jax.lax.while_loop(
+        cond, body, (labels0, changed0, jnp.asarray(0, jnp.int32)))
+    return labels, iters
+
+
+@partial(jax.jit, static_argnames=("src", "max_iters", "impl"))
+def bfs_sharded(sg_in: ShardedSlabGraph, *, src: int,
+                init_dist: Optional[jnp.ndarray] = None,
+                max_iters: int = 100000,
+                impl: str = "auto") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Distributed level-synchronous BFS over the IN-edge sharded graph.
+
+    Per super-step each shard relaxes with ONE unit-weight min-plus sweep
+    masked to the changed frontier; the reassembled global distance vector
+    IS the cross-shard frontier exchange.  Distances are integer levels
+    (UNREACHED = 2^30), bit-identical to ``bfs_vanilla`` on the unsharded
+    union.  ``init_dist`` warm starts insert-only incremental runs
+    (valid upper bounds only ever decrease under Bellman-Ford).
+    """
+    V = sg_in.n_vertices_global
+    if init_dist is None:
+        dist0 = jnp.full((V,), UNREACHED, jnp.int32).at[src].set(0)
+        changed0 = jnp.zeros((V,), bool).at[src].set(True)
+    else:
+        dist0 = init_dist.astype(jnp.int32).at[src].set(0)
+        changed0 = dist0 < UNREACHED
+
+    def cond(carry):
+        _, changed, it = carry
+        return jnp.any(changed) & (it < max_iters)
+
+    def body(carry):
+        dist, changed, it = carry
+        cand = jax.vmap(lambda g: sweep_vertices(
+            g, dist, semiring="min_plus", frontier=changed, n_keys=V,
+            impl=impl))(sg_in.graphs)
+        new = jnp.minimum(dist, reassemble_global(cand, V))
+        return new, new < dist, it + 1
+
+    dist, _, iters = jax.lax.while_loop(
+        cond, body, (dist0, changed0, jnp.asarray(0, jnp.int32)))
+    return dist, iters

@@ -49,6 +49,7 @@ def sweep_partials(g: SlabGraph, values: jnp.ndarray, *, semiring: str,
                    frontier: Optional[jnp.ndarray] = None,
                    target: Optional[jnp.ndarray] = None,
                    weighted: Optional[bool] = None,
+                   n_keys: Optional[int] = None,
                    impl: str = "auto", rows_per_block: int = 256,
                    interpret: Optional[bool] = None) -> jnp.ndarray:
     """(S,) semiring partials over the pool.
@@ -58,12 +59,18 @@ def sweep_partials(g: SlabGraph, values: jnp.ndarray, *, semiring: str,
     gathered to the slab rows here.  ``weighted`` defaults to using the
     weight pool exactly for the ``*_plus`` semirings on weighted graphs
     (unit weight otherwise) — pass explicitly to weight a ``sum`` sweep.
+    ``n_keys`` bounds lane-key validity and defaults to ``g.n_vertices``;
+    the sharded plane stores GLOBAL neighbor ids in shard-local pools, so
+    it passes the global vertex count here (``values``/``frontier`` are
+    then global vectors while the owner axis stays shard-local).
     """
     if semiring not in SEMIRINGS:
         raise ValueError(f"unknown semiring {semiring!r}")
     if weighted is None:
         weighted = g.weighted and semiring in ("min_plus", "arg_min_plus")
     weights = g.weights if weighted else None
+    if n_keys is None:
+        n_keys = g.n_vertices
     if target is not None:
         # per-vertex target → per-slab scalar (owner is uniform per row)
         target = target[jnp.maximum(g.slab_vertex, 0)]
@@ -71,11 +78,11 @@ def sweep_partials(g: SlabGraph, values: jnp.ndarray, *, semiring: str,
     if impl == "pallas":
         return slab_sweep_pallas(g.keys, g.slab_vertex, values, weights,
                                  frontier, target, semiring=semiring,
-                                 n_vertices=g.n_vertices,
+                                 n_vertices=n_keys,
                                  rows_per_block=rows_per_block,
                                  interpret=interpret)
     return slab_sweep_ref(g.keys, g.slab_vertex, values, semiring=semiring,
-                          n_vertices=g.n_vertices, weights=weights,
+                          n_vertices=n_keys, weights=weights,
                           frontier=frontier, target=target)
 
 
@@ -83,16 +90,19 @@ def sweep_vertices(g: SlabGraph, values: jnp.ndarray, *, semiring: str,
                    frontier: Optional[jnp.ndarray] = None,
                    target: Optional[jnp.ndarray] = None,
                    weighted: Optional[bool] = None,
+                   n_keys: Optional[int] = None,
                    impl: str = "auto", rows_per_block: int = 256,
                    interpret: Optional[bool] = None) -> jnp.ndarray:
     """(V,) per-vertex semiring reduction: partials folded over slab_vertex.
 
     Output lands at the slab *owner* (the pull direction): run on the
     in-edge/transposed graph for push-style relaxations — see DESIGN.md §3.
+    On sharded pools the output stays shard-local ((n_local,) per shard)
+    while ``n_keys`` widens the gather to the global id space.
     """
     partials = sweep_partials(g, values, semiring=semiring, frontier=frontier,
-                              target=target, weighted=weighted, impl=impl,
-                              rows_per_block=rows_per_block,
+                              target=target, weighted=weighted, n_keys=n_keys,
+                              impl=impl, rows_per_block=rows_per_block,
                               interpret=interpret)
     seg = jnp.where(g.slab_vertex >= 0, g.slab_vertex, g.n_vertices)
     reduce = (jax.ops.segment_sum if semiring == "sum"

@@ -407,6 +407,70 @@ def apply_update(g: SlabGraph, ins_src=None, ins_dst=None, ins_w=None,
 
 
 # ----------------------------------------------------------------------------
+# stacked shard plane: one fused dispatch over a leading shard dim
+# ----------------------------------------------------------------------------
+
+def _update_shards_body(graphs, ins, dels, *, impl="auto", interpret=None,
+                        queries_per_tile=256, use_commit_kernel=False):
+    kw = dict(impl=impl, interpret=interpret,
+              queries_per_tile=queries_per_tile,
+              use_commit_kernel=use_commit_kernel)
+
+    def one(g, i, d):
+        return _apply_update_body(g, i, d, **kw)
+
+    return jax.vmap(one)(graphs, ins, dels)
+
+
+def _query_shards_body(graphs, src, dst, *, impl="auto", interpret=None,
+                       queries_per_tile=256, use_commit_kernel=False):
+    del use_commit_kernel
+    kw = dict(impl=impl, interpret=interpret,
+              queries_per_tile=queries_per_tile)
+    return jax.vmap(lambda g, s, d: _query_body(g, s, d, **kw))(
+        graphs, src, dst)
+
+
+_shards_jit = jax.jit(_update_shards_body, static_argnames=_STATIC)
+_shards_jit_don = jax.jit(_update_shards_body, static_argnames=_STATIC,
+                          donate_argnums=(0,))
+_qshards_jit = jax.jit(_query_shards_body, static_argnames=_STATIC)
+
+
+def update_shards(graphs, ins=None, dels=None, *, impl: str = "auto",
+                  interpret: Optional[bool] = None,
+                  queries_per_tile: int = 256,
+                  use_commit_kernel: bool = False, donate: bool = False):
+    """One mixed update epoch on a SHARD-STACKED graph — the engine body
+    vmapped over the leading shard dim, one dispatch for every shard.
+
+    ``graphs`` is a SlabGraph whose data leaves carry a leading shard dim
+    (``distributed.sharded_graph.shard_empty``); ``ins`` is
+    ``(src, dst, w | None)`` and ``dels`` is ``(src, dst)``, each
+    ``(n_shards, cap)`` owner-routed per-shard batches (INVALID padding,
+    src shard-local, dst global).  Deletes apply before inserts.  Returns
+    ``(graphs, inserted_mask | None, deleted_mask | None)`` with
+    ``(n_shards, cap)`` masks.  ``donate=True`` consumes the stacked pools
+    (in-place mutation; thread the returned graphs).
+    """
+    fn = _shards_jit_don if donate else _shards_jit
+    if donate:
+        graphs = _copy_aliased(graphs)
+    return fn(graphs, ins, dels, impl=impl, interpret=interpret,
+              queries_per_tile=queries_per_tile,
+              use_commit_kernel=use_commit_kernel)
+
+
+def query_shards(graphs, src, dst, *, impl: str = "auto",
+                 interpret: Optional[bool] = None,
+                 queries_per_tile: int = 256) -> jnp.ndarray:
+    """Batched membership over a shard-stacked graph: (n_shards, cap)
+    owner-routed queries → (n_shards, cap) found mask, one dispatch."""
+    return _qshards_jit(graphs, src, dst, impl=impl, interpret=interpret,
+                        queries_per_tile=queries_per_tile)
+
+
+# ----------------------------------------------------------------------------
 # stacked multi-view plane: every GraphStore view in ONE dispatch
 # ----------------------------------------------------------------------------
 
@@ -492,5 +556,5 @@ def update_views(views: Tuple[SlabGraph, ...], roles: Tuple[str, ...],
 
 __all__ = ["IMPLS", "FORWARD", "TRANSPOSE", "SYMMETRIC",
            "query_edges", "insert_edges", "delete_edges",
-           "apply_update", "update_views",
+           "apply_update", "update_views", "update_shards", "query_shards",
            "slab_probe_pallas", "slab_commit_pallas"]

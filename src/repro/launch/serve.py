@@ -19,24 +19,24 @@ import time
 import numpy as np
 
 
-def build_requests(store, rng, *, n_requests: int, batch: int,
-                   delete_frac: float, prop_names):
+def build_requests(n_vertices, initial_edges, rng, *, n_requests: int,
+                   batch: int, delete_frac: float, prop_names):
     """Synthesize the request mix, one generator step per served request.
 
     Deletions are sampled from a host-side ledger of currently-present edges
     (the workload generator's bookkeeping, not graph state — the store owns
-    the graph).  Yields (kind, request) pairs lazily so each update samples
-    from the post-update ledger.
+    the graph; ``initial_edges`` is the deduped (src, dst) pair list it was
+    built from, so the same generator drives sharded and unsharded stores).
+    Yields (kind, request) pairs lazily so each update samples from the
+    post-update ledger.
     """
-    from ..core import pool_edges
     from ..stream import MembershipQuery, PropertyRead, UpdateBatch
 
-    view = pool_edges(store.forward)
-    m = np.asarray(view.valid)
-    present = set(zip(np.asarray(view.src)[m].tolist(),
-                      np.asarray(view.dst)[m].astype(np.int64).tolist()))
+    src0, dst0 = initial_edges
+    present = set(zip(np.asarray(src0).tolist(),
+                      np.asarray(dst0).astype(np.int64).tolist()))
     kinds = ["update"] + [f"read:{p}" for p in prop_names] + ["member"]
-    V = store.n_vertices
+    V = n_vertices
 
     for i in range(n_requests):
         kind = kinds[i % len(kinds)]
@@ -72,7 +72,8 @@ def describe(resp, n_vertices: int) -> str:
         v = np.asarray(p["value"].dist if hasattr(p["value"], "dist")
                        else p["value"])
         if p["name"].startswith("bfs"):
-            return f"reachable={int((v < 1e29).sum())}"
+            # tree dist is f32 (INF=1e30), sharded levels are i32 (2^30)
+            return f"reachable={int((v < 2 ** 30).sum())}"
         if p["name"] == "wcc":
             return f"components={int((v == np.arange(n_vertices)).sum())}"
         return f"top={float(v.max()):.5f}"
@@ -88,6 +89,10 @@ def main():
     ap.add_argument("--delete-frac", type=float, default=0.25,
                     help="fraction of each update batch that deletes")
     ap.add_argument("--policy", choices=["lazy", "eager"], default="lazy")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="vertex-partition the store across N shards "
+                         "(ShardedGraphStore; N>1 wants N devices or "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
     ap.add_argument("--checkpoint", default=None,
                     help="directory to snapshot the store into at the end")
     ap.add_argument("--seed", type=int, default=0)
@@ -96,27 +101,40 @@ def main():
     from ..algorithms import (bfs_stream_property, pagerank_stream_property,
                               wcc_stream_property)
     from ..data.synth import rmat_edges
-    from ..stream import GraphStore, PropertyRegistry, RequestPipeline
+    from ..stream import (GraphStore, PropertyRegistry, RequestPipeline,
+                          ShardedGraphStore, sharded_bfs_property,
+                          sharded_pagerank_property, sharded_wcc_property)
 
     rng = np.random.default_rng(args.seed)
     V = args.vertices
     src, dst = rmat_edges(V, args.initial_edges, seed=args.seed)
-    # pagerank/bfs/wcc read only the forward + transpose views; skip the
-    # symmetric one rather than pay its maintenance every epoch
-    store = GraphStore.from_edges(
-        V, src, dst, hashing=False, with_symmetric=False,
-        slack_slabs=args.requests * args.batch // 64 + 512)
-    print(f"[serve] boot: V={V} E={store.n_edges}")
-    registry = PropertyRegistry(store)
-    cap = len(src) + args.requests * args.batch + 4096
-    registry.register(pagerank_stream_property(), policy=args.policy)
-    registry.register(bfs_stream_property(0, edge_capacity=cap),
-                      policy=args.policy)
-    registry.register(wcc_stream_property(), policy=args.policy)
+    from ..stream import dedup_pairs
+    src, dst, _ = dedup_pairs(src, dst)
+    if args.shards > 1:
+        # sharded serving plane: same views, vertex-partitioned; the
+        # analytics run as distributed slab-sweep super-steps
+        store = ShardedGraphStore.from_edges(V, args.shards, src, dst)
+        registry = PropertyRegistry(store)
+        registry.register(sharded_pagerank_property(), policy=args.policy)
+        registry.register(sharded_bfs_property(0), policy=args.policy)
+        registry.register(sharded_wcc_property(), policy=args.policy)
+    else:
+        # pagerank/bfs/wcc read only the forward + transpose views; skip the
+        # symmetric one rather than pay its maintenance every epoch
+        store = GraphStore.from_edges(
+            V, src, dst, hashing=False, with_symmetric=False,
+            slack_slabs=args.requests * args.batch // 64 + 512)
+        registry = PropertyRegistry(store)
+        cap = len(src) + args.requests * args.batch + 4096
+        registry.register(pagerank_stream_property(), policy=args.policy)
+        registry.register(bfs_stream_property(0, edge_capacity=cap),
+                          policy=args.policy)
+        registry.register(wcc_stream_property(), policy=args.policy)
+    print(f"[serve] boot: V={V} E={store.n_edges} shards={args.shards}")
     pipeline = RequestPipeline(store, registry)
 
     t0 = time.time()
-    stream = build_requests(store, rng, n_requests=args.requests,
+    stream = build_requests(V, (src, dst), rng, n_requests=args.requests,
                             batch=args.batch, delete_frac=args.delete_frac,
                             prop_names=["pagerank", "bfs_0", "wcc"])
     for i, (kind, req) in enumerate(stream):
@@ -129,8 +147,11 @@ def main():
           f"store v{store.version}, E={store.n_edges}")
 
     if args.checkpoint:
-        path = store.save(args.checkpoint, registry=registry)
-        print(f"[serve] checkpointed store+properties -> {path}")
+        if args.shards > 1:
+            print("[serve] --checkpoint is not wired for sharded stores yet")
+        else:
+            path = store.save(args.checkpoint, registry=registry)
+            print(f"[serve] checkpointed store+properties -> {path}")
 
 
 if __name__ == "__main__":

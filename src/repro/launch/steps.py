@@ -353,10 +353,12 @@ def graph_cell(cfg: Dict, shape: Dict, mesh: Optional[Mesh]):
 
     if shape["kind"] == "graph_update":
         B = shape["batch"]
-        cap = max(256, B // max(1, n_shards // 8))
-
+        # cap=None routes with full-batch buckets — the only overflow-proof
+        # choice inside a traced step (an undersized cap silently dropped
+        # routed edges here before route_edges grew an overflow contract,
+        # and host-side grow-retry can't run under tracing).
         def step(sg, src, dst):
-            return SGR.insert_edges_sharded(sg, src, dst, cap=cap)
+            return SGR.insert_edges_sharded(sg, src, dst, cap=None)
         args = (sg_shape, sds((B,), jnp.uint32), sds((B,), jnp.uint32))
         return step, args, (sg_specs, P(None), P(None))
 

@@ -12,6 +12,8 @@ from .properties import EAGER, LAZY, PropertyRegistry, PropertySpec
 from .requests import (MembershipQuery, NeighborsQuery, PropertyRead, Request,
                        RequestPipeline, Response, UpdateBatch,
                        coalesce_updates)
+from .sharded_store import (ShardedGraphStore, sharded_bfs_property,
+                            sharded_pagerank_property, sharded_wcc_property)
 
 __all__ = [
     "ALL_VIEWS", "FORWARD", "SYMMETRIC", "TRANSPOSE",
@@ -19,4 +21,6 @@ __all__ = [
     "EAGER", "LAZY", "PropertyRegistry", "PropertySpec",
     "MembershipQuery", "NeighborsQuery", "PropertyRead", "Request",
     "RequestPipeline", "Response", "UpdateBatch", "coalesce_updates",
+    "ShardedGraphStore", "sharded_bfs_property",
+    "sharded_pagerank_property", "sharded_wcc_property",
 ]

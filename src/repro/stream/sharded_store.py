@@ -1,0 +1,423 @@
+"""ShardedGraphStore — the versioned multi-view update plane, vertex-
+partitioned across a device mesh (DESIGN.md §7).
+
+The sharded rendering of ``GraphStore``: the forward, transposed, and
+symmetric views are each a ``ShardedSlabGraph`` (stacked shard-local pools,
+modulo vertex striping), kept consistent as ONE versioned unit.  Per
+``apply(inserts, deletes)`` the contract is the unsharded store's, plus the
+distribution rules:
+
+  1. ONE host-side canonicalisation (``canonical_batch`` — shared with the
+     unsharded store), then per-view owner routing and per-shard dispatch
+     happen inside ONE donated jit: forward routes by ``owner(src)``,
+     transpose by ``owner(dst)``, the symmetric union by each direction's
+     own source — the per-view routing steps are the only global exchanges
+     of the epoch;
+  2. routing buckets are sized on the host from the TRUE max per-owner run
+     length (pow2-quantized — ``routing_cap``), so a skewed batch that
+     lands entirely on one shard still routes every edge: overflow is
+     impossible by construction, never silently dropped;
+  3. deletes before inserts; the symmetric union consults the post-delete
+     forward view (a routed sharded query inside the same dispatch);
+  4. every shard's pools mutate through the donated slab-update engine
+     (``_apply_update_body`` vmapped over the shard dim) — the same fused
+     kernel path the single-graph store uses, not the legacy per-op chain;
+  5. epochs close via ``update_slab_pointers`` on the stacked pools; the
+     monotonic ``version``, bounded batch log, and listener protocol are
+     identical to ``GraphStore`` — ``PropertyRegistry`` works unchanged.
+
+Sharded ``stream_property`` hooks live here too (PageRank / WCC / BFS over
+the sharded views via the slab-sweep engine's global-key sweeps).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.slab_graph import update_slab_pointers
+from ..core.hashing import INVALID_VERTEX
+from ..core.worklist import EdgeFrontier, expand_vertices
+from ..distributed.sharded_graph import (ShardedSlabGraph, _route_body,
+                                         _scatter_back,
+                                         ensure_capacity_sharded,
+                                         bfs_sharded, pagerank_sharded,
+                                         reassemble_global, routing_cap,
+                                         shard_from_edges_host, shard_slice,
+                                         wcc_sharded)
+from ..kernels.slab_update.ops import (_copy_aliased, _delete_body,
+                                       _insert_body, _query_body)
+from .store import (ALL_VIEWS, FORWARD, SYMMETRIC, TRANSPOSE, AppliedBatch,
+                    VersionedStoreBase, _pad_f32, _pad_u32, _pow2,
+                    canonical_batch, dedup_pairs)
+
+
+# ----------------------------------------------------------------------------
+# the fused multi-view sharded apply — route + mutate every view in ONE jit
+# ----------------------------------------------------------------------------
+
+def _sharded_apply_body(views, ins, dels, *, roles, n_shards, caps,
+                        impl="auto", interpret=None, queries_per_tile=256):
+    kw = dict(impl=impl, interpret=interpret,
+              queries_per_tile=queries_per_tile, use_commit_kernel=False)
+    fwd_del, tr_del, sym_del, fwd_ins, tr_ins, sym_ins = caps
+    views = list(views)
+    fidx = roles.index(FORWARD)
+    ins_mask = del_mask = None
+
+    def vdel(sg, s, d, cap):
+        bs, bd, _, origin, _ = _route_body(s, d, None, n_shards=n_shards,
+                                           cap=cap)
+        g, m = jax.vmap(lambda g, a, b: _delete_body(g, a, b, **kw))(
+            sg.graphs, bs, bd)
+        return dataclasses.replace(sg, graphs=g), m, origin
+
+    def vins(sg, s, d, w, cap):
+        bs, bd, bw, origin, _ = _route_body(s, d, w, n_shards=n_shards,
+                                            cap=cap)
+        g, m = jax.vmap(lambda g, a, b, c: _insert_body(g, a, b, c, **kw))(
+            sg.graphs, bs, bd, bw)
+        return dataclasses.replace(sg, graphs=g), m, origin
+
+    if dels is not None:
+        ds, dd = dels
+        p = ds.shape[0]
+        # forward first: the symmetric union consults the post-delete
+        # forward view to decide whether the reverse direction survives.
+        views[fidx], m, origin = vdel(views[fidx], ds, dd, fwd_del)
+        del_mask = _scatter_back(m, origin, p)
+        for i, role in enumerate(roles):
+            if i == fidx:
+                continue
+            if role == TRANSPOSE:
+                views[i], _, _ = vdel(views[i], dd, ds, tr_del)
+            elif role == SYMMETRIC:
+                bs, bd, _, qorig, _ = _route_body(dd, ds, None,
+                                                  n_shards=n_shards,
+                                                  cap=tr_del)
+                found = jax.vmap(lambda g, a, b: _query_body(
+                    g, a, b, impl=impl, interpret=interpret,
+                    queries_per_tile=queries_per_tile))(
+                    views[fidx].graphs, bs, bd)
+                rev = _scatter_back(found, qorig, p)
+                gone = ~rev
+                s2 = jnp.concatenate([jnp.where(gone, ds, INVALID_VERTEX),
+                                      jnp.where(gone, dd, INVALID_VERTEX)])
+                d2 = jnp.concatenate([dd, ds])
+                views[i], _, _ = vdel(views[i], s2, d2, sym_del)
+
+    if ins is not None:
+        s, d, w = ins
+        p = s.shape[0]
+        views[fidx], m, origin = vins(views[fidx], s, d, w, fwd_ins)
+        ins_mask = _scatter_back(m, origin, p)
+        for i, role in enumerate(roles):
+            if i == fidx:
+                continue
+            if role == TRANSPOSE:
+                views[i], _, _ = vins(views[i], d, s, w, tr_ins)
+            elif role == SYMMETRIC:
+                w2 = None if w is None else jnp.concatenate([w, w])
+                views[i], _, _ = vins(views[i], jnp.concatenate([s, d]),
+                                      jnp.concatenate([d, s]), w2, sym_ins)
+
+    return tuple(views), ins_mask, del_mask
+
+
+_APPLY_STATIC = ("roles", "n_shards", "caps", "impl", "interpret",
+                 "queries_per_tile")
+_apply_jit_don = jax.jit(_sharded_apply_body, static_argnames=_APPLY_STATIC,
+                         donate_argnums=(0,))
+
+
+# ----------------------------------------------------------------------------
+# the store
+# ----------------------------------------------------------------------------
+
+class ShardedGraphStore(VersionedStoreBase):
+    """Forward + transposed + symmetric ShardedSlabGraph views as one
+    versioned unit (the sharded ``GraphStore`` — the shared
+    ``VersionedStoreBase`` listener/log/version protocol, so
+    ``PropertyRegistry`` and ``RequestPipeline`` apply)."""
+
+    def __init__(self, views: Dict[str, ShardedSlabGraph], *, weighted: bool,
+                 version: int = 0, log_capacity: int = 64):
+        assert FORWARD in views, "a store always carries the forward view"
+        unknown = set(views) - set(ALL_VIEWS)
+        assert not unknown, f"unknown views {unknown}"
+        super().__init__(version=version, log_capacity=log_capacity)
+        self._views = dict(views)
+        self.weighted = bool(weighted)
+
+    # ------------------------------------------------------------- construct
+    @classmethod
+    def from_edges(cls, n_vertices: int, n_shards: int, src, dst, w=None, *,
+                   with_transpose: bool = True, with_symmetric: bool = True,
+                   slack_slabs: int = 0,
+                   log_capacity: int = 64) -> "ShardedGraphStore":
+        """Bulk-build every view host-side (``shard_from_edges_host`` —
+        dense pools, dedup shared; the engine path serves the epochs)."""
+        src, dst, w = dedup_pairs(src, dst, w)
+        kw = dict(slack_slabs=slack_slabs)
+        views = {FORWARD: shard_from_edges_host(
+            n_vertices, n_shards, src, dst, w, **kw)}
+        if with_transpose:
+            views[TRANSPOSE] = shard_from_edges_host(
+                n_vertices, n_shards, dst, src, w, **kw)
+        if with_symmetric:
+            s2 = np.concatenate([src, dst])
+            d2 = np.concatenate([dst, src])
+            w2 = None if w is None else np.concatenate([w, w])
+            views[SYMMETRIC] = shard_from_edges_host(
+                n_vertices, n_shards, s2, d2, w2, **kw)
+        return cls(views, weighted=w is not None, log_capacity=log_capacity)
+
+    # ------------------------------------------------------------- accessors
+    @property
+    def forward(self) -> ShardedSlabGraph:
+        return self._views[FORWARD]
+
+    @property
+    def transpose(self) -> Optional[ShardedSlabGraph]:
+        return self._views.get(TRANSPOSE)
+
+    @property
+    def symmetric(self) -> Optional[ShardedSlabGraph]:
+        return self._views.get(SYMMETRIC)
+
+    @property
+    def views(self) -> Dict[str, ShardedSlabGraph]:
+        return dict(self._views)
+
+    @property
+    def n_shards(self) -> int:
+        return self.forward.n_shards
+
+    @property
+    def n_vertices(self) -> int:
+        return self.forward.n_vertices_global
+
+    @property
+    def n_edges(self) -> int:
+        return int(jnp.sum(self.forward.graphs.n_edges))
+
+    @property
+    def out_degree(self) -> jnp.ndarray:
+        """GLOBAL out-degrees, reassembled from the forward shards."""
+        return reassemble_global(self.forward.graphs.degree, self.n_vertices)
+
+    @property
+    def in_degree(self) -> jnp.ndarray:
+        if self.transpose is None:
+            raise ValueError("in-degrees live on the transpose view; build "
+                             "the store with with_transpose=True")
+        return reassemble_global(self.transpose.graphs.degree,
+                                 self.n_vertices)
+
+    # ----------------------------------------------------------------- apply
+    def apply(self, ins_src=None, ins_dst=None, ins_w=None,
+              del_src=None, del_dst=None) -> AppliedBatch:
+        """Apply one mixed update batch to every view; close the epoch.
+
+        One host dedup, host-exact routing-cap sizing (no overflow by
+        construction), one donated multi-view dispatch — see module doc.
+        """
+        i_s, i_d, i_w, d_s, d_d = canonical_batch(
+            ins_src, ins_dst, ins_w, del_src, del_dst,
+            weighted=self.weighted)
+        roles = tuple(v for v in ALL_VIEWS if v in self._views)
+        S = self.n_shards
+
+        # -- host-exact per-view bucket sizing + capacity -------------------
+        fwd_ins = tr_ins = sym_ins = fwd_del = tr_del = sym_del = 1
+        if len(d_s):
+            fwd_del = routing_cap(d_s, S)
+            tr_del = routing_cap(d_d, S)
+            sym_del = routing_cap(np.concatenate([d_s, d_d]), S)
+        if len(i_s):
+            fwd_ins = routing_cap(i_s, S)
+            tr_ins = routing_cap(i_d, S)
+            sym_ins = routing_cap(np.concatenate([i_s, i_d]), S)
+            per_view = {FORWARD: fwd_ins, TRANSPOSE: tr_ins,
+                        SYMMETRIC: sym_ins}
+            for name in roles:
+                self._views[name] = ensure_capacity_sharded(
+                    self._views[name], per_view[name] + 64)
+        caps = (fwd_del, tr_del, sym_del, fwd_ins, tr_ins, sym_ins)
+
+        # -- canonical device batches (every view derives from these) -------
+        del_sj = del_dj = del_mask = None
+        ins_sj = ins_dj = ins_wj = ins_mask = None
+        dels = ins = None
+        if len(d_s):
+            p = _pow2(len(d_s))
+            del_sj, del_dj = _pad_u32(d_s, p), _pad_u32(d_d, p)
+            dels = (del_sj, del_dj)
+        if len(i_s):
+            p = _pow2(len(i_s))
+            ins_sj, ins_dj = _pad_u32(i_s, p), _pad_u32(i_d, p)
+            ins_wj = _pad_f32(i_w, p)
+            ins = (ins_sj, ins_dj, ins_wj)
+
+        # -- single donated route+mutate dispatch over every live view ------
+        n_inserted = n_deleted = 0
+        if ins is not None or dels is not None:
+            in_views = _copy_aliased(tuple(self._views[r] for r in roles))
+            new_views, ins_mask, del_mask = _apply_jit_don(
+                in_views, ins, dels, roles=roles, n_shards=S, caps=caps)
+            for r, g in zip(roles, new_views):
+                self._views[r] = g
+            if del_mask is not None:
+                n_deleted = int(jnp.sum(del_mask.astype(jnp.int32)))
+            if ins_mask is not None:
+                n_inserted = int(jnp.sum(ins_mask.astype(jnp.int32)))
+
+        # -- version bump + notification (epoch still open) -----------------
+        batch = self._record_batch(
+            ins_src=ins_sj, ins_dst=ins_dj, ins_w=ins_wj, ins_mask=ins_mask,
+            del_src=del_sj, del_dst=del_dj, del_mask=del_mask,
+            n_inserted=n_inserted, n_deleted=n_deleted)
+
+        # -- close the epoch on every view's stacked pools ------------------
+        for name, sg in self._views.items():
+            self._views[name] = dataclasses.replace(
+                sg, graphs=update_slab_pointers(sg.graphs))
+        return batch
+
+    # --------------------------------------------------------------- queries
+    def query(self, src, dst) -> np.ndarray:
+        """Batched edge-membership against the sharded forward view (host
+        arrays in, host bool array out, trimmed to the query length)."""
+        from ..distributed.sharded_graph import query_edges_sharded
+        src = np.asarray(src, np.uint32)
+        dst = np.asarray(dst, np.uint32)
+        p = _pow2(max(len(src), 1))
+        cap = routing_cap(src, self.n_shards)
+        found = query_edges_sharded(self.forward, _pad_u32(src, p),
+                                    _pad_u32(dst, p), cap=cap)
+        return np.asarray(found)[:len(src)]
+
+    def neighbors(self, vertices, *, out_capacity: int = 4096
+                  ) -> EdgeFrontier:
+        """Current out-edges of ``vertices`` as one EdgeFrontier: per-owner
+        chain walks on the local shards, src ids re-globalised and merged
+        (host-facing query API — RequestPipeline's NeighborsQuery)."""
+        vertices = np.asarray(vertices, np.uint32)
+        S = self.n_shards
+        cap = _pow2(out_capacity)
+        srcs, dsts, ws = [], [], []
+        overflow = False
+        for k in range(S):
+            m = (vertices % np.uint32(S)) == k
+            if not m.any():
+                continue
+            g = shard_slice(self.forward, k)
+            loc = (vertices[m] // np.uint32(S)).astype(np.uint32)
+            p = _pow2(max(len(loc), 1))
+            vmask = jnp.asarray(np.arange(p) < len(loc))
+            ef = expand_vertices(g, _pad_u32(loc, p), vmask,
+                                 out_capacity=cap, max_bpv=1)
+            n = int(ef.size)
+            overflow = overflow or bool(ef.overflow)
+            srcs.append(np.asarray(ef.src)[:n].astype(np.int64) * S + k)
+            dsts.append(np.asarray(ef.dst)[:n])
+            ws.append(np.asarray(ef.weight)[:n])
+        src = np.concatenate(srcs) if srcs else np.zeros(0, np.int64)
+        n = min(len(src), cap)
+        overflow = overflow or len(src) > cap
+        out_src = np.zeros(cap, np.uint32)
+        out_dst = np.zeros(cap, np.uint32)
+        out_w = np.zeros(cap, np.float32)
+        out_src[:n] = src[:n].astype(np.uint32)
+        if srcs:
+            out_dst[:n] = np.concatenate(dsts)[:n]
+            out_w[:n] = np.concatenate(ws)[:n]
+        return EdgeFrontier(jnp.asarray(out_src), jnp.asarray(out_dst),
+                            jnp.asarray(out_w), jnp.asarray(n, jnp.int32),
+                            jnp.asarray(overflow))
+
+
+# ----------------------------------------------------------------------------
+# sharded stream_property hooks (registered via PropertyRegistry)
+# ----------------------------------------------------------------------------
+
+def sharded_pagerank_property(*, damping: float = 0.85,
+                              error_margin: float = 1e-5,
+                              max_iter: int = 100):
+    """PropertySpec: PageRank over the sharded transpose (in-edge) view with
+    the global out-degree vector; warm start — incremental == decremental ==
+    batch-independent, so lazy replay collapses to one solve."""
+    from .properties import PropertySpec
+
+    def _run(store, init_pr=None):
+        if store.transpose is None:
+            raise ValueError("sharded pagerank sweeps the transpose view; "
+                             "build the store with with_transpose=True")
+        pr, _ = pagerank_sharded(store.transpose, store.out_degree,
+                                 init_pr=init_pr, damping=damping,
+                                 error_margin=error_margin,
+                                 max_iter=max_iter)
+        return pr
+
+    return PropertySpec(
+        name="pagerank",
+        init=lambda store: _run(store),
+        on_batch=lambda store, state, batch: _run(store, init_pr=state),
+        refresh=lambda store: _run(store),
+        state_like=lambda n: jnp.zeros((n,), jnp.float32),
+        collapse_replay=True)
+
+
+def sharded_wcc_property(*, max_iters: int = 100000):
+    """PropertySpec: min-id component labels via sharded min-label sweeps
+    over the symmetric union.  Insert-only epochs warm start from the
+    current labels (labels only decrease under inserts); epochs that delete
+    fall back to the static recompute (decremental WCC stays open, §6.4)."""
+    from .properties import PropertySpec
+
+    def _run(store, init_labels=None):
+        if store.symmetric is None:
+            raise ValueError("sharded wcc sweeps the symmetric view; build "
+                             "the store with with_symmetric=True")
+        labels, _ = wcc_sharded(store.symmetric, init_labels=init_labels,
+                                max_iters=max_iters)
+        return labels
+
+    def _on_batch(store, labels, batch):
+        if batch.n_deleted > 0:
+            return _run(store)
+        return _run(store, init_labels=labels)
+
+    return PropertySpec(
+        name="wcc", init=_run, on_batch=_on_batch, refresh=_run,
+        state_like=lambda n: jnp.zeros((n,), jnp.int32))
+
+
+def sharded_bfs_property(src: int, *, max_iters: int = 100000):
+    """PropertySpec: BFS level distances from ``src`` via sharded unit
+    min-plus sweeps over the transpose (in-edge) view.  Insert-only epochs
+    warm start from the current distances (valid upper bounds); deleting
+    epochs recompute.  Requires an UNWEIGHTED store (levels, not SSSP)."""
+    from .properties import PropertySpec
+
+    def _run(store, init_dist=None):
+        assert not store.weighted, \
+            "sharded_bfs_property needs an unweighted store"
+        if store.transpose is None:
+            raise ValueError("sharded bfs sweeps the transpose view; build "
+                             "the store with with_transpose=True")
+        dist, _ = bfs_sharded(store.transpose, src=src, init_dist=init_dist,
+                              max_iters=max_iters)
+        return dist
+
+    def _on_batch(store, dist, batch):
+        if batch.n_deleted > 0:
+            return _run(store)
+        return _run(store, init_dist=dist)
+
+    return PropertySpec(
+        name=f"bfs_{src}", init=_run, on_batch=_on_batch, refresh=_run,
+        state_like=lambda n: jnp.zeros((n,), jnp.int32))

@@ -130,7 +130,49 @@ class AppliedBatch:
     n_deleted: int
 
 
-class GraphStore:
+class VersionedStoreBase:
+    """The version / bounded-log / listener protocol both stores speak.
+
+    This is the contract ``PropertyRegistry``'s catch-up relies on
+    (``version`` monotonic, ``batches_since`` None past the log floor,
+    listeners notified while the epoch is still open) — shared so the
+    unsharded ``GraphStore`` and the ``ShardedGraphStore`` cannot drift.
+    """
+
+    def __init__(self, *, version: int = 0, log_capacity: int = 64):
+        self.version = int(version)
+        self._log_capacity = int(log_capacity)
+        self._log: List[AppliedBatch] = []
+        self._log_floor = int(version)  # version the oldest logged batch follows
+        self._listeners: List[Callable[[AppliedBatch], None]] = []
+
+    def add_listener(self, fn: Callable[[AppliedBatch], None]) -> None:
+        """Subscribe to applied batches (called with the epoch still open)."""
+        self._listeners.append(fn)
+
+    def batches_since(self, version: int) -> Optional[List[AppliedBatch]]:
+        """Applied batches after ``version``, oldest first; None if the
+        bounded log no longer reaches back that far."""
+        if version == self.version:
+            return []
+        if version < self._log_floor:
+            return None
+        return [b for b in self._log if b.version > version]
+
+    def _record_batch(self, **fields) -> AppliedBatch:
+        """Bump the version, log the batch, notify listeners (epoch open)."""
+        self.version += 1
+        batch = AppliedBatch(version=self.version, **fields)
+        self._log.append(batch)
+        if len(self._log) > self._log_capacity:
+            self._log = self._log[-self._log_capacity:]
+            self._log_floor = self._log[0].version - 1
+        for fn in self._listeners:
+            fn(batch)
+        return batch
+
+
+class GraphStore(VersionedStoreBase):
     """Forward + transposed + symmetric SlabGraph views as one versioned unit."""
 
     def __init__(self, views: Dict[str, SlabGraph], *, weighted: bool,
@@ -138,13 +180,9 @@ class GraphStore:
         assert FORWARD in views, "a GraphStore always carries the forward view"
         unknown = set(views) - set(ALL_VIEWS)
         assert not unknown, f"unknown views {unknown}"
+        super().__init__(version=version, log_capacity=log_capacity)
         self._views = dict(views)
         self.weighted = bool(weighted)
-        self.version = int(version)
-        self._log_capacity = int(log_capacity)
-        self._log: List[AppliedBatch] = []
-        self._log_floor = int(version)  # version the oldest logged batch follows
-        self._listeners: List[Callable[[AppliedBatch], None]] = []
         self._max_bpv = int(np.max(np.asarray(
             views[FORWARD].bucket_count))) if views[FORWARD].n_vertices else 1
 
@@ -210,19 +248,6 @@ class GraphStore:
     def max_bpv(self) -> int:
         return self._max_bpv
 
-    def add_listener(self, fn: Callable[[AppliedBatch], None]) -> None:
-        """Subscribe to applied batches (called with the epoch still open)."""
-        self._listeners.append(fn)
-
-    def batches_since(self, version: int) -> Optional[List[AppliedBatch]]:
-        """Applied batches after ``version``, oldest first; None if the
-        bounded log no longer reaches back that far."""
-        if version == self.version:
-            return []
-        if version < self._log_floor:
-            return None
-        return [b for b in self._log if b.version > version]
-
     # ----------------------------------------------------------------- apply
     def apply(self, ins_src=None, ins_dst=None, ins_w=None,
               del_src=None, del_dst=None) -> AppliedBatch:
@@ -274,18 +299,10 @@ class GraphStore:
                 n_inserted = int(jnp.sum(ins_mask.astype(jnp.int32)))
 
         # -- version bump + notification (epoch still open) -----------------
-        self.version += 1
-        batch = AppliedBatch(
-            version=self.version,
+        batch = self._record_batch(
             ins_src=ins_sj, ins_dst=ins_dj, ins_w=ins_wj, ins_mask=ins_mask,
             del_src=del_sj, del_dst=del_dj, del_mask=del_mask,
             n_inserted=n_inserted, n_deleted=n_deleted)
-        self._log.append(batch)
-        if len(self._log) > self._log_capacity:
-            self._log = self._log[-self._log_capacity:]
-            self._log_floor = self._log[0].version - 1
-        for fn in self._listeners:
-            fn(batch)
 
         # -- close the epoch on every view ----------------------------------
         for name, g in self._views.items():
