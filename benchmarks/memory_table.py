@@ -1,12 +1,17 @@
 """Paper Table 5 — memory: pooled head-slab allocation vs per-vertex
 allocation (SlabHash default), plus the Hornet-like footprint, across graphs
-of varying degree skew."""
+of varying degree skew; plus pool-health rows (``core.pool_stats``) showing
+what churn does to the pool and what the slab-compaction plane wins back."""
 from __future__ import annotations
 
 import numpy as np
+import jax.numpy as jnp
 
-from repro.core import SLAB_WIDTH, from_edges_host, occupancy_stats
+from repro.core import (SLAB_WIDTH, ensure_capacity, from_edges_host,
+                        occupancy_stats, pool_stats, update_slab_pointers)
+from repro.core.batch import apply_update
 from repro.data.synth import rmat_edges, uniform_edges
+from repro.kernels.slab_compact import compact
 
 from . import hornet_like as HL
 from .timing import row
@@ -44,3 +49,38 @@ def run(scale: str = "quick"):
         row(f"memory_{name}_pervertex_MiB", per_vertex / 2 ** 20,
             f"occupancy={stats['occupancy']:.2f}")
         row(f"memory_{name}_hornet_like_MiB", HL.nbytes(h) / 2 ** 20, "")
+
+    # --- pool health under churn: tombstones in, compaction out -------------
+    # hub-skewed stream (the regime where chains really grow — power-law
+    # sources): deletes tombstone hub chains, inserts keep extending them.
+    # V is small here so the head-slab prefix doesn't floor the capacity.
+    rng = np.random.default_rng(12)
+    V, hubs = (2048, 64) if scale == "quick" else (8192, 256)
+    E_hub = 32 * V
+    src = rng.integers(0, hubs, E_hub).astype(np.uint32)
+    dst = rng.integers(0, V, E_hub).astype(np.uint32)
+    g = from_edges_host(V, src, dst, hashing=False)
+    epochs, B = (8, 2048) if scale == "quick" else (12, 8192)
+    for _ in range(epochs):
+        di = rng.choice(len(src), B, replace=False)
+        ins_s = rng.integers(0, hubs, B).astype(np.uint32)
+        ins_d = rng.integers(0, V, B).astype(np.uint32)
+        g = ensure_capacity(g, B + 64)
+        g, _, _ = apply_update(g, jnp.asarray(ins_s), jnp.asarray(ins_d),
+                               None,
+                               jnp.asarray(src[di]), jnp.asarray(dst[di]))
+        g = update_slab_pointers(g)
+    churned = pool_stats(g)
+    g2, rep = compact(g)
+    compacted = pool_stats(g2)
+    row("memory_churned_pool_MiB",
+        churned["capacity_slabs"] * SLAB_WIDTH * 4 / 2 ** 20,
+        f"tombstone_ratio={churned['tombstone_ratio']:.3f};"
+        f"occupancy={churned['occupancy']:.3f};"
+        f"mean_chain={churned['mean_chain']:.2f}")
+    row("memory_compacted_pool_MiB",
+        compacted["capacity_slabs"] * SLAB_WIDTH * 4 / 2 ** 20,
+        f"tombstone_ratio={compacted['tombstone_ratio']:.3f};"
+        f"occupancy={compacted['occupancy']:.3f};"
+        f"mean_chain={compacted['mean_chain']:.2f};"
+        f"capacity={rep.old_capacity}->{rep.new_capacity}")

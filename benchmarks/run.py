@@ -20,10 +20,10 @@ def main() -> None:
     args = ap.parse_args()
     scale = "full" if args.full else "quick"
 
-    from . import (dynamic_speedup, memory_table, pagerank_bench,
-                   serve_bench, sharded_bench, sweep_bench, traversal,
-                   triangle_bench, update_bench, update_throughput,
-                   wcc_bench)
+    from . import (churn_bench, dynamic_speedup, memory_table,
+                   pagerank_bench, serve_bench, sharded_bench, sweep_bench,
+                   traversal, triangle_bench, update_bench,
+                   update_throughput, wcc_bench)
     suites = {
         "memory_table": memory_table,        # Table 5
         "update_throughput": update_throughput,  # Figs 3–5
@@ -36,6 +36,7 @@ def main() -> None:
         "serve": serve_bench,                # legacy loop vs repro.stream
         "update": update_bench,              # Fig 5 old-path vs update engine
         "sharded": sharded_bench,            # 8-device sharded stream plane
+        "churn": churn_bench,                # maintenance plane under churn
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

@@ -6,7 +6,8 @@ allocation, iterator set, warp-level APIs as lane-vector ops) lives here.
 from .hashing import (EMPTY_KEY, INVALID_LANE, INVALID_SLAB, INVALID_VERTEX,
                       SLAB_WIDTH, TOMBSTONE_KEY, bucket_hash, is_valid_vertex)
 from .slab_graph import (SlabGraph, empty, ensure_capacity, from_edges_host,
-                         next_pow2, plan_buckets, update_slab_pointers)
+                         next_pow2, plan_buckets, pool_stats,
+                         update_slab_pointers)
 from .batch import (apply_update, delete_edges, insert_edges, query_edges,
                     probe, update_views)
 from .worklist import (CSR, EdgeFrontier, PoolView, csr_snapshot,
@@ -21,7 +22,7 @@ __all__ = [
     "EMPTY_KEY", "INVALID_LANE", "INVALID_SLAB", "INVALID_VERTEX",
     "SLAB_WIDTH", "TOMBSTONE_KEY", "bucket_hash", "is_valid_vertex",
     "SlabGraph", "empty", "ensure_capacity", "from_edges_host",
-    "next_pow2", "plan_buckets", "update_slab_pointers",
+    "next_pow2", "plan_buckets", "pool_stats", "update_slab_pointers",
     "apply_update", "delete_edges", "insert_edges", "query_edges", "probe",
     "update_views",
     "CSR", "EdgeFrontier", "PoolView", "csr_snapshot", "expand_vertices",

@@ -18,10 +18,19 @@ translation keeps the exact same object model but as a struct-of-arrays pytree:
   * UpdateIterator state per bucket (``upd_flag`` / ``upd_slab`` / ``upd_lane``)
     plus ``epoch_next_free`` — every slab allocated after the last
     ``update_slab_pointers()`` is wholly "new"
-  * a functional bump allocator (``next_free``)
+  * a functional bump allocator (``next_free``) fronted by a free-slab
+    recycling list (``free_list`` / ``free_top``) — the SlabAlloc reuse
+    analogue: slabs reclaimed by the maintenance plane
+    (``kernels/slab_compact``) are handed back to insert placement before
+    the bump pointer advances
+  * ``slab_new`` — per-slab "allocated this epoch" flag consumed by the
+    UpdateIterator lane mask (recycled slabs sit below the old
+    ``epoch_next_free`` watermark, so a bare row-id compare can no longer
+    tell new slabs from old ones)
 
 Everything is fixed-capacity inside jit; ``ensure_capacity`` (host side) grows
-the pool between steps, mirroring the role of SlabAlloc's pre-allocated pool.
+the pool between steps, mirroring the role of SlabAlloc's pre-allocated pool;
+``kernels/slab_compact`` compacts and shrinks it back down under churn.
 """
 from __future__ import annotations
 
@@ -42,6 +51,7 @@ from .hashing import (EMPTY_KEY, INVALID_SLAB, SLAB_WIDTH, TOMBSTONE_KEY)
                       "tail_slab", "tail_fill",
                       "upd_flag", "upd_slab", "upd_lane",
                       "next_free", "epoch_next_free",
+                      "free_list", "free_top", "slab_new",
                       "degree", "n_edges"],
          meta_fields=["n_vertices", "n_buckets", "weighted"])
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +75,10 @@ class SlabGraph:
     # --- allocator -----------------------------------------------------------
     next_free: jnp.ndarray       # () int32 — bump pointer into the pool
     epoch_next_free: jnp.ndarray # () int32 — next_free at last update_slab_pointers
+    # --- free-slab recycling (SlabAlloc's reuse list, fed by maintenance) -----
+    free_list: jnp.ndarray       # (S,) int32 — reclaimed slab ids in [0, free_top)
+    free_top: jnp.ndarray        # () int32 — live length of free_list
+    slab_new: jnp.ndarray        # (S,) bool — slab was (re)allocated this epoch
     # --- bookkeeping ----------------------------------------------------------
     degree: jnp.ndarray          # (V,) int32 — current stored-adjacency degree
     n_edges: jnp.ndarray         # () int32
@@ -138,6 +152,9 @@ def empty(n_vertices: int, bucket_count: np.ndarray, capacity_slabs: int, *,
         upd_lane=jnp.zeros((n_buckets,), dtype=jnp.int32),
         next_free=jnp.asarray(n_buckets, dtype=jnp.int32),
         epoch_next_free=jnp.asarray(n_buckets, dtype=jnp.int32),
+        free_list=jnp.full((capacity_slabs,), INVALID_SLAB, dtype=jnp.int32),
+        free_top=jnp.asarray(0, dtype=jnp.int32),
+        slab_new=jnp.zeros((capacity_slabs,), dtype=bool),
         degree=jnp.zeros((n_vertices,), dtype=jnp.int32),
         n_edges=jnp.asarray(0, dtype=jnp.int32),
         n_vertices=n_vertices,
@@ -154,16 +171,19 @@ def next_pow2(n: int, lo: int = 64) -> int:
 def ensure_capacity(g: SlabGraph, extra_slabs: int) -> SlabGraph:
     """Host-side pool growth (outside jit) — the SlabAlloc re-pool analogue.
 
-    Guarantees at least ``extra_slabs`` free slabs.  Grown capacities are
-    quantized to powers of two (and grow by ≥ 1.5× so the amortised cost
-    matches GPU pool allocators): a stream of update batches walks a small
-    ladder of pool shapes instead of retriggering jit specialization of
-    every entry point on each growth step.
+    Guarantees at least ``extra_slabs`` allocatable slabs.  Recycled slabs
+    on the free list count toward that budget (insert placement drains the
+    free list before bumping ``next_free``), so a churn-maintained pool can
+    absorb batches without growing at all.  Grown capacities are quantized
+    to powers of two (and grow by ≥ 1.5× so the amortised cost matches GPU
+    pool allocators): a stream of update batches walks a small ladder of
+    pool shapes instead of retriggering jit specialization of every entry
+    point on each growth step.
     """
-    free = g.capacity_slabs - int(g.next_free)
+    free = g.capacity_slabs - int(g.next_free) + int(g.free_top)
     if free >= extra_slabs:
         return g
-    target = max(int(g.next_free) + extra_slabs,
+    target = max(int(g.next_free) - int(g.free_top) + extra_slabs,
                  g.capacity_slabs + g.capacity_slabs // 2)
     grow = next_pow2(target) - g.capacity_slabs
 
@@ -177,6 +197,8 @@ def ensure_capacity(g: SlabGraph, extra_slabs: int) -> SlabGraph:
         weights=(pad_rows(g.weights, 0.0, jnp.float32) if g.weighted else None),
         next_slab=pad_rows(g.next_slab, INVALID_SLAB, jnp.int32),
         slab_vertex=pad_rows(g.slab_vertex, -1, jnp.int32),
+        free_list=pad_rows(g.free_list, INVALID_SLAB, jnp.int32),
+        slab_new=pad_rows(g.slab_new, False, bool),
     )
 
 
@@ -195,6 +217,7 @@ def update_slab_pointers(g: SlabGraph) -> SlabGraph:
         upd_slab=g.tail_slab,
         upd_lane=g.tail_fill,
         epoch_next_free=g.next_free,
+        slab_new=jnp.zeros_like(g.slab_new),
     )
 
 
@@ -245,7 +268,9 @@ def from_edges_host(n_vertices: int, src: np.ndarray, dst: np.ndarray,
     extra_off = np.zeros(n_buckets + 1, dtype=np.int64)
     np.cumsum(extra, out=extra_off[1:])
     total_slabs = n_buckets + int(extra_off[-1])
-    capacity = total_slabs + max(slack_slabs, total_slabs // 2 + 64)
+    # pow2-quantized like ensure_capacity: a cold-built store and a grown
+    # store land on the SAME jit-shape ladder for the same size class.
+    capacity = next_pow2(total_slabs + max(slack_slabs, total_slabs // 2 + 64))
 
     keys = np.full((capacity, SLAB_WIDTH), np.uint32(EMPTY_KEY), dtype=np.uint32)
     wpool = (np.zeros((capacity, SLAB_WIDTH), dtype=np.float32)
@@ -311,6 +336,9 @@ def from_edges_host(n_vertices: int, src: np.ndarray, dst: np.ndarray,
         upd_lane=jnp.asarray(tail_fill),
         next_free=jnp.asarray(total_slabs, dtype=jnp.int32),
         epoch_next_free=jnp.asarray(total_slabs, dtype=jnp.int32),
+        free_list=jnp.full((capacity,), -1, dtype=jnp.int32),
+        free_top=jnp.asarray(0, dtype=jnp.int32),
+        slab_new=jnp.zeros((capacity,), dtype=bool),
         degree=jnp.asarray(np.bincount(src.astype(np.int64),
                                        minlength=n_vertices).astype(np.int32)),
         n_edges=jnp.asarray(len(src), dtype=jnp.int32),
@@ -318,3 +346,61 @@ def from_edges_host(n_vertices: int, src: np.ndarray, dst: np.ndarray,
         n_buckets=n_buckets,
         weighted=w is not None,
     )
+
+
+# ============================================================================
+# Pool health (host side) — the maintenance plane's trigger inputs
+# ============================================================================
+
+def pool_stats(g: SlabGraph) -> dict:
+    """Host-side pool-health snapshot driving ``MaintenancePolicy`` triggers.
+
+    Lane accounting distinguishes *live* lanes (real neighbor ids) from
+    *tombstone* lanes (deleted, still occupying a lane until compaction);
+    ``dead_slabs`` counts allocated non-head slabs with zero live lanes —
+    exactly what ``reclaim_free_slabs`` can hand back to the free list.
+    Chain lengths are slabs per bucket (head included), the multiplier every
+    chain-walk probe pays.
+    """
+    keys = np.asarray(g.keys)
+    sv = np.asarray(g.slab_vertex)
+    nxt = np.asarray(g.next_slab)
+    S = g.capacity_slabs
+    alloc = sv >= 0
+    live_lane = alloc[:, None] & (keys < np.uint32(TOMBSTONE_KEY))
+    tomb_lane = alloc[:, None] & (keys == np.uint32(TOMBSTONE_KEY))
+    live_per_slab = live_lane.sum(axis=1)
+    live_lanes = int(live_per_slab.sum())
+    tombstone_lanes = int(tomb_lane.sum())
+    allocated_slabs = int(alloc.sum())
+    is_head = np.arange(S) < g.n_buckets
+    dead_slabs = int((alloc & ~is_head & (live_per_slab == 0)).sum())
+
+    # chain lengths: vectorised walk from every bucket head (head row = b)
+    lengths = np.zeros(g.n_buckets, dtype=np.int64)
+    cur = np.arange(g.n_buckets, dtype=np.int64)
+    active = np.ones(g.n_buckets, dtype=bool)
+    while active.any():
+        lengths[active] += 1
+        nxt_v = nxt[cur[active]]
+        cur[active] = np.maximum(nxt_v, 0)
+        active[active] = nxt_v >= 0
+
+    occupied = live_lanes + tombstone_lanes
+    return {
+        "capacity_slabs": S,
+        "next_free": int(g.next_free),
+        "free_top": int(g.free_top),
+        "free_slabs": S - int(g.next_free) + int(g.free_top),
+        "allocated_slabs": allocated_slabs,
+        "dead_slabs": dead_slabs,
+        "live_lanes": live_lanes,
+        "tombstone_lanes": tombstone_lanes,
+        "tombstone_ratio": tombstone_lanes / max(1, occupied),
+        "occupancy": live_lanes / max(1, allocated_slabs * SLAB_WIDTH),
+        "max_chain": int(lengths.max()) if len(lengths) else 0,
+        "mean_chain": float(lengths.mean()) if len(lengths) else 0.0,
+        "pool_bytes": int(g.keys.size * 4 +
+                          (g.weights.size * 4 if g.weighted else 0)),
+        "n_edges": int(g.n_edges),
+    }

@@ -47,16 +47,19 @@ def pool_edges(g: SlabGraph) -> PoolView:
 def updated_lane_mask(g: SlabGraph) -> jnp.ndarray:
     """(S,128) bool — lanes holding edges inserted in the current epoch.
 
-    Rule 1: slabs allocated after the epoch watermark are wholly new.
+    Rule 1: slabs allocated this epoch (``slab_new`` — set by insert
+            placement, cleared by ``update_slab_pointers``) are wholly new.
+            A row-id compare against ``epoch_next_free`` is no longer
+            equivalent: the free-slab recycling list hands out reclaimed
+            slabs *below* the bump-allocator watermark.
     Rule 2: a flagged bucket's ``upd_slab`` is new from ``upd_lane`` onward
             (Fig. 2: the old tail slab, partially old).
     Everything later in a flagged chain is covered by rule 1 because inserts
     append at the tail.
     """
     S = g.capacity_slabs
-    row = jnp.arange(S, dtype=jnp.int32)
-    start = jnp.where(row >= g.epoch_next_free, 0, SLAB_WIDTH)  # (S,)
-    flagged = g.upd_flag & (g.upd_slab < g.epoch_next_free)
+    start = jnp.where(g.slab_new, 0, SLAB_WIDTH)                # (S,)
+    flagged = g.upd_flag & ~g.slab_new[g.upd_slab]
     tgt = jnp.where(flagged, g.upd_slab, S)  # park non-flagged OOB
     start = start.at[tgt].min(jnp.where(flagged, g.upd_lane, SLAB_WIDTH),
                               mode="drop")

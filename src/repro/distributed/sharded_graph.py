@@ -90,6 +90,8 @@ def _grow_to(g: SG.SlabGraph, capacity: int) -> SG.SlabGraph:
                  if g.weighted else None),
         next_slab=pad_rows(g.next_slab, INVALID_SLAB, jnp.int32),
         slab_vertex=pad_rows(g.slab_vertex, -1, jnp.int32),
+        free_list=pad_rows(g.free_list, INVALID_SLAB, jnp.int32),
+        slab_new=pad_rows(g.slab_new, False, bool),
     )
 
 
@@ -160,7 +162,8 @@ def ensure_capacity_sharded(sg: ShardedSlabGraph,
     """
     g = sg.graphs
     cap = g.keys.shape[1]
-    high = int(jnp.max(g.next_free))
+    # worst-case shard: least bump headroom after counting its recyclables
+    high = int(jnp.max(g.next_free - g.free_top))
     if cap - high >= extra_slabs:
         return sg
     target = max(high + extra_slabs, cap + cap // 2)
@@ -177,6 +180,8 @@ def ensure_capacity_sharded(sg: ShardedSlabGraph,
                  if g.weighted else None),
         next_slab=pad_rows(g.next_slab, INVALID_SLAB, jnp.int32),
         slab_vertex=pad_rows(g.slab_vertex, -1, jnp.int32),
+        free_list=pad_rows(g.free_list, INVALID_SLAB, jnp.int32),
+        slab_new=pad_rows(g.slab_new, False, bool),
     )
     return dataclasses.replace(sg, graphs=graphs)
 

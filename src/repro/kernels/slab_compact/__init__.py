@@ -1,0 +1,15 @@
+"""Slab-compaction engine — the memory-maintenance kernel family.
+
+``ops.compact`` / ``ops.reclaim_free_slabs`` (and their shard-stacked
+variants) keep churned pools dense: tombstone-riddled slab lists re-pack
+into the cold ``from_edges_host`` layout, wholly-dead slabs recycle
+through the free list, and pool capacity walks back DOWN the pow2
+jit-shape ladder.  See DESIGN.md §8.
+"""
+from .ops import (IMPLS, CompactionReport, chain_rank_pallas, compact,
+                  compact_shards, reclaim_free_slabs, reclaim_shards,
+                  slab_live_pallas)
+
+__all__ = ["IMPLS", "CompactionReport", "compact", "compact_shards",
+           "reclaim_free_slabs", "reclaim_shards", "slab_live_pallas",
+           "chain_rank_pallas"]

@@ -1,0 +1,171 @@
+"""Pallas kernels for the slab-compaction engine: tiled live-count + tiled
+chain-rank.
+
+Compaction's pool-wide work is two passes, and both get the same treatment
+the sweep/update planes already have:
+
+``slab_live_pallas`` — the survivor census: per (rows_per_block, 128) VMEM
+tile of the key pool, mask live lanes (sentinel-based, like the delete
+guard: EMPTY/TOMBSTONE/INVALID and unallocated rows are dead) and emit the
+per-slab live count plus the per-lane exclusive prefix rank — the TPU
+rendering of the GPU's ballot→popc compaction census.  One streamed read
+of the pool, no gathers.
+
+``chain_rank_pallas`` — the chain accumulation: each grid step owns a tile
+of ``buckets_per_tile`` bucket chains and walks them in lockstep (gathered
+``next_slab`` hops, exactly the probe kernel's access pattern), assigning
+every visited slab its owning bucket, chain position, and *base rank* (the
+number of surviving lanes in earlier chain slabs).  Termination is **per
+tile** — a tile of short chains exits while a long-chain tile keeps
+walking, which the whole-pool ``lax.while_loop`` of the oracle cannot do.
+The per-slab outputs are scattered through ``input_output_aliases`` (the
+commit kernel's idiom); distinct tiles own disjoint chains, so the
+scattered rows never collide.
+
+The re-pack itself (scatter of surviving keys/weights into the fresh dense
+pool) stays on the vectorized XLA scatter, which is already in-place under
+donation — the same decision the update engine made for its commit step.
+
+Both kernels are validated in ``interpret=True`` mode against the
+``ref.py`` oracle (tests/test_maintenance.py); TPU is the compile target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...core.hashing import INVALID_SLAB, TOMBSTONE_KEY
+
+
+# ----------------------------------------------------------------------------
+# tiled live-lane census
+# ----------------------------------------------------------------------------
+
+def _live_kernel(keys_ref, owner_ref, cnt_ref, rank_ref):
+    keys = keys_ref[...]                              # (R, W) uint32
+    owner = owner_ref[...]                            # (R, 1) int32
+    # rebuilt as an in-trace literal: closing over the module-level
+    # jnp scalar would be a captured device constant, which pallas rejects
+    tombstone = jnp.uint32(int(TOMBSTONE_KEY))
+    live = (keys < tombstone) & (owner >= 0)
+    li = live.astype(jnp.int32)
+    rank_ref[...] = jnp.cumsum(li, axis=1) - li       # exclusive prefix
+    cnt_ref[...] = li.sum(axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_block", "interpret"))
+def slab_live_pallas(keys: jnp.ndarray, slab_vertex: jnp.ndarray, *,
+                     rows_per_block: int = 256, interpret: bool = False):
+    """(S,W) keys + (S,) owners → ((S,) live counts, (S,W) lane prefix ranks).
+
+    A lane is live iff its row is allocated and its key is below the
+    sentinel range (``key < TOMBSTONE_KEY`` — the sharded plane stores
+    global dst ids, so no ``< n_vertices`` bound applies).
+    """
+    S, W = keys.shape
+    R = min(rows_per_block, S)
+    pad = (-S) % R
+    if pad:
+        keys = jnp.pad(keys, ((0, pad), (0, 0)),
+                       constant_values=jnp.uint32(0xFFFFFFFE))
+        slab_vertex = jnp.pad(slab_vertex, (0, pad), constant_values=-1)
+    Sp = keys.shape[0]
+
+    cnt, rank = pl.pallas_call(
+        _live_kernel,
+        grid=(Sp // R,),
+        in_specs=[pl.BlockSpec((R, W), lambda i: (i, 0)),
+                  pl.BlockSpec((R, 1), lambda i: (i, 0))],
+        out_specs=(pl.BlockSpec((R, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((R, W), lambda i: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((Sp, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((Sp, W), jnp.int32)),
+        interpret=interpret,
+    )(keys, slab_vertex[:, None])
+    return cnt[:S, 0], rank[:S]
+
+
+# ----------------------------------------------------------------------------
+# tiled chain-rank walk
+# ----------------------------------------------------------------------------
+
+def _chain_kernel(head_ref, lcnt_ref, next_ref, base_in, bkt_in, pos_in,
+                  cnt_ref, base_out, bkt_out, pos_out):
+    Q = head_ref.shape[0]
+    end = jnp.int32(int(INVALID_SLAB))        # INVALID_SLAB, as a literal
+    bid = head_ref[...]                       # (Q, 1) bucket ids; -1 = pad
+    cur0 = bid
+    run0 = jnp.zeros((Q, 1), jnp.int32)
+    pos0 = jnp.zeros((Q, 1), jnp.int32)
+
+    def cond(state):
+        cur, *_ = state
+        return jnp.any(cur != end)            # per-tile termination
+
+    def body(state):
+        cur, run, pos = state
+
+        def write(q, _):
+            c = cur[q, 0]
+
+            @pl.when(c >= 0)
+            def _():
+                base_out[c] = run[q, 0]
+                bkt_out[c] = bid[q, 0]
+                pos_out[c] = pos[q, 0]
+
+            return 0
+
+        jax.lax.fori_loop(0, Q, write, 0)
+        active = cur != end
+        safe = jnp.maximum(cur, 0)
+        run = run + jnp.where(active, lcnt_ref[safe], 0)
+        pos = pos + active.astype(jnp.int32)
+        cur = jnp.where(active, next_ref[safe], end)
+        return cur, run, pos
+
+    _, run, _ = jax.lax.while_loop(cond, body, (cur0, run0, pos0))
+    cnt_ref[...] = run
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_buckets", "buckets_per_tile",
+                                    "interpret"))
+def chain_rank_pallas(next_slab: jnp.ndarray, live_count: jnp.ndarray, *,
+                      n_buckets: int, buckets_per_tile: int = 256,
+                      interpret: bool = False):
+    """Chain walk from every bucket head (row b = bucket b).
+
+    Returns ``(base_rank, bucket_of, chain_pos, counts)`` — per-slab
+    (S,)-arrays matching ``ref.chain_order`` bit-for-bit, plus the
+    per-bucket (n_buckets,) survivor totals.  Unreachable rows keep
+    ``bucket_of == chain_pos == -1``.
+    """
+    S = next_slab.shape[0]
+    Q = max(8, min(buckets_per_tile, n_buckets))
+    pad = (-n_buckets) % Q
+    heads = jnp.arange(n_buckets, dtype=jnp.int32)
+    if pad:
+        heads = jnp.pad(heads, (0, pad), constant_values=INVALID_SLAB)
+    nbp = heads.shape[0]
+
+    col = pl.BlockSpec((Q, 1), lambda i: (i, 0))
+    any_spec = pl.BlockSpec(memory_space=pl.ANY)
+    cnt, base_rank, bucket_of, chain_pos = pl.pallas_call(
+        _chain_kernel,
+        grid=(nbp // Q,),
+        in_specs=[col, any_spec, any_spec, any_spec, any_spec, any_spec],
+        out_specs=(col, any_spec, any_spec, any_spec),
+        out_shape=(jax.ShapeDtypeStruct((nbp, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((S,), jnp.int32),
+                   jax.ShapeDtypeStruct((S,), jnp.int32),
+                   jax.ShapeDtypeStruct((S,), jnp.int32)),
+        input_output_aliases={3: 1, 4: 2, 5: 3},
+        interpret=interpret,
+    )(heads[:, None], live_count.astype(jnp.int32), next_slab,
+      jnp.zeros((S,), jnp.int32), jnp.full((S,), -1, jnp.int32),
+      jnp.full((S,), -1, jnp.int32))
+    return base_rank, bucket_of, chain_pos, cnt[:n_buckets, 0]

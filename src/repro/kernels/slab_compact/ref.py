@@ -1,0 +1,270 @@
+"""Whole-pool jnp oracle for the slab-compaction engine.
+
+Compaction rebuilds a tombstone-riddled ``SlabGraph`` into the dense cold
+layout of ``from_edges_host``: every bucket's surviving keys re-packed into
+its head slab (pool row ``b``) plus freshly numbered overflow slabs
+(``n_buckets`` upward), chains relinked, tails/degrees/``n_edges`` recounted,
+and the allocator reset (``free_top = 0`` — the compacted pool's free slabs
+are exactly the suffix above ``next_free``).  The canonical lane order
+within a bucket is **chain-walk order** — the order a probe encounters
+survivors — so compaction never reorders what a traversal would see.
+
+This module is the bit-exact reference (``impl="oracle"``): per-lane ranks
+come from one whole-pool lexsort of every ``(bucket, chain_pos, lane)``
+triple — O(S·W log S·W) data movement, the "rebuild it like a bulk load"
+baseline.  The engine (``ops.py`` / ``kernel.py``) reproduces the exact
+same pool leaf-for-leaf from per-slab live counts and chain-prefix ranks
+without ever materialising or sorting the lane triples.
+
+Shared helpers (the deterministic parts both paths must agree on):
+
+* ``live_lane_mask``  — sentinel-based survivor mask (the sharded plane
+  stores GLOBAL dst keys, so validity cannot be ``key < n_vertices``);
+* ``chain_order``     — the lockstep chain walk assigning every reachable
+  slab its bucket, chain position, and live-lane base rank;
+* ``rebuild_links``   — the fresh head/overflow link & tail layout implied
+  by per-bucket survivor counts (pure arithmetic on counts);
+* ``perm_of``         — the old→new slab permutation handed to stale-handle
+  invalidation (heads persist in place; moved slabs map to the row their
+  first surviving lane landed in; dead slabs map to ``INVALID_SLAB``).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...core.hashing import (EMPTY_KEY, INVALID_SLAB, SLAB_WIDTH,
+                             TOMBSTONE_KEY)
+from ...core.slab_graph import SlabGraph
+
+
+# ----------------------------------------------------------------------------
+# shared building blocks (oracle here, engine in ops.py)
+# ----------------------------------------------------------------------------
+
+def live_lane_mask(keys: jnp.ndarray, slab_vertex: jnp.ndarray) -> jnp.ndarray:
+    """(S,W) bool — allocated rows' lanes holding a real neighbor key.
+
+    Sentinel-based: every key below TOMBSTONE_KEY (the smallest sentinel)
+    survives, so shard-local pools holding global dst ids compact correctly.
+    """
+    return (slab_vertex >= 0)[:, None] & (keys < TOMBSTONE_KEY)
+
+
+def chain_order(next_slab: jnp.ndarray, live_count: jnp.ndarray,
+                n_buckets: int) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                         jnp.ndarray, jnp.ndarray]:
+    """Lockstep chain walk over every bucket (head slab of bucket b = row b).
+
+    Returns per-slab ``(base_rank, bucket_of, chain_pos)`` — the number of
+    surviving lanes in earlier chain slabs, the owning bucket (-1 for
+    unreachable rows), the slab's position along its chain — plus the
+    per-bucket survivor ``counts``.  Whole-pool termination (every bucket
+    waits on the longest chain); the Pallas engine kernel terminates per
+    bucket tile instead.
+    """
+    S = next_slab.shape[0]
+    heads = jnp.arange(n_buckets, dtype=jnp.int32)
+    state = (heads,
+             jnp.zeros((n_buckets,), jnp.int32),
+             jnp.zeros((n_buckets,), jnp.int32),
+             jnp.zeros((S,), jnp.int32),
+             jnp.full((S,), -1, jnp.int32),
+             jnp.full((S,), -1, jnp.int32))
+
+    def cond(st):
+        return jnp.any(st[0] != INVALID_SLAB)
+
+    def body(st):
+        cur, run, pos, base_rank, bucket_of, chain_pos = st
+        active = cur != INVALID_SLAB
+        tgt = jnp.where(active, cur, S)
+        base_rank = base_rank.at[tgt].set(run, mode="drop")
+        bucket_of = bucket_of.at[tgt].set(heads, mode="drop")
+        chain_pos = chain_pos.at[tgt].set(pos, mode="drop")
+        safe = jnp.maximum(cur, 0)
+        run = run + jnp.where(active, live_count[safe], 0)
+        pos = pos + active.astype(jnp.int32)
+        cur = jnp.where(active, next_slab[safe], INVALID_SLAB)
+        return cur, run, pos, base_rank, bucket_of, chain_pos
+
+    _, counts, _, base_rank, bucket_of, chain_pos = jax.lax.while_loop(
+        cond, body, state)
+    return base_rank, bucket_of, chain_pos, counts
+
+
+def rebuild_links(counts: jnp.ndarray, *, n_buckets: int,
+                  bucket_vertex: jnp.ndarray, capacity: int):
+    """Fresh dense layout implied by per-bucket survivor counts.
+
+    Head slab of bucket b stays row b; bucket b's overflow slabs are the
+    contiguous rows ``n_buckets + extra_off[b] ..`` (exactly the
+    ``from_edges_host`` cold layout).  Returns
+    ``(extra_off, total_slabs, next_slab, slab_vertex, tail_slab,
+    tail_fill)`` — everything but the lane data.
+    """
+    W = SLAB_WIDTH
+    heads = jnp.arange(n_buckets, dtype=jnp.int32)
+    extra = jnp.maximum(-(-counts // W) - 1, 0)
+    extra_off = jnp.cumsum(extra) - extra               # exclusive scan
+    total_extra = jnp.sum(extra)
+
+    nxt = jnp.full((capacity,), INVALID_SLAB, jnp.int32)
+    sv = jnp.full((capacity,), -1, jnp.int32)
+    sv = sv.at[:n_buckets].set(bucket_vertex)
+    # head -> its first overflow slab
+    nxt = nxt.at[jnp.where(extra > 0, heads, capacity)].set(
+        (n_buckets + extra_off).astype(jnp.int32), mode="drop")
+    # overflow chains: ordinal k belongs to the bucket whose
+    # [extra_off[b], extra_off[b] + extra[b]) range contains it; consecutive
+    # ordinals of one bucket are consecutive rows, so links are id + 1.
+    kk = jnp.arange(max(capacity - n_buckets, 1), dtype=jnp.int32)
+    alive = kk < total_extra
+    owner = jnp.clip(jnp.searchsorted(extra_off + extra, kk, side="right"),
+                     0, n_buckets - 1).astype(jnp.int32)
+    ids = n_buckets + kk
+    is_last = kk == (extra_off[owner] + extra[owner] - 1)
+    w_at = jnp.where(alive, ids, capacity)
+    nxt = nxt.at[w_at].set(jnp.where(is_last, INVALID_SLAB, ids + 1),
+                           mode="drop")
+    sv = sv.at[w_at].set(bucket_vertex[owner], mode="drop")
+
+    tail_slab = jnp.where(extra > 0, n_buckets + extra_off + extra - 1,
+                          heads).astype(jnp.int32)
+    tail_fill = (counts - extra * W).astype(jnp.int32)
+    total_slabs = (n_buckets + total_extra).astype(jnp.int32)
+    return extra_off, total_slabs, nxt, sv, tail_slab, tail_fill
+
+
+def slab_of_rank(rank: jnp.ndarray, bucket: jnp.ndarray,
+                 extra_off: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
+    """New pool row of a bucket's ``rank``-th survivor (head first, then the
+    bucket's dense overflow run)."""
+    b = jnp.clip(bucket, 0, n_buckets - 1)
+    return jnp.where(rank < SLAB_WIDTH, b,
+                     n_buckets + extra_off[b] + rank // SLAB_WIDTH - 1)
+
+
+def perm_of(base_rank, bucket_of, live_count, extra_off, *,
+            n_buckets: int, capacity_old: int) -> jnp.ndarray:
+    """(S_old,) old→new slab permutation.
+
+    Head slabs persist in place (row b stays bucket b's head).  A non-head
+    slab maps to the new row its first surviving lane was packed into;
+    slabs with no survivors — and unreachable rows — map to INVALID_SLAB:
+    any retained handle to them is dead and must be re-resolved.
+    """
+    rows = jnp.arange(capacity_old, dtype=jnp.int32)
+    is_head = rows < n_buckets
+    moved = slab_of_rank(base_rank, bucket_of, extra_off, n_buckets)
+    alivep = (bucket_of >= 0) & (live_count > 0)
+    return jnp.where(is_head, rows,
+                     jnp.where(alivep, moved.astype(jnp.int32),
+                               INVALID_SLAB)).astype(jnp.int32)
+
+
+def assemble(g: SlabGraph, *, capacity: int, counts, new_keys, new_weights,
+             nxt, sv, tail_slab, tail_fill, total_slabs,
+             degree) -> SlabGraph:
+    """Wrap the rebuilt pools into a closed-epoch SlabGraph (allocator
+    reset: dense prefix in use, empty free list, no new-this-epoch slabs)."""
+    nb = g.n_buckets
+    return SlabGraph(
+        keys=new_keys,
+        weights=new_weights,
+        next_slab=nxt,
+        slab_vertex=sv,
+        bucket_offset=g.bucket_offset,
+        bucket_count=g.bucket_count,
+        bucket_vertex=g.bucket_vertex,
+        tail_slab=tail_slab,
+        tail_fill=tail_fill,
+        upd_flag=jnp.zeros((nb,), bool),
+        upd_slab=tail_slab,
+        upd_lane=tail_fill,
+        next_free=total_slabs,
+        epoch_next_free=total_slabs,
+        free_list=jnp.full((capacity,), INVALID_SLAB, jnp.int32),
+        free_top=jnp.asarray(0, jnp.int32),
+        slab_new=jnp.zeros((capacity,), bool),
+        degree=degree,
+        n_edges=jnp.sum(counts).astype(jnp.int32),
+        n_vertices=g.n_vertices,
+        n_buckets=nb,
+        weighted=g.weighted,
+    )
+
+
+def recount_degrees(g: SlabGraph, live_count: jnp.ndarray) -> jnp.ndarray:
+    """(V,) stored-adjacency degrees recounted from surviving lanes."""
+    seg = jnp.where(g.slab_vertex >= 0, g.slab_vertex, g.n_vertices)
+    return jax.ops.segment_sum(live_count, seg,
+                               num_segments=g.n_vertices + 1)[:g.n_vertices]
+
+
+# ----------------------------------------------------------------------------
+# the oracle: sort-based whole-pool rebuild
+# ----------------------------------------------------------------------------
+
+def compact_ref(g: SlabGraph, *, capacity_slabs: int
+                ) -> Tuple[SlabGraph, jnp.ndarray]:
+    """Bit-exact reference compaction: one whole-pool lexsort.
+
+    Every lane triple ``(bucket, chain_pos, lane)`` is materialised and
+    sorted (dead lanes parked at the end), per-bucket ranks fall out of the
+    sorted runs, and survivors scatter into the fresh dense pool — the
+    naive "extract and bulk-rebuild" path the engine must reproduce
+    leaf-for-leaf.  Returns ``(compacted graph, old→new slab perm)``.
+    """
+    W = SLAB_WIDTH
+    S = g.capacity_slabs
+    nb = g.n_buckets
+
+    live = live_lane_mask(g.keys, g.slab_vertex)
+    live_cnt = jnp.sum(live.astype(jnp.int32), axis=1)
+    base_rank, bucket_of, chain_pos, counts = chain_order(
+        g.next_slab, live_cnt, nb)
+    extra_off, total_slabs, nxt, sv, tail_slab, tail_fill = rebuild_links(
+        counts, n_buckets=nb, bucket_vertex=g.bucket_vertex,
+        capacity=capacity_slabs)
+
+    # --- whole-pool lane ordering: lexsort (bucket, chain_pos, lane) --------
+    flat_live = live.reshape(-1)
+    big = jnp.int32(jnp.iinfo(jnp.int32).max)
+    b_key = jnp.where(flat_live,
+                      jnp.repeat(bucket_of, W), big)
+    p_key = jnp.where(flat_live, jnp.repeat(chain_pos, W), big)
+    l_key = jnp.tile(jnp.arange(W, dtype=jnp.int32), S)
+    order = jnp.lexsort((l_key, p_key, b_key))
+    b_s = b_key[order]
+
+    # rank within the sorted bucket runs (the from_edges_host rank idiom)
+    n = S * W
+    idx = jnp.arange(n, dtype=jnp.int32)
+    run_start = jnp.ones((n,), bool).at[1:].set(b_s[1:] != b_s[:-1])
+    base = jax.lax.cummax(jnp.where(run_start, idx, -1))
+    rank = idx - base
+
+    srv = b_s < big                                      # survivors only
+    dst_slab = jnp.where(srv, slab_of_rank(rank, b_s, extra_off, nb),
+                         capacity_slabs)
+    dst_lane = jnp.where(srv, rank % W, 0)
+
+    new_keys = jnp.full((capacity_slabs, W), EMPTY_KEY, jnp.uint32) \
+        .at[dst_slab, dst_lane].set(g.keys.reshape(-1)[order], mode="drop")
+    new_weights = None
+    if g.weighted:
+        new_weights = jnp.zeros((capacity_slabs, W), jnp.float32) \
+            .at[dst_slab, dst_lane].set(g.weights.reshape(-1)[order],
+                                        mode="drop")
+
+    g2 = assemble(g, capacity=capacity_slabs, counts=counts,
+                  new_keys=new_keys, new_weights=new_weights, nxt=nxt, sv=sv,
+                  tail_slab=tail_slab, tail_fill=tail_fill,
+                  total_slabs=total_slabs,
+                  degree=recount_degrees(g, live_cnt))
+    perm = perm_of(base_rank, bucket_of, live_cnt, extra_off,
+                   n_buckets=nb, capacity_old=S)
+    return g2, perm

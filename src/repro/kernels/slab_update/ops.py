@@ -188,13 +188,25 @@ def _insert_body(g, src, dst, w=None, *, impl="auto", interpret=None,
     overflow_r = jnp.maximum(count_r - room_r, 0)
     new_slabs_r = (overflow_r + W - 1) // W
     cum_r = jnp.cumsum(new_slabs_r)
-    slab_base_r = g.next_free + cum_r - new_slabs_r
     total_new = cum_r[-1]
+
+    # --- allocation: drain the free-slab recycling list, then bump ----------
+    # Ordinal o of this call's o-th new slab resolves to a recycled slab
+    # (popped from the top of the free list — the SlabAlloc reuse path) while
+    # any remain, else to the bump allocator.  Identical in the oracle.
+    k = jnp.arange(B, dtype=jnp.int32)
+    take = jnp.minimum(total_new, g.free_top)
+    recycled = g.free_list[jnp.clip(g.free_top - 1 - k, 0, cap - 1)]
+    alloc_ids = jnp.where(k < take, recycled, g.next_free + k - take)
+    ord_base_r = cum_r - new_slabs_r                # run's first slab ordinal
+
+    def slab_at(ordinal):
+        return alloc_ids[jnp.clip(ordinal, 0, B - 1)]
 
     e_room = room_r[run_id]
     in_tail = rank < e_room
     e_slab = jnp.where(in_tail, tail_r[run_id],
-                       slab_base_r[run_id] + (rank - e_room) // W)
+                       slab_at(ord_base_r[run_id] + (rank - e_room) // W))
     e_lane = jnp.where(in_tail, fill_r[run_id] + rank, (rank - e_room) % W)
     e_slab = jnp.where(new, e_slab, cap)            # park rejects (dropped)
     e_lane = jnp.where(new, e_lane, 0)
@@ -221,24 +233,26 @@ def _insert_body(g, src, dst, w=None, *, impl="auto", interpret=None,
         degree = g.degree.at[deg_idx].add(1, mode="drop")
 
     # --- chain the freshly allocated slabs (run-local, ≤ B of them) ---------
+    # Allocated ids are no longer contiguous (recycled slabs interleave with
+    # bump-allocated ones), so links resolve ordinals through ``alloc_ids``.
     has_new_r = new_slabs_r > 0
     link_from_r = jnp.where(has_new_r, tail_r, cap)
-    next_slab = g.next_slab.at[link_from_r].set(slab_base_r, mode="drop")
-    k = jnp.arange(B, dtype=jnp.int32)
-    slab_ids = g.next_free + k
+    next_slab = g.next_slab.at[link_from_r].set(slab_at(ord_base_r),
+                                                mode="drop")
     alive = k < total_new
     owner = jnp.searchsorted(cum_r, k, side="right")
     owner = jnp.clip(owner, 0, B - 1).astype(jnp.int32)
-    is_last = slab_ids == (slab_base_r[owner] + new_slabs_r[owner] - 1)
-    tgt = jnp.where(is_last, INVALID_SLAB, slab_ids + 1)
-    write_at = jnp.where(alive, slab_ids, cap)
+    is_last = k == (ord_base_r[owner] + new_slabs_r[owner] - 1)
+    tgt = jnp.where(is_last, INVALID_SLAB, slab_at(k + 1))
+    write_at = jnp.where(alive, alloc_ids, cap)
     next_slab = next_slab.at[write_at].set(tgt, mode="drop")
     slab_vertex = g.slab_vertex.at[write_at].set(
         g.bucket_vertex[b_safe_r[owner]], mode="drop")
+    slab_new = g.slab_new.at[write_at].set(True, mode="drop")
 
     # --- tails + UpdateIterator state: scatter at the touched buckets only --
     wb_r = jnp.where(run_ok, bucket_r, nb)          # index nb → dropped
-    new_tail_r = jnp.where(has_new_r, slab_base_r + new_slabs_r - 1, tail_r)
+    new_tail_r = jnp.where(has_new_r, slab_at(cum_r - 1), tail_r)
     new_fill_r = jnp.where(has_new_r, overflow_r - (new_slabs_r - 1) * W,
                            fill_r + count_r)
     tail_slab = g.tail_slab.at[wb_r].set(new_tail_r, mode="drop")
@@ -246,7 +260,7 @@ def _insert_body(g, src, dst, w=None, *, impl="auto", interpret=None,
 
     got_r = count_r > 0
     first_r = got_r & ~g.upd_flag[b_safe_r]
-    f_slab_r = jnp.where(room_r > 0, tail_r, slab_base_r)
+    f_slab_r = jnp.where(room_r > 0, tail_r, slab_at(ord_base_r))
     f_lane_r = jnp.where(room_r > 0, fill_r, 0)
     upd_flag = g.upd_flag.at[jnp.where(got_r, bucket_r, nb)].set(
         True, mode="drop")
@@ -260,7 +274,9 @@ def _insert_body(g, src, dst, w=None, *, impl="auto", interpret=None,
         g, keys=keys, weights=weights, next_slab=next_slab,
         slab_vertex=slab_vertex, tail_slab=tail_slab, tail_fill=tail_fill,
         upd_flag=upd_flag, upd_slab=upd_slab, upd_lane=upd_lane,
-        next_free=g.next_free + total_new,
+        next_free=g.next_free + total_new - take,
+        free_top=g.free_top - take,
+        slab_new=slab_new,
         degree=degree,
         n_edges=g.n_edges + jnp.sum(new.astype(jnp.int32)))
     return g2, inserted

@@ -15,9 +15,12 @@ Semantics notes (shared by oracle and engine — the contracts the tests pin):
   destination ids in shard-local tables, so any non-sentinel uint32 is a
   legitimate key — but EMPTY/TOMBSTONE/INVALID dst would otherwise probe
   (and on insert/delete, corrupt) sentinel lanes.
-* Deletion only flips found lanes to TOMBSTONE_KEY (paper §6); tombstoned
-  lanes are never reused — a deleted-then-reinserted pair lands in a fresh
-  tail lane.
+* Deletion only flips found lanes to TOMBSTONE_KEY (paper §6); the update
+  plane never reuses a tombstoned lane — a deleted-then-reinserted pair
+  lands in a fresh tail lane.  Reclaiming dead lanes/slabs is the
+  maintenance plane's job (``kernels/slab_compact``, DESIGN.md §8), which
+  feeds whole reclaimed slabs back through ``free_list``; insert placement
+  here drains that list before bumping ``next_free``.
 * Placement is the deterministic sort + prefix-scan scheme of DESIGN.md §2:
   results are bit-reproducible for a given batch, and the engine reproduces
   the exact pool layout of this oracle.
@@ -172,14 +175,27 @@ def insert_edges_ref(g: SlabGraph, src: jnp.ndarray, dst: jnp.ndarray,
     room = SLAB_WIDTH - fill                                   # (nb,)
     overflow = jnp.maximum(counts - room, 0)
     new_slabs = (overflow + SLAB_WIDTH - 1) // SLAB_WIDTH      # per bucket
-    slab_base = g.next_free + (jnp.cumsum(new_slabs) - new_slabs)
-    total_new = jnp.sum(new_slabs)
+    cum = jnp.cumsum(new_slabs)
+    ord_base = cum - new_slabs              # bucket's first new-slab ordinal
+    total_new = cum[-1]
+
+    # allocation: the o-th new slab of this call pops the free-slab recycling
+    # list (top first) while any reclaimed slabs remain, then falls back to
+    # the bump allocator — identical ordinal→id resolution to the engine.
+    k = jnp.arange(B, dtype=jnp.int32)
+    take = jnp.minimum(total_new, g.free_top)
+    recycled = g.free_list[jnp.clip(g.free_top - 1 - k, 0,
+                                    g.capacity_slabs - 1)]
+    alloc_ids = jnp.where(k < take, recycled, g.next_free + k - take)
+
+    def slab_at(ordinal):
+        return alloc_ids[jnp.clip(ordinal, 0, B - 1)]
 
     e_b = jnp.where(new, b_s, 0).astype(jnp.int32)
     e_room = room[e_b]
     in_tail = rank < e_room
     e_slab = jnp.where(in_tail, tail[e_b],
-                       slab_base[e_b] + (rank - e_room) // SLAB_WIDTH)
+                       slab_at(ord_base[e_b] + (rank - e_room) // SLAB_WIDTH))
     e_lane = jnp.where(in_tail, fill[e_b] + rank,
                        (rank - e_room) % SLAB_WIDTH)
     # park rejected writes out of bounds; mode="drop" discards them
@@ -194,29 +210,30 @@ def insert_edges_ref(g: SlabGraph, src: jnp.ndarray, dst: jnp.ndarray,
         weights = g.weights.at[e_slab, e_lane].set(wv, mode="drop")
 
     # --- chain the freshly allocated slabs -----------------------------------
+    # Allocated ids interleave recycled and bump slabs, so every link
+    # resolves its ordinal through ``alloc_ids``.
     has_new = new_slabs > 0
     next_slab = g.next_slab
     # link old tail -> first new slab (only where the tail was exhausted)
     link_from = jnp.where(has_new, tail, g.capacity_slabs)
-    next_slab = next_slab.at[link_from].set(slab_base, mode="drop")
-    # link new slabs amongst themselves: slab s points to s+1 unless it is the
-    # bucket's last new slab.  Vectorised over the batch-bounded range.
-    max_new = B  # never need more than one slab per surviving edge
-    k = jnp.arange(max_new, dtype=jnp.int32)
-    slab_ids = g.next_free + k
+    next_slab = next_slab.at[link_from].set(slab_at(ord_base), mode="drop")
+    # link new slabs amongst themselves: ordinal o points to o+1's id unless
+    # it is the bucket's last new slab.  Vectorised over the batch-bounded
+    # range (never more than one slab per surviving edge).
     alive = k < total_new
-    # owner bucket of each new slab: searchsorted over slab_base ranges
-    owner = jnp.searchsorted(slab_base + new_slabs, slab_ids, side="right")
+    # owner bucket of each new-slab ordinal: searchsorted over the cumsum
+    owner = jnp.searchsorted(cum, k, side="right")
     owner = jnp.clip(owner, 0, nb - 1).astype(jnp.int32)
-    is_last = slab_ids == (slab_base[owner] + new_slabs[owner] - 1)
-    tgt = jnp.where(is_last, INVALID_SLAB, slab_ids + 1)
-    write_at = jnp.where(alive, slab_ids, g.capacity_slabs)
+    is_last = k == (ord_base[owner] + new_slabs[owner] - 1)
+    tgt = jnp.where(is_last, INVALID_SLAB, slab_at(k + 1))
+    write_at = jnp.where(alive, alloc_ids, g.capacity_slabs)
     next_slab = next_slab.at[write_at].set(tgt, mode="drop")
     slab_vertex = g.slab_vertex.at[write_at].set(
         g.bucket_vertex[owner], mode="drop")
+    slab_new = g.slab_new.at[write_at].set(True, mode="drop")
 
     # --- tails ----------------------------------------------------------------
-    new_tail = jnp.where(has_new, slab_base + new_slabs - 1, tail)
+    new_tail = jnp.where(has_new, slab_at(cum - 1), tail)
     new_fill = jnp.where(has_new,
                          overflow - (new_slabs - 1) * SLAB_WIDTH,
                          fill + counts)
@@ -226,7 +243,7 @@ def insert_edges_ref(g: SlabGraph, src: jnp.ndarray, dst: jnp.ndarray,
     first_time = got & ~g.upd_flag
     # first new element lands in the tail slab (if it had room) else in the
     # first freshly allocated slab at lane 0.
-    f_slab = jnp.where(room > 0, tail, slab_base)
+    f_slab = jnp.where(room > 0, tail, slab_at(ord_base))
     f_lane = jnp.where(room > 0, fill, 0)
     upd_flag = g.upd_flag | got
     upd_slab = jnp.where(first_time, f_slab, g.upd_slab)
@@ -244,7 +261,9 @@ def insert_edges_ref(g: SlabGraph, src: jnp.ndarray, dst: jnp.ndarray,
         g, keys=keys, weights=weights, next_slab=next_slab,
         slab_vertex=slab_vertex, tail_slab=new_tail, tail_fill=new_fill,
         upd_flag=upd_flag, upd_slab=upd_slab, upd_lane=upd_lane,
-        next_free=g.next_free + total_new,
+        next_free=g.next_free + total_new - take,
+        free_top=g.free_top - take,
+        slab_new=slab_new,
         degree=g.degree + deg_inc,
         n_edges=g.n_edges + jnp.sum(new.astype(jnp.int32)))
     return g2, inserted

@@ -9,7 +9,10 @@ update epoch via ``update_slab_pointers``; out-degrees are the store's
 device-resident ``degree`` field (no host-side ``np.add.at`` shadow); the
 ``PropertyRegistry`` maintains each analytic incrementally under the chosen
 policy, and the ``RequestPipeline`` coalesces update bursts and batches
-membership queries.
+membership queries.  With ``--maintain`` (default) a ``MaintenancePolicy``
+rides the store's epoch close: tombstone-heavy pools compact and shrink
+instead of inflating forever, which is what keeps a long-running serving
+process memory- and latency-stable under churn (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -89,6 +92,12 @@ def main():
     ap.add_argument("--delete-frac", type=float, default=0.25,
                     help="fraction of each update batch that deletes")
     ap.add_argument("--policy", choices=["lazy", "eager"], default="lazy")
+    ap.add_argument("--maintain", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="attach a MaintenancePolicy (slab compaction + "
+                         "free-slab recycling at epoch close)")
+    ap.add_argument("--tombstone-ratio", type=float, default=0.2,
+                    help="compaction trigger: dead/occupied lanes")
     ap.add_argument("--shards", type=int, default=1,
                     help="vertex-partition the store across N shards "
                          "(ShardedGraphStore; N>1 wants N devices or "
@@ -101,19 +110,23 @@ def main():
     from ..algorithms import (bfs_stream_property, pagerank_stream_property,
                               wcc_stream_property)
     from ..data.synth import rmat_edges
-    from ..stream import (GraphStore, PropertyRegistry, RequestPipeline,
-                          ShardedGraphStore, sharded_bfs_property,
-                          sharded_pagerank_property, sharded_wcc_property)
+    from ..stream import (GraphStore, MaintenancePolicy, PropertyRegistry,
+                          RequestPipeline, ShardedGraphStore,
+                          sharded_bfs_property, sharded_pagerank_property,
+                          sharded_wcc_property)
 
     rng = np.random.default_rng(args.seed)
     V = args.vertices
     src, dst = rmat_edges(V, args.initial_edges, seed=args.seed)
     from ..stream import dedup_pairs
     src, dst, _ = dedup_pairs(src, dst)
+    policy = (MaintenancePolicy(tombstone_ratio=args.tombstone_ratio)
+              if args.maintain else None)
     if args.shards > 1:
         # sharded serving plane: same views, vertex-partitioned; the
         # analytics run as distributed slab-sweep super-steps
-        store = ShardedGraphStore.from_edges(V, args.shards, src, dst)
+        store = ShardedGraphStore.from_edges(V, args.shards, src, dst,
+                                             maintenance=policy)
         registry = PropertyRegistry(store)
         registry.register(sharded_pagerank_property(), policy=args.policy)
         registry.register(sharded_bfs_property(0), policy=args.policy)
@@ -123,7 +136,8 @@ def main():
         # symmetric one rather than pay its maintenance every epoch
         store = GraphStore.from_edges(
             V, src, dst, hashing=False, with_symmetric=False,
-            slack_slabs=args.requests * args.batch // 64 + 512)
+            slack_slabs=args.requests * args.batch // 64 + 512,
+            maintenance=policy)
         registry = PropertyRegistry(store)
         cap = len(src) + args.requests * args.batch + 4096
         registry.register(pagerank_stream_property(), policy=args.policy)
@@ -145,6 +159,18 @@ def main():
     print(f"[serve] {args.requests} requests in {elapsed:.1f}s "
           f"({args.requests / elapsed:.2f} req/s), "
           f"store v{store.version}, E={store.n_edges}")
+    st = store.pool_stats()
+    print(f"[serve] pool: capacity={st['capacity_slabs']} slabs "
+          f"(next_free={st['next_free']} free_top={st['free_top']}) "
+          f"live={st['live_lanes']} tombstones={st['tombstone_lanes']} "
+          f"(ratio {st['tombstone_ratio']:.3f}) "
+          f"occupancy={st['occupancy']:.3f} "
+          f"chains mean={st['mean_chain']:.2f} max={st['max_chain']}")
+    if args.maintain:
+        last = (store.last_maintenance.describe()
+                if store.last_maintenance else "never triggered")
+        print(f"[serve] maintenance: {store.maintenance_count} passes, "
+              f"last: {last}")
 
     if args.checkpoint:
         if args.shards > 1:

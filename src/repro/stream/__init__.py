@@ -3,8 +3,10 @@
 The streaming-graph serving layer over the Meerkat core: a multi-view update
 plane (``GraphStore``), an incremental-property registry keyed to store
 versions (``PropertyRegistry`` + the ``stream_property`` hooks in
-``repro.algorithms``), and a batched request pipeline with update coalescing
-(``RequestPipeline``).
+``repro.algorithms``), a batched request pipeline with update coalescing
+(``RequestPipeline``), and the memory-maintenance policy layer
+(``MaintenancePolicy`` — slab compaction / reclamation at epoch close,
+DESIGN.md §8).
 """
 from .store import (ALL_VIEWS, FORWARD, SYMMETRIC, TRANSPOSE, AppliedBatch,
                     GraphStore, canonical_batch, dedup_pairs)
@@ -12,6 +14,8 @@ from .properties import EAGER, LAZY, PropertyRegistry, PropertySpec
 from .requests import (MembershipQuery, NeighborsQuery, PropertyRead, Request,
                        RequestPipeline, Response, UpdateBatch,
                        coalesce_updates)
+from .maintenance import (COMPACT, RECLAIM, MaintenancePolicy,
+                          MaintenanceRecord)
 from .sharded_store import (ShardedGraphStore, sharded_bfs_property,
                             sharded_pagerank_property, sharded_wcc_property)
 
@@ -21,6 +25,7 @@ __all__ = [
     "EAGER", "LAZY", "PropertyRegistry", "PropertySpec",
     "MembershipQuery", "NeighborsQuery", "PropertyRead", "Request",
     "RequestPipeline", "Response", "UpdateBatch", "coalesce_updates",
+    "COMPACT", "RECLAIM", "MaintenancePolicy", "MaintenanceRecord",
     "ShardedGraphStore", "sharded_bfs_property",
     "sharded_pagerank_property", "sharded_wcc_property",
 ]

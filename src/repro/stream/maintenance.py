@@ -1,0 +1,114 @@
+"""Maintenance policy — when and how a store compacts its pools.
+
+The update plane is append-only by design (deletes tombstone, ``next_free``
+only advances), so *something* must decide when the accumulated dead
+freight is worth a re-pack.  That something is the ``MaintenancePolicy``:
+a small trigger set evaluated against ``pool_stats`` of the forward view
+at every epoch close.  Two maintenance tiers exist:
+
+* ``"compact"`` — the full re-pack (``kernels/slab_compact``): every view
+  rebuilt dense as ONE versioned unit, pool capacity allowed back DOWN the
+  pow2 jit-shape ladder.  Slab handles retained across a compaction are
+  stale; the per-view ``CompactionReport.perm`` says where each old slab's
+  content went (``INVALID_SLAB`` = dead).  Vertex ids are untouched, so
+  vertex-keyed property states survive — the registry just skips
+  maintenance batches during replay.
+* ``"reclaim"`` — the cheap tier: wholly-dead overflow slabs are unlinked
+  and pushed onto the free-slab recycling list, where insert placement
+  consumes them before bumping ``next_free``.  No lane moves, no shape
+  change, no stale handles.
+
+Triggers (any 0 / 0.0 field is disabled):
+
+* ``tombstone_ratio``  — dead lanes / occupied lanes ≥ threshold → compact.
+  The primary churn signal.
+* ``max_mean_chain``   — mean slabs per bucket ≥ threshold → compact
+  (every probe and sweep pays the chain multiplier).
+* ``min_occupancy``    — live lanes / allocated lane capacity < threshold
+  → compact.  Off by default: a sparse graph of single-slab chains has low
+  occupancy no compaction can improve (buckets never merge), so only
+  enable it for workloads with long chains.
+* ``reclaim_dead_slabs`` — ≥ N wholly-dead slabs → reclaim (when nothing
+  above fired).
+* ``every``            — compact every N epochs regardless.
+
+``shrink_occupancy`` gates the capacity drop: the compacted pool only
+steps down the pow2 ladder when at most that fraction of its rows is
+allocated (1.0 = always allow, 0.0 = never shrink, pure de-fragmentation).
+The stores additionally floor the compacted slack at the most recent
+insert epoch's worst-case slab reservation, so a shrunk pool never has to
+grow right back for the next same-sized batch (no shrink/grow flapping
+at a rung edge).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from ..kernels.slab_compact import CompactionReport
+
+COMPACT = "compact"
+RECLAIM = "reclaim"
+
+
+@dataclasses.dataclass(frozen=True)
+class MaintenancePolicy:
+    tombstone_ratio: float = 0.25
+    max_mean_chain: float = 0.0
+    min_occupancy: float = 0.0
+    reclaim_dead_slabs: int = 0
+    every: int = 0
+    shrink_occupancy: float = 1.0
+    slack_slabs: int = 64
+    impl: str = "auto"
+
+    def decide(self, stats: dict, *, epochs_since: int
+               ) -> Optional[Tuple[str, str]]:
+        """(action, trigger-description) or None — evaluated on the forward
+        view's ``pool_stats`` at epoch close."""
+        if self.every and epochs_since >= self.every:
+            return COMPACT, f"every={self.every} epochs"
+        if self.tombstone_ratio and \
+                stats["tombstone_ratio"] >= self.tombstone_ratio:
+            return COMPACT, (f"tombstone_ratio {stats['tombstone_ratio']:.3f}"
+                             f" >= {self.tombstone_ratio}")
+        if self.max_mean_chain and \
+                stats["mean_chain"] >= self.max_mean_chain:
+            return COMPACT, (f"mean_chain {stats['mean_chain']:.2f}"
+                             f" >= {self.max_mean_chain}")
+        if self.min_occupancy and stats["occupancy"] < self.min_occupancy:
+            return COMPACT, (f"occupancy {stats['occupancy']:.3f}"
+                             f" < {self.min_occupancy}")
+        if self.reclaim_dead_slabs and \
+                stats["dead_slabs"] >= self.reclaim_dead_slabs:
+            return RECLAIM, (f"dead_slabs {stats['dead_slabs']}"
+                             f" >= {self.reclaim_dead_slabs}")
+        return None
+
+    def allow_shrink(self, stats: dict) -> bool:
+        """Capacity may step down the pow2 ladder only when the pool is
+        sufficiently empty — avoids shrink/grow flapping at a rung edge."""
+        frac = stats["allocated_slabs"] / max(1, stats["capacity_slabs"])
+        return frac <= self.shrink_occupancy
+
+
+@dataclasses.dataclass(frozen=True)
+class MaintenanceRecord:
+    """One maintenance pass over every live view (one versioned unit)."""
+    version: int                           # store version AFTER the pass
+    action: str                            # "compact" | "reclaim"
+    trigger: str                           # which policy clause fired
+    reports: Dict[str, CompactionReport]   # per view (compact only)
+    reclaimed: Dict[str, int]              # per view (reclaim only)
+    duration_s: float
+
+    def describe(self) -> str:
+        if self.action == COMPACT:
+            caps = {name: f"{r.old_capacity}->{r.new_capacity}"
+                    for name, r in self.reports.items()}
+            return f"compact v{self.version} [{self.trigger}] {caps}"
+        total = sum(self.reclaimed.values())
+        return f"reclaim v{self.version} [{self.trigger}] {total} slabs"
+
+
+__all__ = ["COMPACT", "RECLAIM", "MaintenancePolicy", "MaintenanceRecord"]

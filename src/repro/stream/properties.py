@@ -99,6 +99,13 @@ class PropertyRegistry:
     def _on_batch(self, batch: AppliedBatch) -> None:
         for e in self._entries.values():
             if e.policy == EAGER:
+                if batch.maintenance:
+                    # compaction/reclamation changes no edges and vertex
+                    # ids are stable: the state is already consistent with
+                    # the new version — just re-anchor it.
+                    if e.version == batch.version - 1:
+                        e.version = batch.version
+                    continue
                 # an eager entry is always exactly one batch behind here
                 e.state = e.spec.on_batch(self.store, e.state, batch)
                 e.version = batch.version
@@ -107,6 +114,9 @@ class PropertyRegistry:
         if e.version == self.store.version:
             return
         missed = self.store.batches_since(e.version)
+        if missed is not None:
+            # maintenance epochs are replay no-ops (edge set unchanged)
+            missed = [b for b in missed if not b.maintenance]
         if missed is None:
             e.state = e.spec.refresh(self.store)
         elif e.spec.collapse_replay and missed:

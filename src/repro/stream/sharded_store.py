@@ -39,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.slab_graph import update_slab_pointers
-from ..core.hashing import INVALID_VERTEX
+from ..core.hashing import INVALID_VERTEX, SLAB_WIDTH
 from ..core.worklist import EdgeFrontier, expand_vertices
 from ..distributed.sharded_graph import (ShardedSlabGraph, _route_body,
                                          _scatter_back,
@@ -144,11 +144,13 @@ class ShardedGraphStore(VersionedStoreBase):
     ``PropertyRegistry`` and ``RequestPipeline`` apply)."""
 
     def __init__(self, views: Dict[str, ShardedSlabGraph], *, weighted: bool,
-                 version: int = 0, log_capacity: int = 64):
+                 version: int = 0, log_capacity: int = 64,
+                 maintenance=None):
         assert FORWARD in views, "a store always carries the forward view"
         unknown = set(views) - set(ALL_VIEWS)
         assert not unknown, f"unknown views {unknown}"
-        super().__init__(version=version, log_capacity=log_capacity)
+        super().__init__(version=version, log_capacity=log_capacity,
+                         maintenance=maintenance)
         self._views = dict(views)
         self.weighted = bool(weighted)
 
@@ -157,7 +159,8 @@ class ShardedGraphStore(VersionedStoreBase):
     def from_edges(cls, n_vertices: int, n_shards: int, src, dst, w=None, *,
                    with_transpose: bool = True, with_symmetric: bool = True,
                    slack_slabs: int = 0,
-                   log_capacity: int = 64) -> "ShardedGraphStore":
+                   log_capacity: int = 64,
+                   maintenance=None) -> "ShardedGraphStore":
         """Bulk-build every view host-side (``shard_from_edges_host`` —
         dense pools, dedup shared; the engine path serves the epochs)."""
         src, dst, w = dedup_pairs(src, dst, w)
@@ -173,7 +176,8 @@ class ShardedGraphStore(VersionedStoreBase):
             w2 = None if w is None else np.concatenate([w, w])
             views[SYMMETRIC] = shard_from_edges_host(
                 n_vertices, n_shards, s2, d2, w2, **kw)
-        return cls(views, weighted=w is not None, log_capacity=log_capacity)
+        return cls(views, weighted=w is not None, log_capacity=log_capacity,
+                   maintenance=maintenance)
 
     # ------------------------------------------------------------- accessors
     @property
@@ -246,6 +250,7 @@ class ShardedGraphStore(VersionedStoreBase):
             for name in roles:
                 self._views[name] = ensure_capacity_sharded(
                     self._views[name], per_view[name] + 64)
+                self._last_reserve[name] = per_view[name] + 64
         caps = (fwd_del, tr_del, sym_del, fwd_ins, tr_ins, sym_ins)
 
         # -- canonical device batches (every view derives from these) -------
@@ -285,7 +290,53 @@ class ShardedGraphStore(VersionedStoreBase):
         for name, sg in self._views.items():
             self._views[name] = dataclasses.replace(
                 sg, graphs=update_slab_pointers(sg.graphs))
+
+        # -- maintenance plane: policy check on the closed epoch ------------
+        self._auto_maintain()
         return batch
+
+    # ----------------------------------------------------- maintenance plane
+    def pool_stats(self, view: str = FORWARD) -> dict:
+        """Aggregated pool health across the view's shards (per-shard
+        ``core.pool_stats`` summed / maxed so policy thresholds read the
+        same way as on the unsharded store; capacity is PER SHARD — the
+        stacked pools are rectangular)."""
+        from ..core.slab_graph import pool_stats as _pool_stats
+        sg = self._views[view]
+        per = [_pool_stats(shard_slice(sg, k)) for k in range(self.n_shards)]
+        live = sum(p["live_lanes"] for p in per)
+        tomb = sum(p["tombstone_lanes"] for p in per)
+        alloc = sum(p["allocated_slabs"] for p in per)
+        mean_chain = float(np.mean([p["mean_chain"] for p in per]))
+        return {
+            "capacity_slabs": per[0]["capacity_slabs"],
+            "next_free": max(p["next_free"] for p in per),
+            "free_top": min(p["free_top"] for p in per),
+            "free_slabs": min(p["free_slabs"] for p in per),
+            "allocated_slabs": alloc,
+            "dead_slabs": sum(p["dead_slabs"] for p in per),
+            "live_lanes": live,
+            "tombstone_lanes": tomb,
+            "tombstone_ratio": tomb / max(1, live + tomb),
+            "occupancy": live / max(1, alloc * SLAB_WIDTH),
+            "max_chain": max(p["max_chain"] for p in per),
+            "mean_chain": mean_chain,
+            "pool_bytes": sum(p["pool_bytes"] for p in per),
+            "n_edges": sum(p["n_edges"] for p in per),
+            "per_shard": per,
+        }
+
+    def _compact_view(self, sg: ShardedSlabGraph, policy, *, shrink: bool,
+                      slack_slabs: int):
+        from ..kernels.slab_compact import compact_shards
+        graphs, rep = compact_shards(sg.graphs, impl=policy.impl,
+                                     shrink=shrink, slack_slabs=slack_slabs)
+        return dataclasses.replace(sg, graphs=graphs), rep
+
+    def _reclaim_view(self, sg: ShardedSlabGraph):
+        from ..kernels.slab_compact import reclaim_shards
+        graphs, n = reclaim_shards(sg.graphs)
+        return dataclasses.replace(sg, graphs=graphs), n
 
     # --------------------------------------------------------------- queries
     def query(self, src, dst) -> np.ndarray:

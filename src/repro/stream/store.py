@@ -26,7 +26,13 @@ Contract per ``apply(inserts, deletes)`` (DESIGN.md §5/§6):
      ``degree`` field — no host shadow),
   6. registered listeners (the property registry) are notified while the
      update epoch is still OPEN, then every view's epoch is closed via
-     ``update_slab_pointers`` and the monotonic ``version`` has been bumped.
+     ``update_slab_pointers`` and the monotonic ``version`` has been bumped,
+  7. with a ``MaintenancePolicy`` attached, the closed epoch is inspected
+     (``pool_stats``) and — on a trigger — every view compacts or reclaims
+     as one versioned unit (DESIGN.md §8): a ``maintenance=True`` batch
+     bumps the version and notifies listeners, vertex-keyed property
+     states survive, retained slab handles are invalidated via the
+     compaction permutation.
 
 All live views mutate through ONE ``update_views`` dispatch (the stacked
 slab-update engine invocation, DESIGN.md §6) with their buffers donated —
@@ -128,6 +134,10 @@ class AppliedBatch:
     del_mask: Optional[jnp.ndarray]
     n_inserted: int
     n_deleted: int
+    #: epoch was a maintenance pass (compaction / slab reclamation): the
+    #: edge set is untouched, vertex-keyed property states stay valid, and
+    #: replay skips it — only retained slab handles are invalidated.
+    maintenance: bool = False
 
 
 class VersionedStoreBase:
@@ -139,12 +149,28 @@ class VersionedStoreBase:
     unsharded ``GraphStore`` and the ``ShardedGraphStore`` cannot drift.
     """
 
-    def __init__(self, *, version: int = 0, log_capacity: int = 64):
+    def __init__(self, *, version: int = 0, log_capacity: int = 64,
+                 maintenance=None):
         self.version = int(version)
         self._log_capacity = int(log_capacity)
         self._log: List[AppliedBatch] = []
         self._log_floor = int(version)  # version the oldest logged batch follows
         self._listeners: List[Callable[[AppliedBatch], None]] = []
+        #: Optional MaintenancePolicy — evaluated at every epoch close.
+        self.maintenance = maintenance
+        self.maintenance_count = 0
+        self.last_maintenance = None
+        self._epochs_since_maint = 0
+        #: per-view worst-case slab reservation of the most recent insert
+        #: epoch — compaction keeps this much headroom so a shrunk pool
+        #: doesn't have to grow right back for the next same-sized batch
+        #: (no shrink/grow flapping at a pow2 rung edge).
+        self._last_reserve: Dict[str, int] = {}
+        #: exact tombstone accounting so the per-epoch policy check stays
+        #: O(1): every recorded delete mints exactly one tombstone lane,
+        #: and only maintenance ever clears them.
+        self._tombstone_base = 0       # tombstones at the last maintenance
+        self._deletes_since_maint = 0
 
     def add_listener(self, fn: Callable[[AppliedBatch], None]) -> None:
         """Subscribe to applied batches (called with the epoch still open)."""
@@ -167,20 +193,132 @@ class VersionedStoreBase:
         if len(self._log) > self._log_capacity:
             self._log = self._log[-self._log_capacity:]
             self._log_floor = self._log[0].version - 1
+        if not batch.maintenance:
+            self._deletes_since_maint += batch.n_deleted
         for fn in self._listeners:
             fn(batch)
         return batch
+
+    # ----------------------------------------------------- maintenance plane
+    def pool_stats(self, view: str = "forward") -> dict:
+        raise NotImplementedError
+
+    def _compact_view(self, view, policy, *, shrink: bool, slack_slabs: int):
+        """(compacted view, CompactionReport) — per-store-kind hook."""
+        raise NotImplementedError
+
+    def _reclaim_view(self, view):
+        """(reclaimed view, n_freed) — per-store-kind hook."""
+        raise NotImplementedError
+
+    def _maintain_views(self, action: str, policy, *, shrink: bool):
+        """Apply one maintenance action to every live view (the loop is
+        shared so the two store kinds cannot drift); returns
+        ``(reports, reclaimed)`` keyed by view name."""
+        reports: Dict[str, object] = {}
+        reclaimed: Dict[str, int] = {}
+        if action == "compact":
+            for name in list(self._views):
+                slack = max(policy.slack_slabs,
+                            self._last_reserve.get(name, 0))
+                self._views[name], reports[name] = self._compact_view(
+                    self._views[name], policy, shrink=shrink,
+                    slack_slabs=slack)
+        elif action == "reclaim":
+            for name in list(self._views):
+                self._views[name], reclaimed[name] = self._reclaim_view(
+                    self._views[name])
+        else:
+            raise ValueError(f"unknown maintenance action {action!r}")
+        return reports, reclaimed
+
+    def _cheap_stats(self) -> dict:
+        """O(1) stand-in for ``pool_stats`` covering the triggers that need
+        no pool scan.  Tombstone accounting is EXACT (every recorded delete
+        mints one tombstone; only maintenance clears them); the scan-only
+        fields are pinned to never-trigger values — a policy enabling those
+        triggers takes the full-scan path instead.
+        """
+        tombs = self._tombstone_base + self._deletes_since_maint
+        live = int(self.n_edges)
+        return {"tombstone_ratio": tombs / max(1, tombs + live),
+                "tombstone_lanes": tombs,
+                "mean_chain": 0.0, "occupancy": 1.0, "dead_slabs": 0}
+
+    def _auto_maintain(self) -> None:
+        """Epoch-close hook: count the epoch, run the policy if present."""
+        self._epochs_since_maint += 1
+        if self.maintenance is not None:
+            self.maintain()
+
+    def maintain(self, action: Optional[str] = None):
+        """Run pool maintenance across every view as ONE versioned unit.
+
+        With ``action=None`` the store's ``MaintenancePolicy`` decides —
+        from O(1) delete accounting when only the tombstone/every triggers
+        are armed, from a full forward-view ``pool_stats`` scan when a
+        chain/occupancy/dead-slab trigger needs it — and no-ops (returns
+        None) without a trigger, so the per-epoch policy check costs no
+        device transfer in the common case.  ``action="compact"`` /
+        ``"reclaim"`` forces that tier.  On action: all views maintain
+        together, the store version bumps, and listeners see a
+        ``maintenance=True`` AppliedBatch — property states survive
+        (vertex ids are stable); slab handles retained from before are
+        stale and must be re-resolved via the reports' ``perm``.  Returns
+        the ``MaintenanceRecord``.
+        """
+        import time as _time
+
+        from .maintenance import MaintenancePolicy, MaintenanceRecord
+
+        policy = self.maintenance or MaintenancePolicy()
+        needs_scan = bool(policy.max_mean_chain or policy.min_occupancy
+                          or policy.reclaim_dead_slabs)
+        trigger = "forced"
+        if action is None:
+            stats = self.pool_stats() if needs_scan else self._cheap_stats()
+            decision = policy.decide(
+                stats, epochs_since=self._epochs_since_maint)
+            if decision is None:
+                return None
+            action, trigger = decision
+            if not needs_scan:           # a trigger fired: scan for shrink
+                stats = self.pool_stats()
+        else:
+            stats = self.pool_stats()
+        t0 = _time.time()
+        reports, reclaimed = self._maintain_views(
+            action, policy, shrink=policy.allow_shrink(stats))
+        self._epochs_since_maint = 0
+        self._deletes_since_maint = 0
+        # compaction drops every tombstone; reclamation only frees wholly
+        # dead slabs — keep the (pre-pass, thus conservative) count.
+        self._tombstone_base = (0 if action == "compact"
+                                else stats["tombstone_lanes"])
+        batch = self._record_batch(
+            ins_src=None, ins_dst=None, ins_w=None, ins_mask=None,
+            del_src=None, del_dst=None, del_mask=None,
+            n_inserted=0, n_deleted=0, maintenance=True)
+        record = MaintenanceRecord(
+            version=batch.version, action=action, trigger=trigger,
+            reports=reports, reclaimed=reclaimed,
+            duration_s=_time.time() - t0)
+        self.maintenance_count += 1
+        self.last_maintenance = record
+        return record
 
 
 class GraphStore(VersionedStoreBase):
     """Forward + transposed + symmetric SlabGraph views as one versioned unit."""
 
     def __init__(self, views: Dict[str, SlabGraph], *, weighted: bool,
-                 version: int = 0, log_capacity: int = 64):
+                 version: int = 0, log_capacity: int = 64,
+                 maintenance=None):
         assert FORWARD in views, "a GraphStore always carries the forward view"
         unknown = set(views) - set(ALL_VIEWS)
         assert not unknown, f"unknown views {unknown}"
-        super().__init__(version=version, log_capacity=log_capacity)
+        super().__init__(version=version, log_capacity=log_capacity,
+                         maintenance=maintenance)
         self._views = dict(views)
         self.weighted = bool(weighted)
         self._max_bpv = int(np.max(np.asarray(
@@ -192,7 +330,8 @@ class GraphStore(VersionedStoreBase):
                    hashing: bool = False, load_factor: float = 0.7,
                    slack_slabs: int = 0, with_transpose: bool = True,
                    with_symmetric: bool = True,
-                   log_capacity: int = 64) -> "GraphStore":
+                   log_capacity: int = 64,
+                   maintenance=None) -> "GraphStore":
         """Bulk-build every view from one host edge list (dedup shared)."""
         src, dst, w = dedup_pairs(src, dst, w)
         kw = dict(hashing=hashing, load_factor=load_factor,
@@ -205,7 +344,8 @@ class GraphStore(VersionedStoreBase):
             d2 = np.concatenate([dst, src])
             w2 = None if w is None else np.concatenate([w, w])
             views[SYMMETRIC] = from_edges_host(n_vertices, s2, d2, w2, **kw)
-        return cls(views, weighted=w is not None, log_capacity=log_capacity)
+        return cls(views, weighted=w is not None, log_capacity=log_capacity,
+                   maintenance=maintenance)
 
     # ------------------------------------------------------------- accessors
     @property
@@ -271,6 +411,7 @@ class GraphStore(VersionedStoreBase):
             for name in roles:
                 need = 2 * p + 64 if name == SYMMETRIC else p + 64
                 self._views[name] = ensure_capacity(self._views[name], need)
+                self._last_reserve[name] = need
 
         # -- canonical device batches (every view derives from these) -------
         del_sj = del_dj = del_mask = None
@@ -307,7 +448,26 @@ class GraphStore(VersionedStoreBase):
         # -- close the epoch on every view ----------------------------------
         for name, g in self._views.items():
             self._views[name] = update_slab_pointers(g)
+
+        # -- maintenance plane: policy check on the closed epoch ------------
+        self._auto_maintain()
         return batch
+
+    # ----------------------------------------------------- maintenance plane
+    def pool_stats(self, view: str = FORWARD) -> dict:
+        """Pool-health snapshot of one view (``core.pool_stats``)."""
+        from ..core.slab_graph import pool_stats as _pool_stats
+        return _pool_stats(self._views[view])
+
+    def _compact_view(self, g: SlabGraph, policy, *, shrink: bool,
+                      slack_slabs: int):
+        from ..kernels.slab_compact import compact
+        return compact(g, impl=policy.impl, shrink=shrink,
+                       slack_slabs=slack_slabs)
+
+    def _reclaim_view(self, g: SlabGraph):
+        from ..kernels.slab_compact import reclaim_free_slabs
+        return reclaim_free_slabs(g)
 
     # --------------------------------------------------------------- queries
     def query(self, src, dst) -> np.ndarray:

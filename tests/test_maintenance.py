@@ -1,0 +1,466 @@
+"""Maintenance-plane tests (kernels/slab_compact + stream.maintenance,
+DESIGN.md §8).
+
+Coverage planes:
+
+* bit-identity — every compaction impl ("jnp" scan-based, "pallas"
+  interpret) must reproduce the ``ref.py`` sort-based oracle's output
+  pytree AND permutation *exactly*, across hashing/weighted variants and
+  shard stacks (the acceptance contract);
+* semantics — compaction and reclamation are invisible to queries, sweeps
+  and traversals (same results on the churned and maintained pools), and
+  a long random churn stream against a host ``set[(src, dst)]`` oracle
+  with periodic maintenance stays correct while pool capacity stays
+  bounded;
+* the recycling allocator — ``reclaim_free_slabs`` feeds the free list,
+  insert placement drains it before bumping ``next_free`` (engine ==
+  oracle with a non-empty free list), and the UpdateIterator lane mask
+  still flags lanes landing in recycled (below-watermark) slabs;
+* the policy/store plumbing — trigger evaluation, the maintenance
+  AppliedBatch (version bump + listener notification + replay skip),
+  property-state survival, pow2 shrink, and ``pool_stats``.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (SLAB_WIDTH, delete_edges, ensure_capacity,
+                        from_edges_host, insert_edges, next_pow2, pool_stats,
+                        query_edges, update_slab_pointers)
+from repro.core.worklist import expand_vertices, pool_edges, updated_lane_mask
+from repro.kernels.slab_compact import (compact, compact_shards,
+                                        reclaim_free_slabs, reclaim_shards)
+from repro.kernels.slab_sweep.ops import sweep_vertices
+from repro.kernels.slab_update.ref import insert_edges_ref
+
+ENGINE_IMPLS = ["jnp", "pallas"]
+
+
+def impl_kw(impl):
+    return {"impl": impl, "interpret": True} if impl == "pallas" \
+        else {"impl": impl}
+
+
+def tree_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def churned_graph(rng, *, n_vertices=300, n_edges=5000, epochs=4, batch=512,
+                  hashing=False, weighted=False):
+    """A graph after a few mixed epochs: tombstones + grown chains."""
+    src = rng.integers(0, n_vertices, n_edges).astype(np.uint32)
+    dst = rng.integers(0, n_vertices, n_edges).astype(np.uint32)
+    w = rng.random(n_edges).astype(np.float32) if weighted else None
+    g = from_edges_host(n_vertices, src, dst, w, hashing=hashing)
+    for _ in range(epochs):
+        di = rng.choice(n_edges, batch, replace=False)
+        g = ensure_capacity(g, batch + 64)
+        g, _ = delete_edges(g, jnp.asarray(src[di]), jnp.asarray(dst[di]))
+        ins = rng.integers(0, n_vertices, (batch, 2)).astype(np.uint32)
+        iw = (jnp.asarray(rng.random(batch).astype(np.float32))
+              if weighted else None)
+        g, _ = insert_edges(g, jnp.asarray(ins[:, 0]), jnp.asarray(ins[:, 1]),
+                            iw)
+        g = update_slab_pointers(g)
+    return g, src, dst
+
+
+# ============================================================================
+# engine vs oracle bit-identity
+# ============================================================================
+
+class TestCompactionIdentity:
+    @pytest.mark.parametrize("impl", ENGINE_IMPLS)
+    @pytest.mark.parametrize("hashing,weighted",
+                             [(False, False), (False, True),
+                              (True, False), (True, True)])
+    def test_engine_matches_oracle(self, impl, hashing, weighted):
+        rng = np.random.default_rng(11)
+        g, _, _ = churned_graph(rng, hashing=hashing, weighted=weighted)
+        g_eng, rep_eng = compact(g, **impl_kw(impl))
+        g_orc, rep_orc = compact(g, impl="oracle")
+        assert tree_equal(g_eng, g_orc)
+        assert np.array_equal(np.asarray(rep_eng.perm),
+                              np.asarray(rep_orc.perm))
+        assert rep_eng.new_capacity == rep_orc.new_capacity
+
+    @pytest.mark.parametrize("impl", ENGINE_IMPLS)
+    def test_sharded_engine_matches_oracle(self, impl):
+        from repro.distributed.sharded_graph import (apply_update_sharded,
+                                                     shard_from_edges_host)
+        import dataclasses
+        rng = np.random.default_rng(12)
+        V, S, E = 203, 4, 6000
+        src = rng.integers(0, V, E).astype(np.uint32)
+        dst = rng.integers(0, V, E).astype(np.uint32)
+        sg = shard_from_edges_host(V, S, src, dst)
+        for _ in range(3):
+            di = rng.choice(E, 512, replace=False)
+            ins = rng.integers(0, V, (512, 2)).astype(np.uint32)
+            sg, _, _ = apply_update_sharded(
+                sg, jnp.asarray(ins[:, 0]), jnp.asarray(ins[:, 1]), None,
+                jnp.asarray(src[di]), jnp.asarray(dst[di]))
+            sg = dataclasses.replace(
+                sg, graphs=update_slab_pointers(sg.graphs))
+        g_eng, rep_eng = compact_shards(sg.graphs, **impl_kw(impl))
+        g_orc, rep_orc = compact_shards(sg.graphs, impl="oracle")
+        assert tree_equal(g_eng, g_orc)
+        assert np.array_equal(np.asarray(rep_eng.perm),
+                              np.asarray(rep_orc.perm))
+
+
+# ============================================================================
+# compaction semantics: invisible to queries / sweeps / traversal
+# ============================================================================
+
+class TestCompactionSemantics:
+    def test_queries_sweeps_unchanged(self):
+        rng = np.random.default_rng(21)
+        g, src, dst = churned_graph(rng, weighted=True)
+        g2, rep = compact(g)
+        V = g.n_vertices
+        # membership: all original pairs + random negatives
+        qs = np.concatenate([src, rng.integers(0, V, 1024).astype(np.uint32)])
+        qd = np.concatenate([dst, rng.integers(0, V, 1024).astype(np.uint32)])
+        f0 = np.asarray(query_edges(g, jnp.asarray(qs), jnp.asarray(qd)))
+        f1 = np.asarray(query_edges(g2, jnp.asarray(qs), jnp.asarray(qd)))
+        assert np.array_equal(f0, f1)
+        # bookkeeping: same edge count, recounted degrees match
+        assert int(g2.n_edges) == int(g.n_edges)
+        assert np.array_equal(np.asarray(g2.degree), np.asarray(g.degree))
+        # sweeps: sum and min semirings identical
+        vals = jnp.asarray(rng.random(V).astype(np.float32))
+        s0 = np.asarray(sweep_vertices(g, vals, semiring="sum"))
+        s1 = np.asarray(sweep_vertices(g2, vals, semiring="sum"))
+        assert np.allclose(s0, s1, atol=1e-5)
+        labels = jnp.arange(V, dtype=jnp.int32)
+        m0 = np.asarray(sweep_vertices(g, labels, semiring="min"))
+        m1 = np.asarray(sweep_vertices(g2, labels, semiring="min"))
+        assert np.array_equal(m0, m1)
+
+    def test_edge_sets_identical_per_vertex(self):
+        rng = np.random.default_rng(22)
+        g, _, _ = churned_graph(rng)
+        g2, _ = compact(g)
+        for v in (0, 7, 123, 299):
+            vv = jnp.asarray(np.full(8, v, np.uint32))
+            vm = jnp.asarray(np.arange(8) < 1)
+            e0 = expand_vertices(g, vv, vm, out_capacity=2048, max_bpv=1)
+            e1 = expand_vertices(g2, vv, vm, out_capacity=2048, max_bpv=1)
+            d0 = np.asarray(e0.dst)[:int(e0.size)]
+            d1 = np.asarray(e1.dst)[:int(e1.size)]
+            assert sorted(d0.tolist()) == sorted(d1.tolist())
+
+    def test_perm_tracks_first_live_lane(self):
+        rng = np.random.default_rng(23)
+        g, _, _ = churned_graph(rng)
+        g2, rep = compact(g)
+        perm = np.asarray(rep.perm)
+        old_keys = np.asarray(g.keys)
+        new_keys = np.asarray(g2.keys)
+        live = (np.asarray(g.slab_vertex) >= 0)[:, None] \
+            & (old_keys < np.uint32(0xFFFFFFFD))
+        checked = 0
+        for s in range(g.capacity_slabs):
+            lanes = np.nonzero(live[s])[0]
+            if len(lanes) == 0:
+                continue
+            first = old_keys[s, lanes[0]]
+            assert perm[s] >= 0
+            assert first in new_keys[perm[s]], \
+                f"slab {s}'s first survivor not found in perm target"
+            checked += 1
+        assert checked > 0
+
+    def test_shrink_walks_pow2_ladder(self):
+        rng = np.random.default_rng(24)
+        g, src, dst = churned_graph(rng)
+        # delete almost everything -> massive shrink opportunity
+        g = ensure_capacity(g, len(src) + 64)
+        p = next_pow2(len(src))
+        s = np.full(p, 0xFFFFFFFF, np.uint32); s[:len(src)] = src
+        d = np.full(p, 0xFFFFFFFF, np.uint32); d[:len(dst)] = dst
+        g, _ = delete_edges(g, jnp.asarray(s), jnp.asarray(d))
+        g = update_slab_pointers(g)
+        g2, rep = compact(g, shrink=True)
+        assert rep.new_capacity == next_pow2(rep.new_capacity)
+        assert rep.new_capacity < rep.old_capacity
+        assert int(g2.next_free) <= rep.new_capacity
+        g3, rep3 = compact(g, shrink=False)
+        assert rep3.new_capacity == g.capacity_slabs
+
+
+# ============================================================================
+# reclamation + the recycling allocator
+# ============================================================================
+
+def dead_slab_graph(rng):
+    """Hub graph with overflow chains, then all edges of some hubs deleted
+    -> wholly-dead overflow slabs."""
+    V = 40
+    src = np.repeat(np.arange(V, dtype=np.uint32), 300)
+    dst = rng.integers(0, 100000, len(src)).astype(np.uint32)
+    g = from_edges_host(V, src, dst, hashing=False)
+    view = pool_edges(g)
+    valid = np.asarray(view.valid)
+    vs = np.asarray(view.src)[valid].astype(np.uint32)
+    vd = np.asarray(view.dst)[valid]
+    m = vs < 10
+    p = next_pow2(int(m.sum()))
+    s = np.full(p, 0xFFFFFFFF, np.uint32); s[:m.sum()] = vs[m]
+    d = np.full(p, 0xFFFFFFFF, np.uint32); d[:m.sum()] = vd[m]
+    g, _ = delete_edges(g, jnp.asarray(s), jnp.asarray(d))
+    return update_slab_pointers(g), vs, vd
+
+
+class TestReclaim:
+    def test_reclaims_exactly_the_dead_slabs(self):
+        rng = np.random.default_rng(31)
+        g, vs, vd = dead_slab_graph(rng)
+        st = pool_stats(g)
+        assert st["dead_slabs"] > 0
+        g2, n = reclaim_free_slabs(g)
+        assert n == st["dead_slabs"]
+        assert int(g2.free_top) == n
+        assert int(g2.next_free) == int(g.next_free)   # bump ptr untouched
+        # freed rows are scrubbed and on the list, ascending
+        fl = np.asarray(g2.free_list)[:n]
+        assert np.all(np.diff(fl) > 0)
+        assert np.all(np.asarray(g2.slab_vertex)[fl] == -1)
+        # queries identical
+        q = np.stack([vs[:4096], vd[:4096]])
+        f0 = np.asarray(query_edges(g, jnp.asarray(q[0]), jnp.asarray(q[1])))
+        f1 = np.asarray(query_edges(g2, jnp.asarray(q[0]), jnp.asarray(q[1])))
+        assert np.array_equal(f0, f1)
+        assert pool_stats(g2)["dead_slabs"] == 0
+
+    @pytest.mark.parametrize("impl", ENGINE_IMPLS)
+    def test_insert_drains_free_list_engine_equals_oracle(self, impl):
+        rng = np.random.default_rng(32)
+        g, _, _ = dead_slab_graph(rng)
+        g, _ = reclaim_free_slabs(g)
+        assert int(g.free_top) > 0
+        B = 1024
+        ins = np.stack([rng.integers(0, 40, B),
+                        rng.integers(200000, 300000, B)], 1).astype(np.uint32)
+        nf0, ft0 = int(g.next_free), int(g.free_top)
+        g_eng, m_eng = insert_edges(g, jnp.asarray(ins[:, 0]),
+                                    jnp.asarray(ins[:, 1]), **impl_kw(impl))
+        g_orc, m_orc = insert_edges_ref(g, jnp.asarray(ins[:, 0]),
+                                        jnp.asarray(ins[:, 1]))
+        assert tree_equal(g_eng, g_orc)
+        assert np.array_equal(np.asarray(m_eng), np.asarray(m_orc))
+        drained = ft0 - int(g_eng.free_top)
+        assert drained > 0, "free list not consumed"
+        # recycled slabs satisfy demand before the bump pointer moves
+        assert int(g_eng.next_free) - nf0 == 0 or drained == ft0
+
+    def test_updated_lane_mask_sees_recycled_slabs(self):
+        rng = np.random.default_rng(33)
+        g, _, _ = dead_slab_graph(rng)
+        g, _ = reclaim_free_slabs(g)
+        B = 512
+        ins = np.stack([rng.integers(0, 40, B),
+                        rng.integers(400000, 500000, B)], 1).astype(np.uint32)
+        g2, m = insert_edges(g, jnp.asarray(ins[:, 0]),
+                             jnp.asarray(ins[:, 1]))
+        mask = np.asarray(updated_lane_mask(g2))
+        assert mask.sum() == int(np.asarray(m).sum())
+        # some of this epoch's lanes really do sit below the old watermark
+        rows = np.nonzero(mask.any(axis=1))[0]
+        assert (rows < int(g.epoch_next_free)).any() or int(g.free_top) == 0
+
+    def test_sharded_reclaim(self):
+        from repro.distributed.sharded_graph import shard_from_edges_host
+        rng = np.random.default_rng(34)
+        V, S = 16, 4
+        src = np.repeat(np.arange(V, dtype=np.uint32), 300)
+        dst = rng.integers(0, 100000, len(src)).astype(np.uint32)
+        sg = shard_from_edges_host(V, S, src, dst)
+        from repro.distributed.sharded_graph import delete_edges_sharded
+        m = src < 4
+        sg, _ = delete_edges_sharded(sg, jnp.asarray(src[m]),
+                                     jnp.asarray(dst[m]))
+        import dataclasses
+        sg = dataclasses.replace(sg, graphs=update_slab_pointers(sg.graphs))
+        graphs, n = reclaim_shards(sg.graphs)
+        assert n > 0
+        assert int(jnp.sum(graphs.free_top)) == n
+
+
+# ============================================================================
+# churn regression: stores + policy vs set oracle
+# ============================================================================
+
+class TestChurnRegression:
+    def test_store_churn_vs_set_oracle_with_maintenance(self):
+        from repro.stream import GraphStore, MaintenancePolicy
+        rng = np.random.default_rng(41)
+        V = 400
+        src = rng.integers(0, V, 4000).astype(np.uint32)
+        dst = rng.integers(0, V, 4000).astype(np.uint32)
+        policy = MaintenancePolicy(tombstone_ratio=0.12)
+        store = GraphStore.from_edges(V, src, dst, hashing=False,
+                                      maintenance=policy)
+        plain = GraphStore.from_edges(V, src, dst, hashing=False)
+        ledger = set(zip(src.tolist(), dst.tolist()))
+        caps = []
+        for ep in range(12):
+            pool = np.array(sorted(ledger), np.uint32)
+            di = rng.choice(len(pool), 400, replace=False)
+            dels = pool[di]
+            ins = rng.integers(0, V, (600, 2)).astype(np.uint32)
+            ledger -= {(int(a), int(b)) for a, b in dels}
+            ledger |= {(int(a), int(b)) for a, b in ins}
+            for s in (store, plain):
+                s.apply(ins_src=ins[:, 0], ins_dst=ins[:, 1],
+                        del_src=dels[:, 0], del_dst=dels[:, 1])
+            caps.append(store.pool_stats()["capacity_slabs"])
+        assert store.maintenance_count > 0
+        # ≥30% deletes over ≥10 mixed epochs, results identical to the
+        # oracle AND to the unmaintained twin
+        pool = np.array(sorted(ledger), np.uint32)
+        neg = rng.integers(0, V, (1500, 2)).astype(np.uint32)
+        qs = np.concatenate([pool[:3000, 0], neg[:, 0]])
+        qd = np.concatenate([pool[:3000, 1], neg[:, 1]])
+        want = np.array([(int(a), int(b)) in ledger
+                         for a, b in zip(qs, qd)])
+        assert np.array_equal(store.query(qs, qd), want)
+        assert np.array_equal(plain.query(qs, qd), want)
+        # capacity bounded: never above the unmaintained twin's
+        assert caps[-1] <= plain.pool_stats()["capacity_slabs"]
+        assert max(caps) <= plain.pool_stats()["capacity_slabs"]
+        # all views stayed consistent (transpose/symmetric compacted too)
+        f0 = np.asarray(store.transpose.degree)
+        f1 = np.asarray(plain.transpose.degree)
+        assert np.array_equal(f0, f1)
+
+    def test_maintenance_batch_version_and_property_survival(self):
+        from repro.algorithms import pagerank_stream_property
+        from repro.stream import (GraphStore, MaintenancePolicy,
+                                  PropertyRegistry)
+        rng = np.random.default_rng(42)
+        V = 300
+        src = rng.integers(0, V, 3000).astype(np.uint32)
+        dst = rng.integers(0, V, 3000).astype(np.uint32)
+        store = GraphStore.from_edges(V, src, dst, hashing=False)
+        registry = PropertyRegistry(store)
+        registry.register(pagerank_stream_property(), policy="lazy")
+        seen = []
+        store.add_listener(lambda b: seen.append(b))
+        v0 = store.version
+        rec = store.maintain(action="compact")
+        assert rec is not None and rec.version == v0 + 1
+        assert store.version == v0 + 1
+        assert seen and seen[-1].maintenance
+        # lazy read replays past the maintenance batch without error and
+        # matches a recompute on the compacted store
+        pr = np.asarray(registry.read("pagerank"))
+        pr_ref = np.asarray(registry.refresh("pagerank"))
+        assert np.allclose(pr, pr_ref, atol=1e-6)
+        # batches_since exposes the maintenance epoch to late readers
+        missed = store.batches_since(v0)
+        assert len(missed) == 1 and missed[0].maintenance
+
+    def test_policy_triggers(self):
+        from repro.stream import COMPACT, RECLAIM, MaintenancePolicy
+        pol = MaintenancePolicy(tombstone_ratio=0.3, reclaim_dead_slabs=8)
+        base = dict(tombstone_ratio=0.0, mean_chain=1.0, occupancy=0.9,
+                    dead_slabs=0, allocated_slabs=10, capacity_slabs=64)
+        assert pol.decide(base, epochs_since=3) is None
+        a, why = pol.decide({**base, "tombstone_ratio": 0.4}, epochs_since=1)
+        assert a == COMPACT and "tombstone" in why
+        a, why = pol.decide({**base, "dead_slabs": 9}, epochs_since=1)
+        assert a == RECLAIM
+        pol2 = MaintenancePolicy(tombstone_ratio=0.0, every=4)
+        a, why = pol2.decide(base, epochs_since=4)
+        assert a == COMPACT and "every" in why
+        assert pol2.decide(base, epochs_since=3) is None
+
+    def test_sharded_store_maintenance(self):
+        from repro.stream import MaintenancePolicy, ShardedGraphStore
+        rng = np.random.default_rng(43)
+        V = 203
+        src = rng.integers(0, V, 4000).astype(np.uint32)
+        dst = rng.integers(0, V, 4000).astype(np.uint32)
+        store = ShardedGraphStore.from_edges(
+            V, 4, src, dst,
+            maintenance=MaintenancePolicy(tombstone_ratio=0.1))
+        ledger = set(zip(src.tolist(), dst.tolist()))
+        for ep in range(6):
+            pool = np.array(sorted(ledger), np.uint32)
+            di = rng.choice(len(pool), 400, replace=False)
+            dels = pool[di]
+            ins = rng.integers(0, V, (400, 2)).astype(np.uint32)
+            ledger -= {(int(a), int(b)) for a, b in dels}
+            ledger |= {(int(a), int(b)) for a, b in ins}
+            store.apply(ins_src=ins[:, 0], ins_dst=ins[:, 1],
+                        del_src=dels[:, 0], del_dst=dels[:, 1])
+        assert store.maintenance_count > 0
+        pool = np.array(sorted(ledger), np.uint32)
+        neg = rng.integers(0, V, (1000, 2)).astype(np.uint32)
+        qs = np.concatenate([pool[:2000, 0], neg[:, 0]])
+        qd = np.concatenate([pool[:2000, 1], neg[:, 1]])
+        want = np.array([(int(a), int(b)) in ledger
+                         for a, b in zip(qs, qd)])
+        assert np.array_equal(store.query(qs, qd), want)
+
+
+# ============================================================================
+# pool_stats + cold-build quantization satellites
+# ============================================================================
+
+class TestSatellites:
+    def test_pool_stats_accounting(self):
+        rng = np.random.default_rng(51)
+        g, src, dst = churned_graph(rng)
+        st = pool_stats(g)
+        assert st["live_lanes"] == int(g.n_edges)
+        assert 0.0 < st["tombstone_ratio"] < 1.0
+        assert st["capacity_slabs"] == g.capacity_slabs
+        assert st["max_chain"] >= st["mean_chain"] >= 1.0
+        assert st["free_slabs"] == \
+            g.capacity_slabs - int(g.next_free) + int(g.free_top)
+        g2, _ = compact(g)
+        st2 = pool_stats(g2)
+        assert st2["tombstone_lanes"] == 0
+        assert st2["live_lanes"] == st["live_lanes"]
+        assert st2["occupancy"] >= st["occupancy"]
+
+    def test_cold_build_capacity_is_pow2(self):
+        rng = np.random.default_rng(52)
+        for E in (100, 5000, 20000):
+            src = rng.integers(0, 500, E).astype(np.uint32)
+            dst = rng.integers(0, 500, E).astype(np.uint32)
+            g = from_edges_host(500, src, dst)
+            assert g.capacity_slabs == next_pow2(g.capacity_slabs)
+            gh = from_edges_host(500, src, dst, hashing=True)
+            assert gh.capacity_slabs == next_pow2(gh.capacity_slabs)
+
+    def test_cold_build_and_grown_share_shape_ladder(self):
+        # a cold-built store and one grown into the same size class land on
+        # the same pow2 capacity (same jit specialization)
+        rng = np.random.default_rng(53)
+        src = rng.integers(0, 500, 30000).astype(np.uint32)
+        dst = rng.integers(0, 500, 30000).astype(np.uint32)
+        cold = from_edges_host(500, src, dst)
+        small = from_edges_host(500, src[:1000], dst[:1000])
+        grown = ensure_capacity(small, cold.capacity_slabs -
+                                int(small.next_free))
+        assert grown.capacity_slabs == next_pow2(grown.capacity_slabs)
+
+    def test_ensure_capacity_counts_recycled_slabs(self):
+        rng = np.random.default_rng(54)
+        g, _, _ = dead_slab_graph(rng)
+        g, n = reclaim_free_slabs(g)
+        assert n > 0
+        headroom = g.capacity_slabs - int(g.next_free)
+        # demand just past the bump headroom but within headroom+free_top:
+        # the free list must absorb it with NO growth
+        g2 = ensure_capacity(g, headroom + n)
+        assert g2.capacity_slabs == g.capacity_slabs
+        g3 = ensure_capacity(g, headroom + n + 1)
+        assert g3.capacity_slabs > g.capacity_slabs
