@@ -90,3 +90,42 @@ def reduce_scatter_grads(grads: Any, axis_name: str, num_shards: int) -> Any:
         return jax.lax.psum_scatter(g, axis_name, scatter_dimension=0,
                                     tiled=True)
     return jax.tree.map(one, grads)
+
+
+# ----------------------------------------------------------------------------
+# shard-axis exchanges for the single-program sharded graph plane
+# (DESIGN.md §9): these run INSIDE a shard_map body over the ("shard",) mesh.
+# ----------------------------------------------------------------------------
+
+def exchange_buckets(buckets: Any, axis_name: str = "shard") -> Any:
+    """All-to-all the per-owner routing buckets.
+
+    Each shard holds ``(n_shards, cap, ...)`` buckets where row ``j`` is its
+    locally-owned-by-``j`` slice; after the tiled all-to-all, row ``i`` of
+    the result holds the edges SOURCE shard ``i`` routed to me, still in
+    source-local batch order.  Because the global batch is block-partitioned
+    (shard ``i`` holds positions ``[i*Bl, (i+1)*Bl)``) and the all-to-all
+    concatenates sources in shard order, flattening the received rows
+    preserves the global batch order — the property the slab-update engine's
+    leaf-for-leaf determinism contract rides on.
+    """
+    return jax.tree.map(
+        lambda x: jax.lax.all_to_all(x, axis_name, split_axis=0,
+                                     concat_axis=0, tiled=True), buckets)
+
+
+def gather_interleaved(x_local: jnp.ndarray, n_global: int,
+                       axis_name: str = "shard") -> jnp.ndarray:
+    """All-gather each shard's ``(n_local,)`` vertex vector and interleave
+    into the ``(V,)`` global order (vertex ``v`` lives at shard ``v % S``,
+    local id ``v // S`` — the collective form of ``reassemble_global``).
+    The per-super-step label/contrib exchange of the sharded analytics."""
+    full = jax.lax.all_gather(x_local, axis_name)        # (S, n_local)
+    return jnp.swapaxes(full, 0, 1).reshape(-1)[:n_global]
+
+
+def or_across_shards(partial_mask: jnp.ndarray,
+                     axis_name: str = "shard") -> jnp.ndarray:
+    """Combine per-shard partial boolean results (each batch position is
+    owned by exactly one shard) into the replicated full mask."""
+    return jax.lax.psum(partial_mask.astype(jnp.int32), axis_name) > 0

@@ -35,24 +35,70 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core import batch as B
 from ..core import slab_graph as SG
 from ..core.hashing import EMPTY_KEY, INVALID_SLAB, INVALID_VERTEX
 from ..core.slab_graph import next_pow2
 from ..kernels.slab_sweep.ops import sweep_vertices
+from .collectives import exchange_buckets, gather_interleaved
 
 UNREACHED = jnp.int32(2 ** 30)   # matches algorithms.bfs.UNREACHED
+
+SHARD_AXIS = "shard"
 
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=["graphs"],
-         meta_fields=["n_shards", "n_vertices_global"])
+         meta_fields=["n_shards", "n_vertices_global", "mesh"])
 @dataclasses.dataclass(frozen=True)
 class ShardedSlabGraph:
     graphs: SG.SlabGraph          # every data leaf has leading dim n_shards
     n_shards: int
     n_vertices_global: int
+    # the ("shard",) device mesh the stacked pools are pinned to, or None
+    # when they live wherever jit put them.  Meta (not data): mesh presence
+    # selects the shard_map single-program dispatch, so it must key jit
+    # specialisation.
+    mesh: Optional[Mesh] = None
+
+
+def graph_pspecs(graphs: SG.SlabGraph):
+    """Per-leaf ``P("shard", None, ...)`` specs for the stacked pools."""
+    return jax.tree.map(
+        lambda x: P(*((SHARD_AXIS,) + (None,) * (x.ndim - 1))), graphs)
+
+
+def place_on_mesh(sg: ShardedSlabGraph, mesh: Mesh) -> ShardedSlabGraph:
+    """Pin every stacked pool leaf under ``NamedSharding(P("shard", ...))``
+    so per-shard state lives on its device for its whole lifetime
+    (DESIGN.md §9).  The mesh must be 1-D, named ``("shard",)``, with one
+    device per shard; after placement the shard_map single-program dispatch
+    is auto-selected by the analytics and the sharded store."""
+    if tuple(mesh.axis_names) != (SHARD_AXIS,):
+        raise ValueError(f"expected a ('{SHARD_AXIS}',) mesh, got axes "
+                         f"{tuple(mesh.axis_names)}")
+    if mesh.devices.size != sg.n_shards:
+        raise ValueError(f"mesh has {mesh.devices.size} devices for "
+                         f"{sg.n_shards} shards (need exactly one each)")
+    specs = graph_pspecs(sg.graphs)
+    graphs = jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        sg.graphs, specs)
+    return dataclasses.replace(sg, graphs=graphs, mesh=mesh)
+
+
+def _resolve_dispatch(dispatch: str, mesh: Optional[Mesh]) -> str:
+    if dispatch == "auto":
+        return "shard_map" if mesh is not None else "vmap"
+    if dispatch not in ("vmap", "shard_map"):
+        raise ValueError(f"unknown dispatch {dispatch!r}")
+    if dispatch == "shard_map" and mesh is None:
+        raise ValueError("dispatch='shard_map' needs mesh-placed pools — "
+                         "call place_on_mesh(sg, mesh) first")
+    return dispatch
 
 
 def shard_empty(n_vertices_global: int, n_shards: int, *,
@@ -152,18 +198,27 @@ def reassemble_global(x_local: jnp.ndarray, n_vertices_global: int
     return jnp.swapaxes(x_local, 0, 1).reshape(-1)[:n_vertices_global]
 
 
-def ensure_capacity_sharded(sg: ShardedSlabGraph,
-                            extra_slabs: int) -> ShardedSlabGraph:
+def ensure_capacity_sharded(sg: ShardedSlabGraph, extra_slabs: int, *,
+                            high: Optional[int] = None) -> ShardedSlabGraph:
     """Host-side pool growth for the stacked pools (axis 1 = slab rows).
 
     Guarantees every shard has at least ``extra_slabs`` free slabs; grown
     capacities walk the same pow2 ladder as the unsharded
     ``ensure_capacity``.
+
+    ``high`` is a host-known upper bound on the worst shard's allocated
+    rows (max ``next_free``).  Passing it skips the blocking device read
+    below — the sharded store tracks it with exact per-epoch insert
+    accounting (the MaintenancePolicy O(1)-trigger trick), so steady-state
+    epochs never sync on pool state.  ``None`` falls back to reading the
+    device (one sync), using the tighter ``next_free - free_top`` headroom
+    that credits recyclable slabs.
     """
     g = sg.graphs
     cap = g.keys.shape[1]
-    # worst-case shard: least bump headroom after counting its recyclables
-    high = int(jnp.max(g.next_free - g.free_top))
+    if high is None:
+        # worst-case shard: least bump headroom after its recyclables
+        high = int(jnp.max(g.next_free - g.free_top))
     if cap - high >= extra_slabs:
         return sg
     target = max(high + extra_slabs, cap + cap // 2)
@@ -241,16 +296,83 @@ def route_edges(src: jnp.ndarray, dst: jnp.ndarray,
     return _route_body(src, dst, w, n_shards=n_shards, cap=cap)
 
 
+def _pow2ceil(n: int) -> int:
+    """Smallest power of two ≥ n, with a floor of 1 (``next_pow2``'s
+    ``bit_length`` floor can never return 1, but an empty batch routes into
+    a 1-wide bucket just fine)."""
+    return 1 if n <= 1 else 1 << (int(n) - 1).bit_length()
+
+
 def routing_cap(src, n_shards: int) -> int:
     """Host-side exact bucket sizing: pow2 of the max per-owner edge count
     (pow2 quantization bounds the jit specialisations a batch stream sees)."""
+    return _pow2ceil(max_owner_count(src, n_shards))
+
+
+def max_owner_count(src, n_shards: int) -> int:
+    """Host-side exact max per-owner edge count of a batch — sizes the vmap
+    routing buckets AND bounds the worst shard's slab allocation for the
+    store's host high-water accounting (worst case one slab per edge)."""
     src = np.asarray(src).astype(np.uint64)
     src = src[src != np.uint64(np.uint32(INVALID_VERTEX))]
     if src.size == 0:
-        return 1
+        return 0
     counts = np.bincount((src % n_shards).astype(np.int64),
                          minlength=n_shards)
-    return next_pow2(int(counts.max()), lo=1)
+    return int(counts.max())
+
+
+def routing_cap_blocks(src, n_shards: int, block: int) -> int:
+    """Bucket sizing for the shard_map route: each source shard holds one
+    contiguous ``block``-sized slice of the (padded) batch and buckets it
+    per owner, so the cap bounds the max per-(source block, owner) PAIR
+    count — typically ~1/S of the full-batch ``routing_cap``, which keeps
+    the post-exchange engine batch (``n_shards * cap``) the same size as
+    the vmap path's.  ``src`` is the UNPADDED host batch; the INVALID tail
+    padding routes nowhere and cannot raise any pair count."""
+    src = np.asarray(src).astype(np.uint64)
+    valid = src != np.uint64(np.uint32(INVALID_VERTEX))
+    if valid.size == 0 or block <= 0:
+        return 1
+    blk = np.arange(src.size) // block
+    own = (src % n_shards).astype(np.int64)
+    pair = blk * n_shards + own
+    counts = np.bincount(pair[valid],
+                         minlength=int(blk[-1] + 1) * n_shards)
+    return _pow2ceil(int(counts.max(initial=0)))
+
+
+def route_exchange(src, dst, w, *, n_shards: int, cap: int,
+                   axis_name: str = SHARD_AXIS):
+    """shard_map-local owner routing + all-to-all bucket exchange
+    (DESIGN.md §9) — the single-program replacement for running
+    ``_route_body`` replicated on the full batch.
+
+    Runs INSIDE a shard_map body on this shard's (Bl,) contiguous slice of
+    the global batch: buckets the local slice per owner (the same
+    sort/scatter plan as ``_route_body``, at 1/S the size), then exchanges
+    buckets so row ``i`` holds what source shard ``i`` routed here.
+    Flattened, the (n_shards*cap,) engine batch lists this shard's edges in
+    global batch order with INVALID padding at source-segment tails —
+    interior padding, unlike the vmap path's tail-only padding, but the
+    slab-update engine's plan is padding-position-independent (pads sort
+    last, run planning sees only the valid prefix, scatters drop), so pool
+    results stay leaf-for-leaf identical.
+
+    Returns ``(bsrc, bdst, bw, origin, overflow)`` flattened to
+    ``(n_shards*cap,)``; ``origin`` is in GLOBAL batch positions;
+    ``overflow`` is the shard-max witness (pmax — replicated).
+    """
+    n_local = src.shape[0]
+    me = jax.lax.axis_index(axis_name)
+    bsrc, bdst, bw, origin, over = _route_body(src, dst, w,
+                                               n_shards=n_shards, cap=cap)
+    origin = jnp.where(origin >= 0, origin + me * n_local, -1)
+    bsrc, bdst, origin = exchange_buckets((bsrc, bdst, origin), axis_name)
+    if bw is not None:
+        bw = exchange_buckets(bw, axis_name).reshape(-1)
+    return (bsrc.reshape(-1), bdst.reshape(-1), bw, origin.reshape(-1),
+            jax.lax.pmax(over, axis_name))
 
 
 def _resolve_routing(sg: ShardedSlabGraph, src, dst, w, cap: Optional[int]):
@@ -368,41 +490,52 @@ def apply_update_sharded(sg: ShardedSlabGraph, ins_src=None, ins_dst=None,
 # ----------------------------------------------------------------------------
 # distributed analytics on the slab-sweep engine
 # ----------------------------------------------------------------------------
+#
+# Each algorithm is one fixpoint loop over "global sweep" super-steps.  The
+# loop math is shared between dispatch modes so they stay bit-identical:
+#
+#   * dispatch="vmap"      — the engine sweep vmapped over the stacked shard
+#     dim; the exchange is a ``reassemble_global`` reshape.  Runs anywhere
+#     (the bit-exact fallback).
+#   * dispatch="shard_map" — ONE shard_map program over the ("shard",) mesh:
+#     the whole while_loop runs per shard (SPMD — every shard computes the
+#     replicated convergence state identically), the exchange is an
+#     ``all_gather`` over the shard axis, and each shard returns only its
+#     strided slice of the result.  Needs mesh-placed pools
+#     (``place_on_mesh``).
+#   * dispatch="auto"      — shard_map iff ``sg.mesh`` is set.
+#
+# ``rows`` statically bounds every sweep to the allocated pool prefix
+# (bit-identical — see ``slab_sweep.ops``); the sharded store supplies it
+# from host high-water accounting so sweeps never pay for pow2 slack.
 
-@partial(jax.jit, static_argnames=("damping", "max_iter", "impl"))
-def pagerank_sharded(sg_in: ShardedSlabGraph, out_degree: jnp.ndarray, *,
-                     init_pr: Optional[jnp.ndarray] = None,
-                     damping: float = 0.85, error_margin: float = 1e-5,
-                     max_iter: int = 100,
-                     impl: str = "auto") -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Distributed PageRank over the IN-edge sharded graph.
+def _pagerank_fix(sums_local_of, V, pr0, out_degree, damping, error_margin,
+                  max_iter, slice_local, exchange):
+    """The PageRank fixpoint with owned-slice vector math — shared by both
+    dispatch modes so their per-super-step math is bit-identical.
 
-    Per super-step each shard runs ONE slab-sweep engine sum sweep
-    (``sweep_vertices`` vmapped over the shard dim, global-key bound
-    ``n_keys=V``); the only cross-shard traffic is the reassembly of the
-    global contrib vector ((V,) f32 — an all-gather over the shard axis)
-    consumed by every shard's gather.  ``out_degree`` is the GLOBAL
-    out-degree vector.
-    """
-    V = sg_in.n_vertices_global
-    pr0 = (jnp.full((V,), 1.0 / V, jnp.float32) if init_pr is None
-           else init_pr.astype(jnp.float32))
+    The elementwise update (contrib, rank refresh) runs on each shard's
+    owned ``(n_local,)`` slice (stacked under vmap), so the per-super-step
+    O(V) elementwise work drops to O(V / n_shards) per shard instead of
+    being replicated on every shard.  Only the replicated global
+    reductions (teleport mass, L1 delta) read the exchanged ``(V,)``
+    vectors — identical arrays in both modes, so nothing regroups and the
+    modes stay bit-identical (and the values stay elementwise-identical to
+    the replicated form this replaces)."""
     zero_out = out_degree == 0
     has_sink = jnp.any(zero_out)
-
-    def shard_sums(contrib):
-        return jax.vmap(lambda g: sweep_vertices(
-            g, contrib, semiring="sum", n_keys=V, impl=impl))(sg_in.graphs)
+    deg_loc = slice_local(out_degree)
+    base = (1.0 - damping) / V
 
     def body(carry):
         pr, _, it = carry
-        contrib = jnp.where(out_degree > 0,
-                            pr / jnp.maximum(out_degree, 1), 0.0)
-        sums_local = shard_sums(contrib)                  # (S, n_local)
-        sums = reassemble_global(sums_local, V)
-        new_pr = (1.0 - damping) / V + damping * sums
+        pr_loc = slice_local(pr)
+        contrib = exchange(jnp.where(deg_loc > 0,
+                                     pr_loc / jnp.maximum(deg_loc, 1), 0.0))
+        new_loc = base + damping * sums_local_of(contrib)
         teleport = jnp.sum(jnp.where(zero_out, pr, 0.0)) / V
-        new_pr = jnp.where(has_sink, new_pr + damping * teleport, new_pr)
+        new_loc = jnp.where(has_sink, new_loc + damping * teleport, new_loc)
+        new_pr = exchange(new_loc)
         delta = jnp.sum(jnp.abs(new_pr - pr))
         return new_pr, delta, it + 1
 
@@ -410,58 +543,165 @@ def pagerank_sharded(sg_in: ShardedSlabGraph, out_degree: jnp.ndarray, *,
         _, delta, it = carry
         return (delta > error_margin) & (it < max_iter)
 
-    pr, _, iters = jax.lax.while_loop(
+    return jax.lax.while_loop(
         cond, body, (pr0, jnp.asarray(jnp.inf, jnp.float32),
                      jnp.asarray(0, jnp.int32)))
-    return pr, iters
 
 
-@partial(jax.jit, static_argnames=("max_iters", "impl"))
-def wcc_sharded(sg_sym: ShardedSlabGraph, *,
-                init_labels: Optional[jnp.ndarray] = None,
-                max_iters: int = 100000,
-                impl: str = "auto") -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Distributed WCC: frontier-masked min-label sweeps over the SYMMETRIC
-    sharded adjacency to a fixpoint.  Integer min is exact, so the labels
-    (min vertex id per component) are bit-identical to
-    ``wcc_labelprop_sweep`` on the unsharded union.  ``init_labels`` warm
-    starts insert-only incremental runs (labels only ever decrease).
-    """
-    V = sg_sym.n_vertices_global
-    labels0 = (jnp.arange(V, dtype=jnp.int32) if init_labels is None
-               else init_labels.astype(jnp.int32))
-    changed0 = jnp.ones((V,), bool)
-
+def _minfix(min_of, x0, changed0, max_iters):
+    """Frontier-masked monotone-min fixpoint (WCC labels / BFS levels)."""
     def cond(carry):
         _, changed, it = carry
         return jnp.any(changed) & (it < max_iters)
 
     def body(carry):
-        labels, changed, it = carry
-        nbr = jax.vmap(lambda g: sweep_vertices(
-            g, labels, semiring="min", frontier=changed, n_keys=V,
-            impl=impl))(sg_sym.graphs)
-        new = jnp.minimum(labels, reassemble_global(nbr, V))
-        return new, new < labels, it + 1
+        x, changed, it = carry
+        new = jnp.minimum(x, min_of(x, changed))
+        return new, new < x, it + 1
 
-    labels, _, iters = jax.lax.while_loop(
-        cond, body, (labels0, changed0, jnp.asarray(0, jnp.int32)))
-    return labels, iters
+    return jax.lax.while_loop(
+        cond, body, (x0, changed0, jnp.asarray(0, jnp.int32)))
 
 
-@partial(jax.jit, static_argnames=("src", "max_iters", "impl"))
+def _local_slice_idx(V: int, n_shards: int, me) -> jnp.ndarray:
+    """Global ids owned by shard ``me`` (strided; tail clamped — the clamp
+    positions land past V after reassembly and are trimmed)."""
+    n_local = -(-V // n_shards)
+    return jnp.minimum(jnp.arange(n_local) * n_shards + me, V - 1)
+
+
+def _run_sharded_fix(sg: ShardedSlabGraph, dispatch, rows, fix_of, consts):
+    """Dispatch one analytics fixpoint.
+
+    ``fix_of(sweep, exchange, slice_local, *consts)`` must return the
+    while_loop carry where element 0 is the (V,) result and element 2 the
+    iteration counter; ``sweep(values, frontier, kw)`` is per-shard-local,
+    ``exchange`` lifts the per-shard local vector(s) to the (V,) global
+    one, and ``slice_local`` is its inverse — the owned strided slice of a
+    replicated (V,) vector (stacked (S, n_local) under vmap), for fixpoints
+    that keep their elementwise math per shard.  ``consts`` are the traced
+    global vectors the fixpoint reads — passed as explicit replicated
+    shard_map inputs (bodies cannot close over tracers).
+    """
+    V, S = sg.n_vertices_global, sg.n_shards
+    dispatch = _resolve_dispatch(dispatch, sg.mesh)
+
+    if dispatch == "vmap":
+        idx_all = jnp.stack([_local_slice_idx(V, S, s) for s in range(S)])
+
+        def exchange(x_stacked):
+            return reassemble_global(x_stacked, V)
+
+        def slice_local(x_glob):
+            return x_glob[idx_all]
+
+        def sweep(values, frontier, sweep_kw):
+            return jax.vmap(lambda g: sweep_vertices(
+                g, values, frontier=frontier, n_keys=V, rows=rows,
+                **sweep_kw))(sg.graphs)
+        out = fix_of(sweep, exchange, slice_local, *consts)
+        return out[0], out[2]
+
+    def body_shard(graphs_blk, *consts_in):
+        g = jax.tree.map(lambda x: x[0], graphs_blk)
+        me = jax.lax.axis_index(SHARD_AXIS)
+
+        def exchange(x_local):
+            return gather_interleaved(x_local, V, SHARD_AXIS)
+
+        def slice_local(x_glob):
+            return x_glob[_local_slice_idx(V, S, me)]
+
+        def sweep(values, frontier, sweep_kw):
+            return sweep_vertices(g, values, frontier=frontier, n_keys=V,
+                                  rows=rows, **sweep_kw)
+        out = fix_of(sweep, exchange, slice_local, *consts_in)
+        # every shard holds the identical replicated result; emit only the
+        # strided slice this shard owns (+ its copy of the iter counter)
+        return out[0][_local_slice_idx(V, S, me)][None], out[2][None]
+
+    res_loc, iters = shard_map(
+        body_shard, mesh=sg.mesh,
+        in_specs=(graph_pspecs(sg.graphs),) + tuple(P() for _ in consts),
+        out_specs=(P(SHARD_AXIS, None), P(SHARD_AXIS)),
+        check_rep=False)(sg.graphs, *consts)
+    return reassemble_global(res_loc, V), iters[0]
+
+
+@partial(jax.jit, static_argnames=("damping", "max_iter", "impl", "rows",
+                                   "dispatch"))
+def pagerank_sharded(sg_in: ShardedSlabGraph, out_degree: jnp.ndarray, *,
+                     init_pr: Optional[jnp.ndarray] = None,
+                     damping: float = 0.85, error_margin: float = 1e-5,
+                     max_iter: int = 100, impl: str = "auto",
+                     rows: Optional[int] = None, dispatch: str = "auto"
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Distributed PageRank over the IN-edge sharded graph.
+
+    Per super-step each shard runs ONE slab-sweep engine sum sweep
+    (global-key bound ``n_keys=V``); the only cross-shard traffic is the
+    reassembly of the global contrib vector ((V,) f32 — an all_gather over
+    the shard axis under ``dispatch="shard_map"``, a stacked reshape under
+    ``"vmap"``; bit-identical either way).  ``out_degree`` is the GLOBAL
+    out-degree vector; ``rows`` statically bounds the sweeps to the
+    allocated pool prefix.
+    """
+    V = sg_in.n_vertices_global
+    pr0 = (jnp.full((V,), 1.0 / V, jnp.float32) if init_pr is None
+           else init_pr.astype(jnp.float32))
+
+    def fix_of(sweep, exchange, slice_local, pr0, out_degree):
+        def sums_local_of(contrib):
+            return sweep(contrib, None, dict(semiring="sum", impl=impl))
+        return _pagerank_fix(sums_local_of, V, pr0, out_degree, damping,
+                             error_margin, max_iter, slice_local, exchange)
+
+    return _run_sharded_fix(sg_in, dispatch, rows, fix_of,
+                            (pr0, out_degree))
+
+
+@partial(jax.jit, static_argnames=("max_iters", "impl", "rows", "dispatch"))
+def wcc_sharded(sg_sym: ShardedSlabGraph, *,
+                init_labels: Optional[jnp.ndarray] = None,
+                max_iters: int = 100000, impl: str = "auto",
+                rows: Optional[int] = None, dispatch: str = "auto"
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Distributed WCC: frontier-masked min-label sweeps over the SYMMETRIC
+    sharded adjacency to a fixpoint.  Integer min is exact, so the labels
+    (min vertex id per component) are bit-identical to
+    ``wcc_labelprop_sweep`` on the unsharded union — and between dispatch
+    modes.  ``init_labels`` warm starts insert-only incremental runs
+    (labels only ever decrease).
+    """
+    V = sg_sym.n_vertices_global
+    labels0 = (jnp.arange(V, dtype=jnp.int32) if init_labels is None
+               else init_labels.astype(jnp.int32))
+
+    def fix_of(sweep, exchange, _slice, labels0):
+        def min_of(labels, changed):
+            return exchange(sweep(labels, changed, dict(semiring="min",
+                                                        impl=impl)))
+        return _minfix(min_of, labels0, jnp.ones((V,), bool), max_iters)
+
+    return _run_sharded_fix(sg_sym, dispatch, rows, fix_of, (labels0,))
+
+
+@partial(jax.jit, static_argnames=("src", "max_iters", "impl", "rows",
+                                   "dispatch"))
 def bfs_sharded(sg_in: ShardedSlabGraph, *, src: int,
                 init_dist: Optional[jnp.ndarray] = None,
-                max_iters: int = 100000,
-                impl: str = "auto") -> Tuple[jnp.ndarray, jnp.ndarray]:
+                max_iters: int = 100000, impl: str = "auto",
+                rows: Optional[int] = None, dispatch: str = "auto"
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Distributed level-synchronous BFS over the IN-edge sharded graph.
 
     Per super-step each shard relaxes with ONE unit-weight min-plus sweep
-    masked to the changed frontier; the reassembled global distance vector
-    IS the cross-shard frontier exchange.  Distances are integer levels
+    masked to the changed frontier; the exchanged global distance vector IS
+    the cross-shard frontier exchange.  Distances are integer levels
     (UNREACHED = 2^30), bit-identical to ``bfs_vanilla`` on the unsharded
-    union.  ``init_dist`` warm starts insert-only incremental runs
-    (valid upper bounds only ever decrease under Bellman-Ford).
+    union and between dispatch modes.  ``init_dist`` warm starts
+    insert-only incremental runs (valid upper bounds only ever decrease
+    under Bellman-Ford).
     """
     V = sg_in.n_vertices_global
     if init_dist is None:
@@ -471,18 +711,11 @@ def bfs_sharded(sg_in: ShardedSlabGraph, *, src: int,
         dist0 = init_dist.astype(jnp.int32).at[src].set(0)
         changed0 = dist0 < UNREACHED
 
-    def cond(carry):
-        _, changed, it = carry
-        return jnp.any(changed) & (it < max_iters)
+    def fix_of(sweep, exchange, _slice, dist0, changed0):
+        def min_of(dist, changed):
+            return exchange(sweep(dist, changed, dict(semiring="min_plus",
+                                                      impl=impl)))
+        return _minfix(min_of, dist0, changed0, max_iters)
 
-    def body(carry):
-        dist, changed, it = carry
-        cand = jax.vmap(lambda g: sweep_vertices(
-            g, dist, semiring="min_plus", frontier=changed, n_keys=V,
-            impl=impl))(sg_in.graphs)
-        new = jnp.minimum(dist, reassemble_global(cand, V))
-        return new, new < dist, it + 1
-
-    dist, _, iters = jax.lax.while_loop(
-        cond, body, (dist0, changed0, jnp.asarray(0, jnp.int32)))
-    return dist, iters
+    return _run_sharded_fix(sg_in, dispatch, rows, fix_of,
+                            (dist0, changed0))

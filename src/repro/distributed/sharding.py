@@ -9,6 +9,17 @@ Axes convention (launch/mesh.py):
 Models call ``constrain(x, "<name>")`` at the few points that matter (scan
 carry, logits, MoE dispatch buffers, node/edge tables); outside a rules
 context this is the identity, so all smoke tests run unsharded on CPU.
+
+The dynamic-graph plane uses its own flat ``("shard",)`` mesh
+(distributed/sharded_graph.py::SHARD_AXIS) for vertex-partitioned pools
+— deliberately a separate axis name from the model axes above, so a
+graph mesh can be carved from the same device grid as a
+("data", "model") mesh without spec collisions: ``constrain`` rules
+never mention "shard", and the graph plane's shard_map programs never
+mention "data"/"model".  To co-locate both planes on one grid, build the
+graph mesh over a sub-grid (or reuse all devices flattened) and keep the
+two contexts disjoint; pool leaves carry NamedSharding(mesh,
+P("shard", ...)) via place_on_mesh.
 """
 from __future__ import annotations
 

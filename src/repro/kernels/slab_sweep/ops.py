@@ -34,6 +34,29 @@ from .ref import SEMIRINGS, slab_sweep_ref
 _MIN_FAMILY = ("min", "min_plus", "arg_min_plus")
 
 
+def _slice_rows(g: SlabGraph, rows: Optional[int],
+                rows_per_block: int) -> SlabGraph:
+    """Statically bound the sweep to the first ``rows`` pool rows.
+
+    ``rows`` is a host-known upper bound on the allocated region (max
+    ``next_free`` across shards, e.g. the sharded store's high-water
+    accounting).  Rows past ``next_free`` hold no live keys
+    (``slab_vertex == -1``, EMPTY lanes), so dropping them leaves every
+    semiring result bit-identical while the gather/reduce shrinks from
+    pool capacity to the allocated prefix.  The bound is rounded up to a
+    ``rows_per_block`` multiple so the Pallas grid stays whole-block.
+    """
+    if rows is None:
+        return g
+    rows = -(-int(rows) // rows_per_block) * rows_per_block
+    if rows >= g.keys.shape[0]:
+        return g
+    import dataclasses
+    return dataclasses.replace(
+        g, keys=g.keys[:rows], slab_vertex=g.slab_vertex[:rows],
+        weights=None if g.weights is None else g.weights[:rows])
+
+
 def _resolve(impl: str, interpret: Optional[bool]):
     on_tpu = jax.default_backend() == "tpu"
     if impl == "auto":
@@ -51,6 +74,7 @@ def sweep_partials(g: SlabGraph, values: jnp.ndarray, *, semiring: str,
                    weighted: Optional[bool] = None,
                    n_keys: Optional[int] = None,
                    impl: str = "auto", rows_per_block: int = 256,
+                   rows: Optional[int] = None,
                    interpret: Optional[bool] = None) -> jnp.ndarray:
     """(S,) semiring partials over the pool.
 
@@ -63,9 +87,16 @@ def sweep_partials(g: SlabGraph, values: jnp.ndarray, *, semiring: str,
     the sharded plane stores GLOBAL neighbor ids in shard-local pools, so
     it passes the global vertex count here (``values``/``frontier`` are
     then global vectors while the owner axis stays shard-local).
+    ``rows`` (static) bounds the sweep to the allocated pool prefix —
+    see ``_slice_rows``; results are bit-identical to the full sweep.
+    This entry point is shard_map-compatible: called on a shard-local
+    ``SlabGraph`` block inside a ``shard_map`` body it traces per-shard
+    collective-free code (the sharded plane composes it with
+    ``all_gather``/``psum`` exchanges).
     """
     if semiring not in SEMIRINGS:
         raise ValueError(f"unknown semiring {semiring!r}")
+    g = _slice_rows(g, rows, rows_per_block)
     if weighted is None:
         weighted = g.weighted and semiring in ("min_plus", "arg_min_plus")
     weights = g.weights if weighted else None
@@ -92,14 +123,19 @@ def sweep_vertices(g: SlabGraph, values: jnp.ndarray, *, semiring: str,
                    weighted: Optional[bool] = None,
                    n_keys: Optional[int] = None,
                    impl: str = "auto", rows_per_block: int = 256,
+                   rows: Optional[int] = None,
                    interpret: Optional[bool] = None) -> jnp.ndarray:
     """(V,) per-vertex semiring reduction: partials folded over slab_vertex.
 
     Output lands at the slab *owner* (the pull direction): run on the
     in-edge/transposed graph for push-style relaxations — see DESIGN.md §3.
     On sharded pools the output stays shard-local ((n_local,) per shard)
-    while ``n_keys`` widens the gather to the global id space.
+    while ``n_keys`` widens the gather to the global id space.  ``rows``
+    statically bounds the sweep to the allocated prefix (bit-identical —
+    sliced-out rows contribute only semiring identities); shard_map-safe
+    like ``sweep_partials``.
     """
+    g = _slice_rows(g, rows, rows_per_block)
     partials = sweep_partials(g, values, semiring=semiring, frontier=frontier,
                               target=target, weighted=weighted, n_keys=n_keys,
                               impl=impl, rows_per_block=rows_per_block,

@@ -570,7 +570,28 @@ def update_views(views: Tuple[SlabGraph, ...], roles: Tuple[str, ...],
               use_commit_kernel=use_commit_kernel)
 
 
+# ----------------------------------------------------------------------------
+# shard_map-compatible local entry points (DESIGN.md §9)
+#
+# The traced engine bodies are safe to call INSIDE a ``shard_map`` body on a
+# shard-local SlabGraph: they contain no host sync, no jit boundary, and no
+# collective — every batch position is processed independently, INVALID
+# padding rows sort last and scatter with ``mode="drop"``, so the resulting
+# pools are a function of the valid edges' relative order only (not of the
+# padding POSITIONS).  That padding-position independence is what makes the
+# single-program sharded epoch bit-identical to the vmap fallback even though
+# the all-to-all routed batches carry interior (not tail) padding.  The
+# ``*_local`` aliases are that contract's public names; the jitted
+# ``query/insert/delete_edges`` wrappers above remain the single-graph API.
+# ----------------------------------------------------------------------------
+
+query_edges_local = _query_body
+insert_edges_local = _insert_body
+delete_edges_local = _delete_body
+
+
 __all__ = ["IMPLS", "FORWARD", "TRANSPOSE", "SYMMETRIC",
            "query_edges", "insert_edges", "delete_edges",
+           "query_edges_local", "insert_edges_local", "delete_edges_local",
            "apply_update", "update_views", "update_shards", "query_shards",
            "slab_probe_pallas", "slab_commit_pallas"]

@@ -348,6 +348,11 @@ def graph_cell(cfg: Dict, shape: Dict, mesh: Optional[Mesh]):
     shard_spec_of = lambda x: P(*((axes,) + (None,) * (x.ndim - 1)))
     g_specs = jax.tree.map(
         lambda x: shard_spec_of(x) if x.ndim >= 1 else P(), sg_shape.graphs)
+    # mesh meta stays None here: this cell compiles the vmap/GSPMD form where
+    # the compiler partitions the stacked shard dim via in_shardings; the
+    # explicit single-program form (DESIGN.md §9) is entered by
+    # place_on_mesh() + dispatch="shard_map" and is benchmarked separately in
+    # benchmarks/sharded_bench.py rather than through the launch plane.
     sg_specs = SGR.ShardedSlabGraph(graphs=g_specs, n_shards=n_shards,
                                     n_vertices_global=V)
 

@@ -14,17 +14,26 @@ distribution rules:
      own source — the per-view routing steps are the only global exchanges
      of the epoch;
   2. routing buckets are sized on the host from the TRUE max per-owner run
-     length (pow2-quantized — ``routing_cap``), so a skewed batch that
-     lands entirely on one shard still routes every edge: overflow is
-     impossible by construction, never silently dropped;
+     length (pow2-quantized, sticky across epochs — caps only ratchet up,
+     reset at maintenance), so a skewed batch that lands entirely on one
+     shard still routes every edge: overflow is impossible by
+     construction, never silently dropped — and a drifting batch mix does
+     not walk jit specialisations (``recompile_count`` tracks them);
   3. deletes before inserts; the symmetric union consults the post-delete
      forward view (a routed sharded query inside the same dispatch);
-  4. every shard's pools mutate through the donated slab-update engine
-     (``_apply_update_body`` vmapped over the shard dim) — the same fused
-     kernel path the single-graph store uses, not the legacy per-op chain;
+  4. every shard's pools mutate through the donated slab-update engine —
+     the same fused kernel path the single-graph store uses, not the
+     legacy per-op chain.  Two dispatch renderings, leaf-for-leaf
+     identical: the stacked-``vmap`` fallback (runs anywhere), and the
+     single-program ``shard_map`` epoch over the ("shard",) mesh
+     (``place_on_mesh`` — per-shard routing + ``all_to_all`` bucket
+     exchange, donated pools pinned to their devices; DESIGN.md §9);
   5. epochs close via ``update_slab_pointers`` on the stacked pools; the
      monotonic ``version``, bounded batch log, and listener protocol are
-     identical to ``GraphStore`` — ``PropertyRegistry`` works unchanged.
+     identical to ``GraphStore`` — ``PropertyRegistry`` works unchanged;
+  6. capacity headroom and analytics sweep bounds come from host-exact
+     high-water accounting (``_high``/``sweep_rows``) — steady-state
+     epochs never block on a device read.
 
 Sharded ``stream_property`` hooks live here too (PageRank / WCC / BFS over
 the sharded views via the slab-sweep engine's global-key sweeps).
@@ -37,19 +46,26 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
-from ..core.slab_graph import update_slab_pointers
+from ..core.slab_graph import next_pow2, update_slab_pointers
 from ..core.hashing import INVALID_VERTEX, SLAB_WIDTH
 from ..core.worklist import EdgeFrontier, expand_vertices
-from ..distributed.sharded_graph import (ShardedSlabGraph, _route_body,
-                                         _scatter_back,
+from ..distributed.collectives import or_across_shards
+from ..distributed.sharded_graph import (SHARD_AXIS, ShardedSlabGraph,
+                                         _route_body, _scatter_back,
                                          ensure_capacity_sharded,
-                                         bfs_sharded, pagerank_sharded,
-                                         reassemble_global, routing_cap,
+                                         bfs_sharded, graph_pspecs,
+                                         max_owner_count, pagerank_sharded,
+                                         reassemble_global, route_exchange,
+                                         routing_cap, routing_cap_blocks,
                                          shard_from_edges_host, shard_slice,
                                          wcc_sharded)
-from ..kernels.slab_update.ops import (_copy_aliased, _delete_body,
-                                       _insert_body, _query_body)
+from ..distributed.sharded_graph import place_on_mesh as _place_graph
+from ..kernels.slab_update.ops import (_copy_aliased, delete_edges_local,
+                                       insert_edges_local,
+                                       query_edges_local)
 from .store import (ALL_VIEWS, FORWARD, SYMMETRIC, TRANSPOSE, AppliedBatch,
                     VersionedStoreBase, _pad_f32, _pad_u32, _pow2,
                     canonical_batch, dedup_pairs)
@@ -71,14 +87,14 @@ def _sharded_apply_body(views, ins, dels, *, roles, n_shards, caps,
     def vdel(sg, s, d, cap):
         bs, bd, _, origin, _ = _route_body(s, d, None, n_shards=n_shards,
                                            cap=cap)
-        g, m = jax.vmap(lambda g, a, b: _delete_body(g, a, b, **kw))(
+        g, m = jax.vmap(lambda g, a, b: delete_edges_local(g, a, b, **kw))(
             sg.graphs, bs, bd)
         return dataclasses.replace(sg, graphs=g), m, origin
 
     def vins(sg, s, d, w, cap):
         bs, bd, bw, origin, _ = _route_body(s, d, w, n_shards=n_shards,
                                             cap=cap)
-        g, m = jax.vmap(lambda g, a, b, c: _insert_body(g, a, b, c, **kw))(
+        g, m = jax.vmap(lambda g, a, b, c: insert_edges_local(g, a, b, c, **kw))(
             sg.graphs, bs, bd, bw)
         return dataclasses.replace(sg, graphs=g), m, origin
 
@@ -98,7 +114,7 @@ def _sharded_apply_body(views, ins, dels, *, roles, n_shards, caps,
                 bs, bd, _, qorig, _ = _route_body(dd, ds, None,
                                                   n_shards=n_shards,
                                                   cap=tr_del)
-                found = jax.vmap(lambda g, a, b: _query_body(
+                found = jax.vmap(lambda g, a, b: query_edges_local(
                     g, a, b, impl=impl, interpret=interpret,
                     queries_per_tile=queries_per_tile))(
                     views[fidx].graphs, bs, bd)
@@ -124,6 +140,11 @@ def _sharded_apply_body(views, ins, dels, *, roles, n_shards, caps,
                 views[i], _, _ = vins(views[i], jnp.concatenate([s, d]),
                                       jnp.concatenate([d, s]), w2, sym_ins)
 
+    # epoch close folded into the same dispatch: update_slab_pointers is an
+    # elementwise field replace, so running it on the stacked pools here
+    # saves one jitted dispatch per view per epoch on the store hot path
+    views = [dataclasses.replace(v, graphs=update_slab_pointers(v.graphs))
+             for v in views]
     return tuple(views), ins_mask, del_mask
 
 
@@ -131,6 +152,187 @@ _APPLY_STATIC = ("roles", "n_shards", "caps", "impl", "interpret",
                  "queries_per_tile")
 _apply_jit_don = jax.jit(_sharded_apply_body, static_argnames=_APPLY_STATIC,
                          donate_argnums=(0,))
+
+
+def _cap_rung(n: int) -> int:
+    """Sticky-cap quantization: pow2 rungs up to 256, multiples of 256 past
+    that.  The pure pow2 ladder wastes up to 2× engine batch width at large
+    caps (a 1100-edge hot owner pays a 2048-wide bucket); the sticky ratchet
+    already bounds how many rungs a drifting stream can visit, so finer
+    rungs cost few extra specialisations."""
+    if n <= 256:
+        return next_pow2(n, lo=1)
+    return -(-int(n) // 256) * 256
+
+
+def _sym_concat_u32(a, b, p: int) -> np.ndarray:
+    """Host (2p,) symmetric-candidate layout: the two halves each padded to
+    ``p`` with INVALID — matching ``concatenate([pad(a), pad(b)])``, the
+    exact batch the vmap body builds on device."""
+    out = np.full(2 * p, INVALID_VERTEX, np.uint32)
+    out[:len(a)] = a
+    out[p:p + len(b)] = b
+    return out
+
+
+# ----------------------------------------------------------------------------
+# the single-program epoch: the same multi-view route+mutate, but as ONE
+# shard_map dispatch over the ("shard",) mesh (DESIGN.md §9).  Routing is a
+# per-shard bucket sort + all_to_all exchange (1/S the sort work of the
+# replicated vmap route), the one replicated value is the symmetric plane's
+# reverse-existence mask (a psum), and the donated pools never leave their
+# device.  Pool results are leaf-for-leaf identical to the vmap body.
+# ----------------------------------------------------------------------------
+
+def _sharded_apply_sm(views, dels, ins, *, roles, n_shards, caps, mesh,
+                      impl="auto", interpret=None, queries_per_tile=256):
+    """views: tuple of STACKED SlabGraph pytrees (one per role), placed
+    under P("shard", ...).  Batches are (B,) device arrays with B a
+    multiple of n_shards.  ``caps`` carries four (pair, total) cap tuples
+    — forward/transpose × delete/insert — plus two plain symmetric totals:
+    the symmetric plane needs no exchange of its own (it rides the forward
+    and transpose exchanges, see below), only a compaction width."""
+    kwq = dict(impl=impl, interpret=interpret,
+               queries_per_tile=queries_per_tile)
+    kw = dict(use_commit_kernel=False, **kwq)
+    fwd_del, tr_del, sym_del, fwd_ins, tr_ins, sym_ins = caps
+    fidx = roles.index(FORWARD)
+    need_rev = len(roles) > 1
+
+    def _body(graphs_blk, dl, il):
+        gs = [jax.tree.map(lambda x: x[0], g) for g in graphs_blk]
+        ins_part = del_part = None
+
+        def route(s, d, w, cap):
+            # two-level cap: route with per-(source block, owner) PAIR
+            # buckets, then compact the received interior-padded
+            # (S*cap_pair,) flatten down to the vmap bucket layout —
+            # valid-first (stable sort -> global batch order preserved),
+            # tail-padded to the per-owner TOTAL cap.  The engine batch is
+            # then the same width as the vmap path bucket row and, under
+            # skewed batches, ~S x smaller than the uncompacted flatten
+            # (the pow2 pair caps inflate hard when one source block
+            # concentrates on one owner).
+            cap_pair, cap_tot = cap
+            bs, bd, bw, orig, over = route_exchange(
+                s, d, w, n_shards=n_shards, cap=cap_pair)
+            if cap_tot < bs.shape[0]:
+                perm = jnp.argsort(orig < 0, stable=True)[:cap_tot]
+                bs, bd, orig = bs[perm], bd[perm], orig[perm]
+                if bw is not None:
+                    bw = bw[perm]
+            return bs, bd, bw, orig, over
+
+        def compact(cap_tot, s, d, w=None):
+            # the symmetric ride-along concat is fwd_tot + tr_tot wide,
+            # but the true per-owner candidate max — computed on host
+            # from the (2B,) concat, exactly how the vmap path sizes its
+            # own symmetric bucket — is often much smaller under skewed
+            # batches, and the engine pays per batch column.  Valid-first
+            # stable compaction preserves the global candidate order, so
+            # the result is the vmap symmetric bucket leaf-for-leaf.
+            # Under hub skew both candidate halves land on the same owner
+            # and cap_tot ~= the concat width — there the sort costs more
+            # than the saved columns, so only compact on a >= 2x width
+            # reduction (the engine is padding-position independent, so
+            # pools are identical either way).
+            if cap_tot * 2 > s.shape[0]:
+                return s, d, w
+            perm = jnp.argsort(s == INVALID_VERTEX, stable=True)[:cap_tot]
+            return s[perm], d[perm], None if w is None else w[perm]
+
+        if dl is not None:
+            ds_l, dd_l = dl
+            n_del = ds_l.shape[0] * n_shards
+            bs, bd, _, orig, _ = route(ds_l, dd_l, None, fwd_del)
+            gs[fidx], m = delete_edges_local(gs[fidx], bs, bd, **kw)
+            del_part = _scatter_back(m, orig, n_del)
+            if need_rev:
+                # ONE routed (dst, src) exchange feeds the transpose
+                # delete, the reverse-existence query, AND (below) the
+                # reverse half of the symmetric delete
+                rbs, rbd, _, rorig, _ = route(dd_l, ds_l, None, tr_del)
+            for i, role in enumerate(roles):
+                if i == fidx:
+                    continue
+                if role == TRANSPOSE:
+                    gs[i], _ = delete_edges_local(gs[i], rbs, rbd, **kw)
+                elif role == SYMMETRIC:
+                    found = query_edges_local(gs[fidx], rbs, rbd, **kwq)
+                    gone = ~or_across_shards(
+                        _scatter_back(found, rorig, n_del))
+                    # the symmetric delete RIDES the two exchanges above:
+                    # ``gone`` is replicated after the psum, the forward
+                    # half of the (2B,) vmap candidate batch is owned by
+                    # owner(src) (already delivered by the forward
+                    # exchange, in global batch order) and the reverse
+                    # half by owner(dst) (the transpose exchange) — so
+                    # masking the received buckets per position
+                    # reconstructs the vmap symmetric bucket exactly,
+                    # with zero extra routing or collectives.
+                    keep_f = (orig >= 0) & gone[jnp.clip(orig, 0)]
+                    keep_r = (rorig >= 0) & gone[jnp.clip(rorig, 0)]
+                    s2 = jnp.where(keep_f, bs, INVALID_VERTEX)
+                    d2 = jnp.where(keep_f, bd, INVALID_VERTEX)
+                    s2r = jnp.where(keep_r, rbs, INVALID_VERTEX)
+                    d2r = jnp.where(keep_r, rbd, INVALID_VERTEX)
+                    cs, cd, _ = compact(sym_del,
+                                        jnp.concatenate([s2, s2r]),
+                                        jnp.concatenate([d2, d2r]))
+                    gs[i], _ = delete_edges_local(gs[i], cs, cd, **kw)
+
+        if il is not None:
+            is_l, id_l, iw_l = il
+            n_ins = is_l.shape[0] * n_shards
+            bs, bd, bw, orig, _ = route(is_l, id_l, iw_l, fwd_ins)
+            gs[fidx], m = insert_edges_local(gs[fidx], bs, bd, bw, **kw)
+            ins_part = _scatter_back(m, orig, n_ins)
+            if need_rev:
+                tbs, tbd, tbw, _, _ = route(id_l, is_l, iw_l, tr_ins)
+            for i, role in enumerate(roles):
+                if i == fidx:
+                    continue
+                if role == TRANSPOSE:
+                    gs[i], _ = insert_edges_local(gs[i], tbs, tbd, tbw, **kw)
+                elif role == SYMMETRIC:
+                    # both directions already delivered: forward bucket
+                    # owns the (s, d) half, transpose bucket the (d, s)
+                    # half — their concat IS the vmap symmetric bucket
+                    w2 = (None if bw is None
+                          else jnp.concatenate([bw, tbw]))
+                    cs, cd, cw = compact(sym_ins,
+                                         jnp.concatenate([bs, tbs]),
+                                         jnp.concatenate([bd, tbd]), w2)
+                    gs[i], _ = insert_edges_local(gs[i], cs, cd, cw, **kw)
+
+        # epoch close folded into the single program (same as the vmap body)
+        gs = [update_slab_pointers(g) for g in gs]
+        return (tuple(jax.tree.map(lambda x: x[None], g) for g in gs),
+                None if del_part is None else del_part[None],
+                None if ins_part is None else ins_part[None])
+
+    vec = P(SHARD_AXIS)
+    gspecs = tuple(graph_pspecs(g) for g in views)
+
+    def batch_specs(t):
+        return jax.tree.map(lambda _: vec, t)
+
+    out_views, del_parts, ins_parts = shard_map(
+        _body, mesh=mesh,
+        in_specs=(gspecs, batch_specs(dels), batch_specs(ins)),
+        out_specs=(gspecs,
+                   None if dels is None else P(SHARD_AXIS, None),
+                   None if ins is None else P(SHARD_AXIS, None)),
+        check_rep=False)(views, dels, ins)
+    # each batch position is owned by exactly one shard: OR the partials
+    ins_mask = None if ins_parts is None else ins_parts.any(axis=0)
+    del_mask = None if del_parts is None else del_parts.any(axis=0)
+    return out_views, ins_mask, del_mask
+
+
+_APPLY_SM_STATIC = _APPLY_STATIC + ("mesh",)
+_apply_sm_don = jax.jit(_sharded_apply_sm, static_argnames=_APPLY_SM_STATIC,
+                        donate_argnums=(0,))
 
 
 # ----------------------------------------------------------------------------
@@ -145,14 +347,75 @@ class ShardedGraphStore(VersionedStoreBase):
 
     def __init__(self, views: Dict[str, ShardedSlabGraph], *, weighted: bool,
                  version: int = 0, log_capacity: int = 64,
-                 maintenance=None):
+                 maintenance=None, dispatch: str = "auto"):
         assert FORWARD in views, "a store always carries the forward view"
         unknown = set(views) - set(ALL_VIEWS)
         assert not unknown, f"unknown views {unknown}"
+        assert dispatch in ("auto", "vmap", "shard_map"), dispatch
         super().__init__(version=version, log_capacity=log_capacity,
                          maintenance=maintenance)
         self._views = dict(views)
         self.weighted = bool(weighted)
+        # "vmap" | "shard_map" | "auto" (shard_map iff pools are mesh-placed)
+        self.dispatch = dispatch
+        # host-exact accounting (satellites of the single-program plane):
+        #   _high_water[name] — upper bound on the worst shard's next_free,
+        #     bumped by per-epoch routed-insert counts so steady-state
+        #     epochs never block on a device read (primed lazily / after
+        #     maintenance by one sync);
+        #   _sticky_caps[(mode, slot)] — routing caps that only ratchet up,
+        #     so a drifting batch mix stops walking pow2 rungs through new
+        #     jit specialisations (reset at maintenance);
+        #   recompile_count — distinct fused-epoch specialisations
+        #     dispatched (what the bench logs).
+        self._high_water: Dict[str, int] = {}
+        self._sticky_caps: Dict[tuple, int] = {}
+        self._dispatch_keys: set = set()
+        self.recompile_count = 0
+
+    # ------------------------------------------------------ mesh / dispatch
+    def place_on_mesh(self, mesh: Mesh) -> "ShardedGraphStore":
+        """Pin every view's stacked pools to the ("shard",) mesh; from then
+        on ``dispatch="auto"`` runs epochs and analytics as single
+        shard_map programs (DESIGN.md §9).  Returns self."""
+        for name in list(self._views):
+            self._views[name] = _place_graph(self._views[name], mesh)
+        return self
+
+    @property
+    def mesh(self) -> Optional[Mesh]:
+        return self.forward.mesh
+
+    def _mode(self) -> str:
+        if self.dispatch == "auto":
+            return "shard_map" if self.mesh is not None else "vmap"
+        if self.dispatch == "shard_map" and self.mesh is None:
+            raise ValueError("dispatch='shard_map' needs mesh-placed views "
+                             "— call store.place_on_mesh(mesh) first")
+        return self.dispatch
+
+    # ------------------------------------------------- host-exact accounting
+    def _high(self, name: str) -> int:
+        """Host upper bound on the view's worst-shard ``next_free`` (one
+        device sync to prime; exact insert accounting afterwards)."""
+        if name not in self._high_water:
+            self._high_water[name] = int(
+                jnp.max(self._views[name].graphs.next_free))
+        return self._high_water[name]
+
+    def sweep_rows(self, view: str = FORWARD) -> int:
+        """Static sweep row bound for the analytics (``rows=``): the
+        allocated-prefix high-water mark, quantized up to the sweep block
+        size so jit specialisations stay bounded while sweeps skip the
+        pow2 capacity slack."""
+        cap = int(self._views[view].graphs.keys.shape[1])
+        return min(cap, -(-self._high(view) // 256) * 256)
+
+    def _cap(self, mode: str, slot: str, need: int) -> int:
+        """Sticky routing cap: ratchets up only (reset at maintenance)."""
+        cap = max(self._sticky_caps.get((mode, slot), 1), need)
+        self._sticky_caps[(mode, slot)] = cap
+        return cap
 
     # ------------------------------------------------------------- construct
     @classmethod
@@ -160,7 +423,8 @@ class ShardedGraphStore(VersionedStoreBase):
                    with_transpose: bool = True, with_symmetric: bool = True,
                    slack_slabs: int = 0,
                    log_capacity: int = 64,
-                   maintenance=None) -> "ShardedGraphStore":
+                   maintenance=None,
+                   dispatch: str = "auto") -> "ShardedGraphStore":
         """Bulk-build every view host-side (``shard_from_edges_host`` —
         dense pools, dedup shared; the engine path serves the epochs)."""
         src, dst, w = dedup_pairs(src, dst, w)
@@ -177,7 +441,7 @@ class ShardedGraphStore(VersionedStoreBase):
             views[SYMMETRIC] = shard_from_edges_host(
                 n_vertices, n_shards, s2, d2, w2, **kw)
         return cls(views, weighted=w is not None, log_capacity=log_capacity,
-                   maintenance=maintenance)
+                   maintenance=maintenance, dispatch=dispatch)
 
     # ------------------------------------------------------------- accessors
     @property
@@ -226,31 +490,81 @@ class ShardedGraphStore(VersionedStoreBase):
               del_src=None, del_dst=None) -> AppliedBatch:
         """Apply one mixed update batch to every view; close the epoch.
 
-        One host dedup, host-exact routing-cap sizing (no overflow by
-        construction), one donated multi-view dispatch — see module doc.
+        One host dedup, host-exact routing-cap sizing (sticky — no overflow
+        by construction, no per-batch pow2 walking), ONE donated multi-view
+        dispatch: a single shard_map program when the views are mesh-placed
+        (``place_on_mesh``), the stacked-vmap fallback otherwise.  Pool
+        results are leaf-for-leaf identical between the two.  Capacity
+        checks run on host high-water accounting — no per-epoch device
+        sync — see module doc.
         """
         i_s, i_d, i_w, d_s, d_d = canonical_batch(
             ins_src, ins_dst, ins_w, del_src, del_dst,
             weighted=self.weighted)
         roles = tuple(v for v in ALL_VIEWS if v in self._views)
         S = self.n_shards
+        mode = self._mode()
+
+        def padded(n):
+            # pow2 batch rungs, kept a multiple of S so the shard_map path
+            # can block-partition the batch (identical padding in both
+            # modes keeps dispatch-mode identity trivially checkable)
+            p = _pow2(n)
+            return -(-p // S) * S
+
+        p_del = padded(len(d_s)) if len(d_s) else 0
+        p_ins = padded(len(i_s)) if len(i_s) else 0
 
         # -- host-exact per-view bucket sizing + capacity -------------------
-        fwd_ins = tr_ins = sym_ins = fwd_del = tr_del = sym_del = 1
+        # shard_map buckets are per-(source block, owner) pairs (~1/S the
+        # vmap per-owner counts); both modes share the sticky ratchet.
+        def cap_of(slot, arr, block=None):
+            # total cap (= the vmap bucket width): rung of the max per-owner
+            # count; shard_map additionally carries the per-(source block,
+            # owner) PAIR cap its all-to-all buckets route through before
+            # compacting back down to the total-cap layout.  Symmetric slots
+            # pass block=None — their candidates never route in shard_map
+            # mode (they ride the forward + transpose exchanges), the total
+            # is only the compaction width.
+            tot = (1 if not len(arr) else
+                   self._cap(mode, slot, _cap_rung(max_owner_count(arr, S))))
+            if mode != "shard_map" or block is None:
+                return tot
+            pair = (1 if not len(arr) else
+                    self._cap(mode, slot + "_pair",
+                              routing_cap_blocks(arr, S, block)))
+            return (pair, tot)
+
+        one = (1, 1) if mode == "shard_map" else 1
+        fwd_ins = tr_ins = fwd_del = tr_del = one
+        sym_ins = sym_del = 1
         if len(d_s):
-            fwd_del = routing_cap(d_s, S)
-            tr_del = routing_cap(d_d, S)
-            sym_del = routing_cap(np.concatenate([d_s, d_d]), S)
+            fwd_del = cap_of("fwd_del", d_s, p_del // S)
+            tr_del = cap_of("tr_del", d_d, p_del // S)
+            sym_del = cap_of("sym_del", _sym_concat_u32(d_s, d_d, p_del))
         if len(i_s):
-            fwd_ins = routing_cap(i_s, S)
-            tr_ins = routing_cap(i_d, S)
-            sym_ins = routing_cap(np.concatenate([i_s, i_d]), S)
-            per_view = {FORWARD: fwd_ins, TRANSPOSE: tr_ins,
-                        SYMMETRIC: sym_ins}
+            fwd_ins = cap_of("fwd_ins", i_s, p_ins // S)
+            tr_ins = cap_of("tr_ins", i_d, p_ins // S)
+            sym_ins = cap_of("sym_ins", _sym_concat_u32(i_s, i_d, p_ins))
+            per_view = {
+                FORWARD: max_owner_count(i_s, S),
+                TRANSPOSE: max_owner_count(i_d, S),
+                SYMMETRIC: max_owner_count(np.concatenate([i_s, i_d]), S)}
             for name in roles:
-                self._views[name] = ensure_capacity_sharded(
-                    self._views[name], per_view[name] + 64)
-                self._last_reserve[name] = per_view[name] + 64
+                reserve = next_pow2(per_view[name], lo=1) + 64
+                sg = self._views[name]
+                if sg.graphs.keys.shape[1] - self._high(name) < reserve:
+                    # the running estimate charges a whole slab per routed
+                    # insert, so it overestimates hard; before paying a
+                    # pool concat, re-prime with one exact device read (a
+                    # sync only when the estimate crosses capacity — not
+                    # per epoch) so the bound cannot compound into
+                    # spurious per-epoch growth
+                    self._high_water[name] = int(
+                        jnp.max(sg.graphs.next_free))
+                    self._views[name] = ensure_capacity_sharded(
+                        sg, reserve, high=self._high_water[name])
+                self._last_reserve[name] = reserve
         caps = (fwd_del, tr_del, sym_del, fwd_ins, tr_ins, sym_ins)
 
         # -- canonical device batches (every view derives from these) -------
@@ -258,27 +572,46 @@ class ShardedGraphStore(VersionedStoreBase):
         ins_sj = ins_dj = ins_wj = ins_mask = None
         dels = ins = None
         if len(d_s):
-            p = _pow2(len(d_s))
-            del_sj, del_dj = _pad_u32(d_s, p), _pad_u32(d_d, p)
+            del_sj, del_dj = _pad_u32(d_s, p_del), _pad_u32(d_d, p_del)
             dels = (del_sj, del_dj)
         if len(i_s):
-            p = _pow2(len(i_s))
-            ins_sj, ins_dj = _pad_u32(i_s, p), _pad_u32(i_d, p)
-            ins_wj = _pad_f32(i_w, p)
+            ins_sj, ins_dj = _pad_u32(i_s, p_ins), _pad_u32(i_d, p_ins)
+            ins_wj = _pad_f32(i_w, p_ins)
             ins = (ins_sj, ins_dj, ins_wj)
 
         # -- single donated route+mutate dispatch over every live view ------
         n_inserted = n_deleted = 0
         if ins is not None or dels is not None:
-            in_views = _copy_aliased(tuple(self._views[r] for r in roles))
-            new_views, ins_mask, del_mask = _apply_jit_don(
-                in_views, ins, dels, roles=roles, n_shards=S, caps=caps)
-            for r, g in zip(roles, new_views):
-                self._views[r] = g
+            key = (mode, roles, caps, p_del, p_ins, i_w is not None)
+            if key not in self._dispatch_keys:
+                self._dispatch_keys.add(key)
+                self.recompile_count += 1
+            if mode == "shard_map":
+                in_views = _copy_aliased(
+                    tuple(self._views[r].graphs for r in roles))
+                new_graphs, ins_mask, del_mask = _apply_sm_don(
+                    in_views, dels, ins, roles=roles,
+                    n_shards=S, caps=caps, mesh=self.mesh)
+                for r, g in zip(roles, new_graphs):
+                    self._views[r] = dataclasses.replace(self._views[r],
+                                                         graphs=g)
+            else:
+                in_views = _copy_aliased(
+                    tuple(self._views[r] for r in roles))
+                new_views, ins_mask, del_mask = _apply_jit_don(
+                    in_views, ins, dels, roles=roles, n_shards=S, caps=caps)
+                for r, g in zip(roles, new_views):
+                    self._views[r] = g
             if del_mask is not None:
                 n_deleted = int(jnp.sum(del_mask.astype(jnp.int32)))
             if ins_mask is not None:
                 n_inserted = int(jnp.sum(ins_mask.astype(jnp.int32)))
+            # exact host accounting: the worst shard allocates at most its
+            # routed insert count in new slabs this epoch
+            if len(i_s):
+                for name in roles:
+                    self._high_water[name] = (self._high(name)
+                                              + per_view[name])
 
         # -- version bump + notification (epoch still open) -----------------
         batch = self._record_batch(
@@ -286,10 +619,13 @@ class ShardedGraphStore(VersionedStoreBase):
             del_src=del_sj, del_dst=del_dj, del_mask=del_mask,
             n_inserted=n_inserted, n_deleted=n_deleted)
 
-        # -- close the epoch on every view's stacked pools ------------------
-        for name, sg in self._views.items():
-            self._views[name] = dataclasses.replace(
-                sg, graphs=update_slab_pointers(sg.graphs))
+        # -- close the epoch: folded into the fused dispatch above; only an
+        # empty batch (no dispatch) still closes here, where it is a no-op
+        # value-wise (the pointers already sit at the previous close)
+        if ins is None and dels is None:
+            for name, sg in self._views.items():
+                self._views[name] = dataclasses.replace(
+                    sg, graphs=update_slab_pointers(sg.graphs))
 
         # -- maintenance plane: policy check on the closed epoch ------------
         self._auto_maintain()
@@ -337,6 +673,20 @@ class ShardedGraphStore(VersionedStoreBase):
         from ..kernels.slab_compact import reclaim_shards
         graphs, n = reclaim_shards(sg.graphs)
         return dataclasses.replace(sg, graphs=graphs), n
+
+    def _maintain_views(self, action: str, policy, *, shrink: bool):
+        out = super()._maintain_views(action, policy, shrink=shrink)
+        # compaction/reclamation relocates slabs (and may shrink pools):
+        # the host high-water bounds and sticky routing caps are stale —
+        # drop them so the next epoch re-primes (one sync) and cap rungs
+        # can shrink back to the live workload
+        self._high_water.clear()
+        self._sticky_caps.clear()
+        if self.mesh is not None:
+            # maintenance kernels run outside the shard_map program; pin
+            # their outputs back onto the mesh explicitly
+            self.place_on_mesh(self.mesh)
+        return out
 
     # --------------------------------------------------------------- queries
     def query(self, src, dst) -> np.ndarray:
@@ -410,7 +760,8 @@ def sharded_pagerank_property(*, damping: float = 0.85,
         pr, _ = pagerank_sharded(store.transpose, store.out_degree,
                                  init_pr=init_pr, damping=damping,
                                  error_margin=error_margin,
-                                 max_iter=max_iter)
+                                 max_iter=max_iter,
+                                 rows=store.sweep_rows(TRANSPOSE))
         return pr
 
     return PropertySpec(
@@ -434,7 +785,8 @@ def sharded_wcc_property(*, max_iters: int = 100000):
             raise ValueError("sharded wcc sweeps the symmetric view; build "
                              "the store with with_symmetric=True")
         labels, _ = wcc_sharded(store.symmetric, init_labels=init_labels,
-                                max_iters=max_iters)
+                                max_iters=max_iters,
+                                rows=store.sweep_rows(SYMMETRIC))
         return labels
 
     def _on_batch(store, labels, batch):
@@ -461,7 +813,8 @@ def sharded_bfs_property(src: int, *, max_iters: int = 100000):
             raise ValueError("sharded bfs sweeps the transpose view; build "
                              "the store with with_transpose=True")
         dist, _ = bfs_sharded(store.transpose, src=src, init_dist=init_dist,
-                              max_iters=max_iters)
+                              max_iters=max_iters,
+                              rows=store.sweep_rows(TRANSPOSE))
         return dist
 
     def _on_batch(store, dist, batch):

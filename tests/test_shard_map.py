@@ -1,0 +1,24 @@
+"""Single-program sharded plane: run tests/shard_map_script.py in a
+subprocess with 8 forced host devices (XLA locks the device count at first
+jax init, so this cannot run inside the main pytest process).
+
+The script asserts shard_map-vs-vmap leaf-for-leaf pool identity across
+mixed / skewed / weighted epochs with V % S != 0, and bit-identical
+analytics between dispatch modes.  The perf gate (SHARD_MAP_PERF=1) is CI's
+— it is not set here, so the tier-1 suite stays timing-independent.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+
+def test_shard_map_single_program():
+    script = Path(__file__).parent / "shard_map_script.py"
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env.pop("SHARD_MAP_PERF", None)
+    out = subprocess.run([sys.executable, str(script)], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "ALL SHARD_MAP CHECKS PASSED" in out.stdout

@@ -339,3 +339,55 @@ class TestShardedStore:
                                        g_in=g_in)
             assert np.array_equal(np.asarray(reg.read("bfs_0")),
                                   np.asarray(want_dist))
+
+
+# ---------------------------------------------------------------------------
+# single-program dispatch on a 1-device mesh (the full shard_map epoch
+# program — all-to-all routing, collective exchanges, donation — runs fine
+# at S=1; tests/shard_map_script.py repeats this at S=8 in a subprocess)
+# ---------------------------------------------------------------------------
+class TestShardMapDispatchS1:
+    def test_epochs_and_analytics_identical_to_vmap(self):
+        import jax
+        rng = np.random.default_rng(11)
+        src, dst = rand_edges(rng, 160)
+        mesh = jax.make_mesh((1,), ("shard",))
+        sv = ShardedGraphStore.from_edges(V, 1, src, dst, dispatch="vmap")
+        sm = ShardedGraphStore.from_edges(V, 1, src, dst) \
+            .place_on_mesh(mesh)
+        assert sm._mode() == "shard_map" and sv._mode() == "vmap"
+
+        oracle = set(zip(src.tolist(), dst.tolist()))
+        for _ in range(3):
+            ins_s, ins_d = rand_edges(rng, 48)
+            pres = np.array(sorted(oracle), np.uint32)
+            dels = pres[rng.choice(len(pres), 12, replace=False)]
+            bv = sv.apply(ins_s, ins_d, None, dels[:, 0], dels[:, 1])
+            bm = sm.apply(ins_s, ins_d, None, dels[:, 0], dels[:, 1])
+            assert bv.n_inserted == bm.n_inserted
+            assert bv.n_deleted == bm.n_deleted
+            oracle -= {(int(a), int(b)) for a, b in dels}
+            oracle |= set(zip(ins_s.tolist(), ins_d.tolist()))
+            for name in sv.views:
+                got = jax.tree.leaves(sm.views[name].graphs)
+                want = jax.tree.leaves(sv.views[name].graphs)
+                assert all(np.array_equal(np.asarray(x), np.asarray(y))
+                           for x, y in zip(got, want)), name
+
+        reg_m = PropertyRegistry(sm)
+        reg_v = PropertyRegistry(sv)
+        for reg in (reg_m, reg_v):
+            reg.register(sharded_pagerank_property(max_iter=30))
+            reg.register(sharded_wcc_property())
+        assert np.array_equal(np.asarray(reg_m.read("pagerank")),
+                              np.asarray(reg_v.read("pagerank")))
+        assert np.array_equal(np.asarray(reg_m.read("wcc")),
+                              np.asarray(reg_v.read("wcc")))
+
+    def test_dispatch_mode_validation(self):
+        rng = np.random.default_rng(12)
+        src, dst = rand_edges(rng, 40)
+        st = ShardedGraphStore.from_edges(V, 1, src, dst,
+                                          dispatch="shard_map")
+        with pytest.raises(ValueError, match="mesh-placed"):
+            st.apply(src[:4], dst[:4])
