@@ -17,6 +17,9 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated module subset")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write every suite's structured rows "
+                         "(timing.take_rows) as one JSON artifact")
     args = ap.parse_args()
     scale = "full" if args.full else "quick"
 
@@ -38,9 +41,12 @@ def main() -> None:
         "sharded": sharded_bench,            # 8-device sharded stream plane
         "churn": churn_bench,                # maintenance plane under churn
     }
+    from . import timing
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
     failed = []
+    rows = {}
+    timing.take_rows()                       # drop any import-time strays
     for name, mod in suites.items():
         if only and name not in only:
             continue
@@ -50,6 +56,12 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             failed.append(name)
+        rows[name] = timing.take_rows()
+    if args.json:
+        import json
+        with open(args.json, "w") as f:
+            json.dump({"scale": scale, "suites": rows}, f, indent=2)
+        print(f"# structured rows -> {args.json}")
     if failed:
         print(f"# FAILED: {failed}")
         sys.exit(1)

@@ -1,29 +1,68 @@
-"""Benchmark timing helpers (CPU wall-clock; claims are ratios, not absolutes)."""
+"""Benchmark timing helpers (CPU wall-clock; claims are ratios, not absolutes).
+
+Rebased on the telemetry plane's ``repro.obs.metrics.Histogram``: every
+timed call lands in a private histogram, so besides the median the suites
+get exact p10/p90 spread for free, and every ``row()`` is kept as a
+structured dict (``take_rows()``) that ``benchmarks/run.py`` folds into
+one JSON artifact next to the CSV stream.
+"""
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Dict, List, Optional
 
 import jax
+
+from repro.obs.metrics import Histogram
+
+#: structured row accumulator — one dict per row() call, drained by
+#: take_rows() (benchmarks/run.py writes them to BENCH_rows.json)
+ROWS: List[Dict] = []
+
+
+def time_stats(fn: Callable, *args, iters: int = 5, warmup: int = 2,
+               **kw) -> Dict[str, float]:
+    """Wall-time distribution in microseconds (after jit warmup):
+    ``{median_us, p10_us, p90_us, mean_us, iters}`` from an exact
+    per-iteration histogram."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    h = Histogram()
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        h.record(time.perf_counter() - t0)
+    return {"median_us": h.percentile(50) * 1e6,
+            "p10_us": h.percentile(10) * 1e6,
+            "p90_us": h.percentile(90) * 1e6,
+            "mean_us": h.mean * 1e6,
+            "iters": iters}
 
 
 def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2,
             **kw) -> float:
     """Median wall-time in microseconds (after jit warmup)."""
-    for _ in range(warmup):
-        out = fn(*args, **kw)
-        jax.block_until_ready(out)
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        out = fn(*args, **kw)
-        jax.block_until_ready(out)
-        ts.append(time.perf_counter() - t0)
-    ts.sort()
-    return ts[len(ts) // 2] * 1e6
+    return time_stats(fn, *args, iters=iters, warmup=warmup, **kw)["median_us"]
 
 
-def row(name: str, us: float, derived: str = "") -> str:
+def row(name: str, us: float, derived: str = "",
+        stats: Optional[Dict[str, float]] = None) -> str:
+    """Print one CSV row AND retain it structured (with the optional
+    ``time_stats`` spread) for the consolidated JSON output."""
     line = f"{name},{us:.1f},{derived}"
     print(line, flush=True)
+    rec = {"name": name, "us_per_call": round(float(us), 1),
+           "derived": derived}
+    if stats is not None:
+        rec.update({k: round(float(v), 1) for k, v in stats.items()})
+    ROWS.append(rec)
     return line
+
+
+def take_rows() -> List[Dict]:
+    """Drain and return every structured row recorded since the last call."""
+    out = list(ROWS)
+    ROWS.clear()
+    return out

@@ -399,7 +399,14 @@ def _resolve_routing(sg: ShardedSlabGraph, src, dst, w, cap: Optional[int]):
         over = int(overflow)
         if over == 0:
             return bsrc, bdst, bw, origin
-        cap = next_pow2(cap + over, lo=1)
+        new_cap = next_pow2(cap + over, lo=1)
+        from .. import obs
+        obs.instant("route.grow_retry", cap=cap, over=over,
+                    new_cap=new_cap)
+        obs.emit_event("route_grow_retry", cap=cap, overflow=over,
+                       new_cap=new_cap)
+        obs.inc("route.grow_retry")
+        cap = new_cap
 
 
 def _scatter_back(mask: jnp.ndarray, origin: jnp.ndarray,

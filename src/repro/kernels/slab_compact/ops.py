@@ -52,6 +52,7 @@ import numpy as np
 
 from ...core.hashing import EMPTY_KEY, INVALID_SLAB, SLAB_WIDTH
 from ...core.slab_graph import SlabGraph, next_pow2
+from ...obs import timed_dispatch
 from .kernel import chain_rank_pallas, slab_live_pallas
 from .ref import (assemble, chain_order, compact_ref, live_lane_mask,
                   perm_of, rebuild_links, recount_degrees, slab_of_rank)
@@ -177,6 +178,7 @@ def _pick_capacity(needed: int, current: int, n_buckets: int, *,
     return cap
 
 
+@timed_dispatch("slab_compact")
 def compact(g: SlabGraph, *, impl: str = "auto",
             interpret: Optional[bool] = None,
             capacity_slabs: Optional[int] = None, slack_slabs: int = 64,
@@ -289,6 +291,7 @@ def _reclaim_body(g: SlabGraph):
 _reclaim_jit = jax.jit(_reclaim_body)
 
 
+@timed_dispatch("slab_compact")
 def reclaim_free_slabs(g: SlabGraph) -> Tuple[SlabGraph, int]:
     """Unlink wholly-dead overflow slabs and recycle them (see module doc).
 
@@ -333,6 +336,7 @@ def _voracle_jit(graphs, *, capacity_slabs):
 _vreclaim_jit = jax.jit(jax.vmap(_reclaim_body))
 
 
+@timed_dispatch("slab_compact")
 def compact_shards(graphs: SlabGraph, *, impl: str = "auto",
                    interpret: Optional[bool] = None,
                    capacity_slabs: Optional[int] = None,
@@ -376,6 +380,7 @@ def compact_shards(graphs: SlabGraph, *, impl: str = "auto",
     return g2, report
 
 
+@timed_dispatch("slab_compact")
 def reclaim_shards(graphs: SlabGraph) -> Tuple[SlabGraph, int]:
     """``reclaim_free_slabs`` vmapped over the shard dim (capacity is
     unchanged, so no re-stacking is needed).  Returns total freed count."""

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from ...core.slab_graph import SlabGraph
+from ...obs import timed_dispatch
 from .kernel import slab_sweep_pallas
 from .ref import SEMIRINGS, slab_sweep_ref
 
@@ -68,6 +69,7 @@ def _resolve(impl: str, interpret: Optional[bool]):
     return impl, interpret
 
 
+@timed_dispatch("slab_sweep")
 def sweep_partials(g: SlabGraph, values: jnp.ndarray, *, semiring: str,
                    frontier: Optional[jnp.ndarray] = None,
                    target: Optional[jnp.ndarray] = None,
@@ -117,6 +119,7 @@ def sweep_partials(g: SlabGraph, values: jnp.ndarray, *, semiring: str,
                           frontier=frontier, target=target)
 
 
+@timed_dispatch("slab_sweep")
 def sweep_vertices(g: SlabGraph, values: jnp.ndarray, *, semiring: str,
                    frontier: Optional[jnp.ndarray] = None,
                    target: Optional[jnp.ndarray] = None,

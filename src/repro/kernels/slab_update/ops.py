@@ -51,6 +51,7 @@ import jax.numpy as jnp
 from ...core.hashing import (INVALID_SLAB, INVALID_VERTEX, SLAB_WIDTH,
                              TOMBSTONE_KEY)
 from ...core.slab_graph import SlabGraph
+from ...obs import timed_dispatch
 from .kernel import slab_commit_pallas, slab_probe_pallas
 from .ref import (batch_valid, delete_edges_ref, edge_buckets,
                   insert_edges_ref, probe, query_edges_ref)
@@ -327,6 +328,7 @@ _delete_jit_don = jax.jit(_delete_body, static_argnames=_STATIC,
                           donate_argnums=(0,))
 
 
+@timed_dispatch("slab_update")
 def query_edges(g: SlabGraph, src, dst, *, impl: str = "auto",
                 interpret: Optional[bool] = None,
                 queries_per_tile: int = 256,
@@ -343,6 +345,7 @@ def query_edges(g: SlabGraph, src, dst, *, impl: str = "auto",
                       use_commit_kernel=use_commit_kernel)
 
 
+@timed_dispatch("slab_update")
 def insert_edges(g: SlabGraph, src, dst, w=None, *, impl: str = "auto",
                  interpret: Optional[bool] = None,
                  queries_per_tile: int = 256,
@@ -363,6 +366,7 @@ def insert_edges(g: SlabGraph, src, dst, w=None, *, impl: str = "auto",
               use_commit_kernel=use_commit_kernel)
 
 
+@timed_dispatch("slab_update")
 def delete_edges(g: SlabGraph, src, dst, *, impl: str = "auto",
                  interpret: Optional[bool] = None,
                  queries_per_tile: int = 256,
@@ -399,6 +403,7 @@ _apply_jit_don = jax.jit(_apply_update_body, static_argnames=_STATIC,
                          donate_argnums=(0,))
 
 
+@timed_dispatch("slab_update")
 def apply_update(g: SlabGraph, ins_src=None, ins_dst=None, ins_w=None,
                  del_src=None, del_dst=None, *, impl: str = "auto",
                  interpret: Optional[bool] = None,
@@ -453,6 +458,7 @@ _shards_jit_don = jax.jit(_update_shards_body, static_argnames=_STATIC,
 _qshards_jit = jax.jit(_query_shards_body, static_argnames=_STATIC)
 
 
+@timed_dispatch("slab_update")
 def update_shards(graphs, ins=None, dels=None, *, impl: str = "auto",
                   interpret: Optional[bool] = None,
                   queries_per_tile: int = 256,
@@ -477,6 +483,7 @@ def update_shards(graphs, ins=None, dels=None, *, impl: str = "auto",
               use_commit_kernel=use_commit_kernel)
 
 
+@timed_dispatch("slab_update")
 def query_shards(graphs, src, dst, *, impl: str = "auto",
                  interpret: Optional[bool] = None,
                  queries_per_tile: int = 256) -> jnp.ndarray:
@@ -541,6 +548,7 @@ _views_jit_don = jax.jit(_update_views_body, static_argnames=_VIEWS_STATIC,
                          donate_argnums=(0,))
 
 
+@timed_dispatch("slab_update")
 def update_views(views: Tuple[SlabGraph, ...], roles: Tuple[str, ...],
                  ins=None, dels=None, *, impl: str = "auto",
                  interpret: Optional[bool] = None,

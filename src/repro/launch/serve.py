@@ -104,8 +104,25 @@ def main():
                          "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
     ap.add_argument("--checkpoint", default=None,
                     help="directory to snapshot the store into at the end")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="arm the telemetry plane and write a Chrome "
+                         "trace-event JSON (open in Perfetto / "
+                         "chrome://tracing) on exit")
+    ap.add_argument("--metrics", action="store_true",
+                    help="arm the metrics registry and print the "
+                         "counter/histogram table on exit")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="also export the metrics registry summary as JSON")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    from .. import obs
+    if args.trace or args.metrics or args.metrics_json:
+        # tracing and metrics arm together here: the trace export appends
+        # the kernel counters as Perfetto counter tracks, and the metrics
+        # table wants the span-adjacent histograms — both cost nothing
+        # measurable next to the device work they time
+        obs.enable()
 
     from ..algorithms import (bfs_stream_property, pagerank_stream_property,
                               wcc_stream_property)
@@ -147,18 +164,35 @@ def main():
     print(f"[serve] boot: V={V} E={store.n_edges} shards={args.shards}")
     pipeline = RequestPipeline(store, registry)
 
+    # per-request-class latency histograms (standalone — always collected,
+    # the flag-free Histogram class costs one record per request); the
+    # update class is the apply path, everything else is query-side
+    lat = {}
     t0 = time.time()
     stream = build_requests(V, (src, dst), rng, n_requests=args.requests,
                             batch=args.batch, delete_frac=args.delete_frac,
                             prop_names=["pagerank", "bfs_0", "wcc"])
     for i, (kind, req) in enumerate(stream):
         resp = pipeline.run([req])[0]
+        cls = "update" if resp.kind == "update" else resp.kind
+        lat.setdefault(cls, obs.Histogram()).record(resp.latency_s)
+        obs.observe(f"serve.latency.{cls}", resp.latency_s)
         print(f"[serve] req {i:03d} {kind:13s} {1e3 * resp.latency_s:8.1f}"
               f" ms  v{resp.version:<4d} {describe(resp, V)}")
     elapsed = time.time() - t0
     print(f"[serve] {args.requests} requests in {elapsed:.1f}s "
           f"({args.requests / elapsed:.2f} req/s), "
           f"store v{store.version}, E={store.n_edges}")
+    # update-apply latency vs query latency, per class, exact percentiles
+    for cls in ("update", "member", "property", "neighbors"):
+        h = lat.get(cls)
+        if h is None:
+            continue
+        s = h.summary()
+        side = "apply" if cls == "update" else "query"
+        print(f"[serve] latency {cls:9s} ({side}): n={s['count']:<4d} "
+              f"mean={1e3 * s['mean_s']:8.1f} p50={1e3 * s['p50_s']:8.1f} "
+              f"p95={1e3 * s['p95_s']:8.1f} p99={1e3 * s['p99_s']:8.1f} ms")
     st = store.pool_stats()
     print(f"[serve] pool: capacity={st['capacity_slabs']} slabs "
           f"(next_free={st['next_free']} free_top={st['free_top']}) "
@@ -178,6 +212,31 @@ def main():
         else:
             path = store.save(args.checkpoint, registry=registry)
             print(f"[serve] checkpointed store+properties -> {path}")
+
+    if args.metrics:
+        print("[serve] --- metrics " + "-" * 47)
+        print(obs.get_registry().render_table())
+        ks = obs.kernel_summary()
+        if ks:
+            print("[serve] --- kernel dispatch stats " + "-" * 33)
+            for key, st in sorted(ks.items()):
+                steady = st["steady_s"] / max(1, st["steady_calls"])
+                print(f"[serve] {key:44s} calls={st['calls']:<5d} "
+                      f"compile={st['compile_s']:.3f}s "
+                      f"steady={1e3 * steady:.2f}ms "
+                      f"bytes={st['bytes']}")
+    if args.metrics_json:
+        import json
+        summary = obs.get_registry().summary()
+        summary["kernels"] = obs.kernel_summary()
+        with open(args.metrics_json, "w") as f:
+            json.dump(summary, f, indent=2, default=str)
+        print(f"[serve] metrics -> {args.metrics_json}")
+    if args.trace:
+        path = obs.export_chrome_trace(
+            args.trace, counters=obs.get_registry().counters())
+        print(f"[serve] chrome trace -> {path} "
+              f"({len(obs.trace.events())} events)")
 
 
 if __name__ == "__main__":

@@ -94,13 +94,36 @@ class MaintenancePolicy:
 
 @dataclasses.dataclass(frozen=True)
 class MaintenanceRecord:
-    """One maintenance pass over every live view (one versioned unit)."""
+    """One maintenance pass over every live view (one versioned unit).
+
+    Beyond the action/trigger, the record carries the structured telemetry
+    the observability plane emits per pass (``store.maintenance_events``,
+    mirrored into ``obs.metrics`` events — DESIGN.md §10): the pre-pass
+    tombstone ratio that armed the trigger, the forward view's capacity
+    movement, and the total slabs reclaimed.
+    """
     version: int                           # store version AFTER the pass
     action: str                            # "compact" | "reclaim"
     trigger: str                           # which policy clause fired
     reports: Dict[str, CompactionReport]   # per view (compact only)
     reclaimed: Dict[str, int]              # per view (reclaim only)
     duration_s: float
+    tombstone_ratio: float = 0.0           # pre-pass (the trigger's view)
+    capacity_before: int = 0               # forward view, slabs
+    capacity_after: int = 0
+    slabs_reclaimed: int = 0               # total across views (reclaim)
+
+    def as_event(self) -> dict:
+        """The structured per-pass event (what tests and dashboards read)."""
+        return {
+            "version": self.version, "action": self.action,
+            "trigger": self.trigger,
+            "tombstone_ratio": self.tombstone_ratio,
+            "capacity_before": self.capacity_before,
+            "capacity_after": self.capacity_after,
+            "slabs_reclaimed": self.slabs_reclaimed,
+            "duration_s": self.duration_s,
+        }
 
     def describe(self) -> str:
         if self.action == COMPACT:

@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, Optional
 
+from .. import obs
 from .store import AppliedBatch, GraphStore
 
 EAGER = "eager"
@@ -117,18 +118,34 @@ class PropertyRegistry:
         if missed is not None:
             # maintenance epochs are replay no-ops (edge set unchanged)
             missed = [b for b in missed if not b.maintenance]
+        name = e.spec.name
         if missed is None:
-            e.state = e.spec.refresh(self.store)
+            # log truncated past the property's version: static recompute
+            with obs.span("property.refresh", prop=name):
+                e.state = e.spec.refresh(self.store)
+            obs.inc(f"property.{name}.refresh")
         elif e.spec.collapse_replay and missed:
-            e.state = e.spec.on_batch(self.store, e.state, missed[-1])
+            with obs.span("property.replay", prop=name, collapsed=True,
+                          depth=len(missed)):
+                e.state = e.spec.on_batch(self.store, e.state, missed[-1])
+            obs.inc(f"property.{name}.replay_collapsed")
+            obs.observe(f"property.replay_depth.{name}", len(missed))
         else:
-            for batch in missed:
-                e.state = e.spec.on_batch(self.store, e.state, batch)
+            with obs.span("property.replay", prop=name,
+                          depth=len(missed)):
+                for batch in missed:
+                    e.state = e.spec.on_batch(self.store, e.state, batch)
+            obs.inc(f"property.{name}.replay", max(1, len(missed)))
+            obs.observe(f"property.replay_depth.{name}", len(missed))
         e.version = self.store.version
 
     def read(self, name: str) -> Any:
         """The property state, consistent with the store's current version."""
         e = self._entries[name]
+        if obs.metrics.enabled():
+            # staleness at read: epochs this property lags the store by
+            obs.observe(f"property.staleness.{name}",
+                        self.store.version - e.version)
         self._catch_up(e)
         return e.state
 

@@ -22,6 +22,7 @@ from typing import Any, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from .. import obs
 from .properties import PropertyRegistry
 from .store import GraphStore
 
@@ -158,6 +159,18 @@ class RequestPipeline:
             at += n
         return out
 
+    # -- telemetry ----------------------------------------------------------
+    def _observe(self, kind: str, dt: float, group: int = 1) -> None:
+        """Per-request-class latency histogram + coalescing accounting
+        (metrics-on path only — the off path pays one branch here)."""
+        if not obs.metrics.enabled():
+            return
+        obs.observe(f"pipeline.latency.{kind}", dt)
+        obs.inc(f"pipeline.requests.{kind}", group)
+        obs.inc(f"pipeline.dispatches.{kind}")
+        if group > 1:
+            obs.inc(f"pipeline.coalesced.{kind}", group - 1)
+
     # -- driver -------------------------------------------------------------
     def run(self, requests: Sequence[Request]) -> List[Response]:
         responses: List[Optional[Response]] = [None] * len(requests)
@@ -170,8 +183,10 @@ class RequestPipeline:
                        and isinstance(requests[j], UpdateBatch)):
                     j += 1
                 t0 = time.perf_counter()
-                payload = self._apply_updates(list(requests[i:j]))
+                with obs.span("pipeline.update", coalesced=j - i):
+                    payload = self._apply_updates(list(requests[i:j]))
                 dt = time.perf_counter() - t0
+                self._observe("update", dt, j - i)
                 for k in range(i, j):
                     responses[k] = Response("update", self.store.version,
                                             payload, dt)
@@ -180,29 +195,37 @@ class RequestPipeline:
                        and isinstance(requests[j], MembershipQuery)):
                     j += 1
                 t0 = time.perf_counter()
-                payloads = self._run_membership(list(requests[i:j]))
+                with obs.span("pipeline.member", merged=j - i):
+                    payloads = self._run_membership(list(requests[i:j]))
                 dt = time.perf_counter() - t0
+                self._observe("member", dt, j - i)
                 for k, p in zip(range(i, j), payloads):
                     responses[k] = Response("member", self.store.version,
                                             p, dt)
             elif isinstance(r, NeighborsQuery):
                 t0 = time.perf_counter()
-                ef = self.store.neighbors(r.vertices,
-                                          out_capacity=r.out_capacity)
+                with obs.span("pipeline.neighbors"):
+                    ef = self.store.neighbors(r.vertices,
+                                              out_capacity=r.out_capacity)
                 n = int(ef.size)
                 payload = {"src": np.asarray(ef.src)[:n],
                            "dst": np.asarray(ef.dst)[:n],
                            "count": n, "overflow": bool(ef.overflow)}
+                dt = time.perf_counter() - t0
+                self._observe("neighbors", dt)
                 responses[i] = Response("neighbors", self.store.version,
-                                        payload, time.perf_counter() - t0)
+                                        payload, dt)
             elif isinstance(r, PropertyRead):
                 assert self.registry is not None, \
                     "PropertyRead requires a PropertyRegistry"
                 t0 = time.perf_counter()
-                value = self.registry.read(r.name)
+                with obs.span("pipeline.property", prop=r.name):
+                    value = self.registry.read(r.name)
+                dt = time.perf_counter() - t0
+                self._observe("property", dt)
                 responses[i] = Response("property", self.store.version,
                                         {"name": r.name, "value": value},
-                                        time.perf_counter() - t0)
+                                        dt)
             else:
                 raise TypeError(f"unknown request {type(r).__name__}")
             i = j

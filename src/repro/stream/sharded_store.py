@@ -41,6 +41,7 @@ the sharded views via the slab-sweep engine's global-key sweeps).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, Optional
 
 import jax
@@ -49,6 +50,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .. import obs
 from ..core.slab_graph import next_pow2, update_slab_pointers
 from ..core.hashing import INVALID_VERTEX, SLAB_WIDTH
 from ..core.worklist import EdgeFrontier, expand_vertices
@@ -417,6 +419,22 @@ class ShardedGraphStore(VersionedStoreBase):
         self._sticky_caps[(mode, slot)] = cap
         return cap
 
+    def _route_metrics(self, i_s, d_s, S: int) -> None:
+        """Per-shard forward-route counts + imbalance gauge (metrics-on
+        path only — one host bincount over the already-canonical batch;
+        never touches device state, so pools stay telemetry-neutral)."""
+        for kind, arr in (("ins", i_s), ("del", d_s)):
+            if not len(arr):
+                continue
+            counts = np.bincount(
+                np.asarray(arr, np.int64) % S, minlength=S)
+            for k in range(S):
+                obs.inc(f"store.route.{kind}.shard{k}", int(counts[k]))
+            mean = counts.mean()
+            if mean > 0:
+                obs.set_gauge(f"store.route.{kind}.imbalance",
+                              float(counts.max() / mean))
+
     # ------------------------------------------------------------- construct
     @classmethod
     def from_edges(cls, n_vertices: int, n_shards: int, src, dst, w=None, *,
@@ -498,12 +516,21 @@ class ShardedGraphStore(VersionedStoreBase):
         checks run on host high-water accounting — no per-epoch device
         sync — see module doc.
         """
-        i_s, i_d, i_w, d_s, d_d = canonical_batch(
-            ins_src, ins_dst, ins_w, del_src, del_dst,
-            weighted=self.weighted)
+        t0 = time.perf_counter()
+        epoch_span = obs.span("store.apply", version=self.version,
+                              sharded=True)
+        epoch_span.__enter__()
+        with obs.span("store.apply.host_dedup"):
+            i_s, i_d, i_w, d_s, d_d = canonical_batch(
+                ins_src, ins_dst, ins_w, del_src, del_dst,
+                weighted=self.weighted)
         roles = tuple(v for v in ALL_VIEWS if v in self._views)
         S = self.n_shards
         mode = self._mode()
+        if obs.metrics.enabled():
+            # per-shard route counts + imbalance (owner = vertex % S): the
+            # forward view routes inserts by owner(src), deletes likewise
+            self._route_metrics(i_s, d_s, S)
 
         def padded(n):
             # pow2 batch rungs, kept a multiple of S so the shard_map path
@@ -535,6 +562,8 @@ class ShardedGraphStore(VersionedStoreBase):
                               routing_cap_blocks(arr, S, block)))
             return (pair, tot)
 
+        route_span = obs.span("store.apply.route", mode=mode)
+        route_span.__enter__()
         one = (1, 1) if mode == "shard_map" else 1
         fwd_ins = tr_ins = fwd_del = tr_del = one
         sym_ins = sym_del = 1
@@ -553,7 +582,8 @@ class ShardedGraphStore(VersionedStoreBase):
             for name in roles:
                 reserve = next_pow2(per_view[name], lo=1) + 64
                 sg = self._views[name]
-                if sg.graphs.keys.shape[1] - self._high(name) < reserve:
+                cap_before = int(sg.graphs.keys.shape[1])
+                if cap_before - self._high(name) < reserve:
                     # the running estimate charges a whole slab per routed
                     # insert, so it overestimates hard; before paying a
                     # pool concat, re-prime with one exact device read (a
@@ -564,8 +594,18 @@ class ShardedGraphStore(VersionedStoreBase):
                         jnp.max(sg.graphs.next_free))
                     self._views[name] = ensure_capacity_sharded(
                         sg, reserve, high=self._high_water[name])
+                    cap_after = int(
+                        self._views[name].graphs.keys.shape[1])
+                    if cap_after != cap_before:
+                        obs.instant("capacity_grow", view=name,
+                                    before=cap_before, after=cap_after)
+                        obs.emit_event("capacity_grow", view=name,
+                                       version=self.version,
+                                       before=cap_before, after=cap_after)
+                        obs.inc("store.capacity_grow")
                 self._last_reserve[name] = reserve
         caps = (fwd_del, tr_del, sym_del, fwd_ins, tr_ins, sym_ins)
+        route_span.__exit__(None, None, None)
 
         # -- canonical device batches (every view derives from these) -------
         del_sj = del_dj = del_mask = None
@@ -586,6 +626,11 @@ class ShardedGraphStore(VersionedStoreBase):
             if key not in self._dispatch_keys:
                 self._dispatch_keys.add(key)
                 self.recompile_count += 1
+                obs.inc("store.sharded.recompiles")
+                obs.instant("sharded_recompile", mode=mode)
+            dispatch_span = obs.span("store.apply.dispatch", mode=mode,
+                                     version=self.version, views=len(roles))
+            dispatch_span.__enter__()
             if mode == "shard_map":
                 in_views = _copy_aliased(
                     tuple(self._views[r].graphs for r in roles))
@@ -606,6 +651,7 @@ class ShardedGraphStore(VersionedStoreBase):
                 n_deleted = int(jnp.sum(del_mask.astype(jnp.int32)))
             if ins_mask is not None:
                 n_inserted = int(jnp.sum(ins_mask.astype(jnp.int32)))
+            dispatch_span.__exit__(None, None, None)
             # exact host accounting: the worst shard allocates at most its
             # routed insert count in new slabs this epoch
             if len(i_s):
@@ -614,18 +660,29 @@ class ShardedGraphStore(VersionedStoreBase):
                                               + per_view[name])
 
         # -- version bump + notification (epoch still open) -----------------
-        batch = self._record_batch(
-            ins_src=ins_sj, ins_dst=ins_dj, ins_w=ins_wj, ins_mask=ins_mask,
-            del_src=del_sj, del_dst=del_dj, del_mask=del_mask,
-            n_inserted=n_inserted, n_deleted=n_deleted)
+        with obs.span("store.apply.notify"):
+            batch = self._record_batch(
+                ins_src=ins_sj, ins_dst=ins_dj, ins_w=ins_wj,
+                ins_mask=ins_mask, del_src=del_sj, del_dst=del_dj,
+                del_mask=del_mask,
+                n_inserted=n_inserted, n_deleted=n_deleted)
 
         # -- close the epoch: folded into the fused dispatch above; only an
         # empty batch (no dispatch) still closes here, where it is a no-op
         # value-wise (the pointers already sit at the previous close)
         if ins is None and dels is None:
-            for name, sg in self._views.items():
-                self._views[name] = dataclasses.replace(
-                    sg, graphs=update_slab_pointers(sg.graphs))
+            with obs.span("store.apply.epoch_close"):
+                for name, sg in self._views.items():
+                    self._views[name] = dataclasses.replace(
+                        sg, graphs=update_slab_pointers(sg.graphs))
+
+        epoch_span.annotate(inserted=n_inserted, deleted=n_deleted)
+        epoch_span.__exit__(None, None, None)
+        if obs.metrics.enabled():
+            obs.observe("store.apply", time.perf_counter() - t0)
+            obs.inc("store.apply.epochs")
+            obs.inc("store.apply.inserted", n_inserted)
+            obs.inc("store.apply.deleted", n_deleted)
 
         # -- maintenance plane: policy check on the closed epoch ------------
         self._auto_maintain()

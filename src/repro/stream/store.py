@@ -48,11 +48,13 @@ to a static refresh.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core.batch import query_edges, update_views
 from ..core.hashing import INVALID_VERTEX
 from ..core.slab_graph import (SlabGraph, empty, ensure_capacity,
@@ -171,6 +173,11 @@ class VersionedStoreBase:
         #: and only maintenance ever clears them.
         self._tombstone_base = 0       # tombstones at the last maintenance
         self._deletes_since_maint = 0
+        #: structured per-pass event stream (DESIGN.md §10): one dict per
+        #: maintenance pass — trigger, tombstone ratio, capacity movement,
+        #: slabs reclaimed — bounded like the batch log.  Mirrored into
+        #: ``obs.metrics`` events when telemetry is on.
+        self.maintenance_events: List[dict] = []
 
     def add_listener(self, fn: Callable[[AppliedBatch], None]) -> None:
         """Subscribe to applied batches (called with the epoch still open)."""
@@ -287,8 +294,10 @@ class VersionedStoreBase:
         else:
             stats = self.pool_stats()
         t0 = _time.time()
-        reports, reclaimed = self._maintain_views(
-            action, policy, shrink=policy.allow_shrink(stats))
+        with obs.span("store.maintain", version=self.version,
+                      action=action, trigger=trigger):
+            reports, reclaimed = self._maintain_views(
+                action, policy, shrink=policy.allow_shrink(stats))
         self._epochs_since_maint = 0
         self._deletes_since_maint = 0
         # compaction drops every tombstone; reclamation only frees wholly
@@ -299,12 +308,26 @@ class VersionedStoreBase:
             ins_src=None, ins_dst=None, ins_w=None, ins_mask=None,
             del_src=None, del_dst=None, del_mask=None,
             n_inserted=0, n_deleted=0, maintenance=True)
+        fwd_report = reports.get(FORWARD)
         record = MaintenanceRecord(
             version=batch.version, action=action, trigger=trigger,
             reports=reports, reclaimed=reclaimed,
-            duration_s=_time.time() - t0)
+            duration_s=_time.time() - t0,
+            tombstone_ratio=float(stats["tombstone_ratio"]),
+            capacity_before=(fwd_report.old_capacity if fwd_report
+                             else int(stats.get("capacity_slabs", 0))),
+            capacity_after=(fwd_report.new_capacity if fwd_report
+                            else int(stats.get("capacity_slabs", 0))),
+            slabs_reclaimed=sum(reclaimed.values()))
         self.maintenance_count += 1
         self.last_maintenance = record
+        # the structured per-pass event stream (bounded like the batch log)
+        self.maintenance_events.append(record.as_event())
+        if len(self.maintenance_events) > self._log_capacity:
+            self.maintenance_events = \
+                self.maintenance_events[-self._log_capacity:]
+        obs.emit_event("maintenance", **record.as_event())
+        obs.inc(f"store.maintain.{action}")
         return record
 
 
@@ -399,19 +422,25 @@ class GraphStore(VersionedStoreBase):
         default missing insert weights to 1.0.  Returns the
         ``AppliedBatch`` record (also appended to the catch-up log).
         """
-        i_s, i_d, i_w, d_s, d_d = canonical_batch(
-            ins_src, ins_dst, ins_w, del_src, del_dst,
-            weighted=self.weighted)
+        t0 = time.perf_counter()
+        epoch_span = obs.span("store.apply", version=self.version)
+        epoch_span.__enter__()
+        with obs.span("store.apply.host_dedup"):
+            i_s, i_d, i_w, d_s, d_d = canonical_batch(
+                ins_src, ins_dst, ins_w, del_src, del_dst,
+                weighted=self.weighted)
 
         roles = tuple(v for v in ALL_VIEWS if v in self._views)
 
         # -- capacity (inserts allocate at most one slab per batch lane) ----
         if len(i_s):
-            p = _pow2(len(i_s))
-            for name in roles:
-                need = 2 * p + 64 if name == SYMMETRIC else p + 64
-                self._views[name] = ensure_capacity(self._views[name], need)
-                self._last_reserve[name] = need
+            with obs.span("store.apply.capacity"):
+                p = _pow2(len(i_s))
+                for name in roles:
+                    need = 2 * p + 64 if name == SYMMETRIC else p + 64
+                    self._views[name] = ensure_capacity(self._views[name],
+                                                        need)
+                    self._last_reserve[name] = need
 
         # -- canonical device batches (every view derives from these) -------
         del_sj = del_dj = del_mask = None
@@ -430,24 +459,38 @@ class GraphStore(VersionedStoreBase):
         # -- single stacked engine dispatch over every live view ------------
         n_inserted = n_deleted = 0
         if ins is not None or dels is not None:
-            new_views, ins_mask, del_mask = update_views(
-                tuple(self._views[r] for r in roles), roles, ins, dels)
-            for r, g in zip(roles, new_views):
-                self._views[r] = g
-            if del_mask is not None:
-                n_deleted = int(jnp.sum(del_mask.astype(jnp.int32)))
-            if ins_mask is not None:
-                n_inserted = int(jnp.sum(ins_mask.astype(jnp.int32)))
+            with obs.span("store.apply.dispatch", version=self.version,
+                          views=len(roles)):
+                new_views, ins_mask, del_mask = update_views(
+                    tuple(self._views[r] for r in roles), roles, ins, dels)
+                for r, g in zip(roles, new_views):
+                    self._views[r] = g
+                if del_mask is not None:
+                    n_deleted = int(jnp.sum(del_mask.astype(jnp.int32)))
+                if ins_mask is not None:
+                    n_inserted = int(jnp.sum(ins_mask.astype(jnp.int32)))
 
         # -- version bump + notification (epoch still open) -----------------
-        batch = self._record_batch(
-            ins_src=ins_sj, ins_dst=ins_dj, ins_w=ins_wj, ins_mask=ins_mask,
-            del_src=del_sj, del_dst=del_dj, del_mask=del_mask,
-            n_inserted=n_inserted, n_deleted=n_deleted)
+        with obs.span("store.apply.notify"):
+            batch = self._record_batch(
+                ins_src=ins_sj, ins_dst=ins_dj, ins_w=ins_wj,
+                ins_mask=ins_mask, del_src=del_sj, del_dst=del_dj,
+                del_mask=del_mask,
+                n_inserted=n_inserted, n_deleted=n_deleted)
 
         # -- close the epoch on every view ----------------------------------
-        for name, g in self._views.items():
-            self._views[name] = update_slab_pointers(g)
+        with obs.span("store.apply.epoch_close",
+                      sync=tuple(self._views.values())):
+            for name, g in self._views.items():
+                self._views[name] = update_slab_pointers(g)
+
+        epoch_span.annotate(inserted=n_inserted, deleted=n_deleted)
+        epoch_span.__exit__(None, None, None)
+        if obs.metrics.enabled():
+            obs.observe("store.apply", time.perf_counter() - t0)
+            obs.inc("store.apply.epochs")
+            obs.inc("store.apply.inserted", n_inserted)
+            obs.inc("store.apply.deleted", n_deleted)
 
         # -- maintenance plane: policy check on the closed epoch ------------
         self._auto_maintain()

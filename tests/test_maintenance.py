@@ -464,3 +464,79 @@ class TestSatellites:
         assert g2.capacity_slabs == g.capacity_slabs
         g3 = ensure_capacity(g, headroom + n + 1)
         assert g3.capacity_slabs > g.capacity_slabs
+
+
+# ============================================================================
+# structured maintenance telemetry (repro.obs, DESIGN.md §10)
+# ============================================================================
+
+class TestMaintenanceEvents:
+    def _churn(self, store, rng, V, ledger, epochs=8):
+        for _ in range(epochs):
+            pool = np.array(sorted(ledger), np.uint32)
+            di = rng.choice(len(pool), min(300, len(pool)), replace=False)
+            dels = pool[di]
+            ins = rng.integers(0, V, (300, 2)).astype(np.uint32)
+            ledger -= {(int(a), int(b)) for a, b in dels}
+            ledger |= {(int(a), int(b)) for a, b in ins}
+            store.apply(ins_src=ins[:, 0], ins_dst=ins[:, 1],
+                        del_src=dels[:, 0], del_dst=dels[:, 1])
+
+    def test_store_emits_structured_event_per_pass(self):
+        from repro.stream import GraphStore, MaintenancePolicy
+        rng = np.random.default_rng(61)
+        V = 300
+        src = rng.integers(0, V, 3000).astype(np.uint32)
+        dst = rng.integers(0, V, 3000).astype(np.uint32)
+        store = GraphStore.from_edges(
+            V, src, dst, hashing=False,
+            maintenance=MaintenancePolicy(tombstone_ratio=0.1))
+        self._churn(store, rng, V, set(zip(src.tolist(), dst.tolist())))
+        assert store.maintenance_count > 0
+        # one structured event per pass, always on-store (no obs needed)
+        events = store.maintenance_events
+        assert len(events) == store.maintenance_count
+        for ev in events:
+            assert ev["action"] in ("compact", "reclaim")
+            assert ev["trigger"]            # which policy clause fired
+            assert 0.0 <= ev["tombstone_ratio"] <= 1.0
+            assert ev["capacity_before"] > 0
+            assert ev["capacity_after"] > 0
+            assert ev["slabs_reclaimed"] >= 0
+            assert ev["duration_s"] >= 0.0
+            assert ev["version"] > 0
+        # the record mirrors the event payload
+        assert store.last_maintenance.as_event() == events[-1]
+        # the compaction trigger fired on tombstones: the armed ratio is
+        # at (or past) the policy threshold
+        compacts = [e for e in events if e["action"] == "compact"]
+        assert compacts and all(e["tombstone_ratio"] >= 0.1
+                                for e in compacts)
+
+    def test_events_mirror_into_obs_registry(self):
+        from repro import obs
+        from repro.stream import GraphStore, MaintenancePolicy
+        rng = np.random.default_rng(62)
+        V = 300
+        src = rng.integers(0, V, 3000).astype(np.uint32)
+        dst = rng.integers(0, V, 3000).astype(np.uint32)
+        store = GraphStore.from_edges(
+            V, src, dst, hashing=False,
+            maintenance=MaintenancePolicy(tombstone_ratio=0.1))
+        obs.reset()
+        obs.enable()
+        try:
+            self._churn(store, rng, V,
+                        set(zip(src.tolist(), dst.tolist())))
+        finally:
+            obs.disable()
+        assert store.maintenance_count > 0
+        mirrored = obs.get_registry().events("maintenance")
+        assert len(mirrored) == store.maintenance_count
+        for got, want in zip(mirrored, store.maintenance_events):
+            assert {k: got[k] for k in want} == want
+        counters = obs.get_registry().counters()
+        total = sum(counters.get(f"store.maintain.{a}", 0)
+                    for a in ("compact", "reclaim"))
+        assert total == store.maintenance_count
+        obs.reset()

@@ -1,0 +1,351 @@
+"""Telemetry-plane tests (repro.obs, DESIGN.md §10).
+
+Coverage planes:
+
+* units — histogram exact percentiles + bucket ladder, counter/gauge/
+  event registry, span nesting and Chrome trace-event export schema,
+  ``@timed_dispatch`` compile-vs-steady accounting and its trace /
+  reentrancy guards;
+* NEUTRALITY (the acceptance contract) — pools are leaf-for-leaf
+  bit-identical with telemetry on vs off, for both ``GraphStore`` and
+  ``ShardedGraphStore``, across a mixed churn epoch sequence including a
+  maintenance pass: instrumentation only reads clocks and blocks on
+  already-computed results, never changes a value;
+* zero-overhead-when-off — the disabled fast path stays within a
+  generous constant factor of un-instrumented dispatch.
+"""
+import json
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Every test starts and ends with the plane disarmed and empty."""
+    obs.disable()
+    obs.reset()
+    yield
+    obs.disable()
+    obs.reset()
+
+
+# ============================================================================
+# metrics units
+# ============================================================================
+
+class TestMetrics:
+    def test_histogram_exact_percentiles(self):
+        h = obs.Histogram()
+        for v in range(1, 101):                  # 1..100 ms
+            h.record(v / 1000.0)
+        assert h.count == 100
+        assert h.percentile(50) == pytest.approx(0.050, rel=0.03)
+        assert h.percentile(95) == pytest.approx(0.095, rel=0.03)
+        assert h.percentile(99) == pytest.approx(0.099, rel=0.03)
+        assert h.min == pytest.approx(0.001)
+        assert h.max == pytest.approx(0.100)
+        assert h.mean == pytest.approx(0.0505)
+        s = h.summary()
+        assert s["count"] == 100 and s["p99_s"] >= s["p50_s"]
+
+    def test_histogram_saturation_falls_back_to_buckets(self):
+        h = obs.Histogram(sample_cap=8)
+        for v in [0.001] * 50 + [0.016] * 50:
+            h.record(v)
+        assert h.saturated
+        # bucket-midpoint estimate: right order of magnitude, not exact
+        assert 0.0002 < h.percentile(50) < 0.05
+        assert h.count == 100
+
+    def test_registry_counters_gauges_events(self):
+        reg = obs.MetricsRegistry()
+        reg.counter("a").inc()
+        reg.counter("a").inc(4)
+        reg.gauge("g").set(2.5)
+        reg.event("ping", shard=3)
+        assert reg.counters()["a"] == 5
+        assert reg.summary()["gauges"]["g"] == 2.5
+        evs = reg.events("ping")
+        assert len(evs) == 1 and evs[0]["shard"] == 3
+        assert evs[0]["seq"] == 1
+
+    def test_module_helpers_are_noops_when_off(self):
+        obs.inc("never")
+        obs.observe("never", 1.0)
+        obs.set_gauge("never", 1.0)
+        obs.emit_event("never")
+        assert obs.get_registry().counters() == {}
+        obs.metrics.enable()
+        obs.inc("now")
+        assert obs.get_registry().counters()["now"] == 1
+
+    def test_render_table_smoke(self):
+        obs.metrics.enable()
+        obs.observe("lat", 0.002)
+        obs.inc("n")
+        table = obs.get_registry().render_table()
+        assert "lat" in table and "p99" in table and "n" in table
+
+
+# ============================================================================
+# trace units + Chrome export schema
+# ============================================================================
+
+class TestTrace:
+    def test_spans_emit_matched_b_e_pairs(self):
+        obs.trace.enable()
+        with obs.span("outer", version=3):
+            with obs.span("inner"):
+                pass
+        evs = obs.trace.events()
+        assert [e["ph"] for e in evs] == ["B", "B", "E", "E"]
+        assert [e["name"] for e in evs] == ["outer", "inner",
+                                            "inner", "outer"]
+        assert evs[0]["args"]["version"] == 3
+        ts = [e["ts"] for e in evs]
+        assert ts == sorted(ts)                  # monotonic within thread
+
+    def test_span_annotate_rides_the_close_event(self):
+        obs.trace.enable()
+        with obs.span("s") as sp:
+            sp.annotate(inserted=7)
+        evs = obs.trace.events()
+        assert evs[-1]["args"]["inserted"] == 7
+
+    def test_disabled_span_is_the_shared_noop(self):
+        s1 = obs.span("a", version=1)
+        s2 = obs.span("b")
+        assert s1 is s2                          # no allocation when off
+        with s1:
+            pass
+        assert obs.trace.events() == []
+
+    def test_chrome_export_schema(self, tmp_path):
+        obs.trace.enable()
+        with obs.span("epoch", version=1):
+            obs.instant("witness", over=2)
+        path = tmp_path / "trace.json"
+        obs.export_chrome_trace(path, counters={"kernel.calls": 5})
+        doc = json.loads(path.read_text())
+        evs = doc["traceEvents"]
+        assert doc["displayTimeUnit"] == "ms"
+        for e in evs:
+            assert {"ph", "name", "ts", "pid"} <= set(e)
+        phs = [e["ph"] for e in evs]
+        assert phs.count("B") == phs.count("E") == 1
+        assert "i" in phs and "C" in phs
+        c = next(e for e in evs if e["ph"] == "C")
+        assert c["args"]["value"] == 5.0
+
+
+# ============================================================================
+# @timed_dispatch units
+# ============================================================================
+
+class TestTimedDispatch:
+    def test_compile_vs_steady_accounting(self):
+        calls = []
+
+        @obs.timed_dispatch("fam")
+        def op(x):
+            calls.append(1)
+            return x + 1
+
+        obs.metrics.enable()
+        for i in range(4):
+            assert op(jnp.float32(i)) == i + 1
+        stats = obs.kernel_stats()[("fam", "op", "scalar")]
+        assert stats["calls"] == 4
+        assert stats["steady_calls"] == 3        # first call = compile slot
+        assert stats["compile_s"] >= 0.0
+        summary = obs.kernel_summary()
+        assert "fam.op[scalar]" in summary
+        counters = obs.get_registry().counters()
+        assert counters["kernel.fam.op.calls"] == 4
+
+    def test_disabled_is_pass_through(self):
+        @obs.timed_dispatch("fam")
+        def op(x):
+            return x * 2
+
+        assert op(3) == 6
+        assert obs.kernel_stats() == {}
+
+    def test_reentrancy_guard_records_only_outermost(self):
+        @obs.timed_dispatch("fam")
+        def inner(x):
+            return x + 1
+
+        @obs.timed_dispatch("fam")
+        def outer(x):
+            return inner(x) + 1
+
+        obs.metrics.enable()
+        assert outer(jnp.float32(0)) == 2
+        stats = obs.kernel_stats()
+        assert ("fam", "outer", "scalar") in stats
+        assert ("fam", "inner", "scalar") not in stats
+
+    def test_trace_guard_steps_aside_under_jit(self):
+        @obs.timed_dispatch("fam")
+        def op(x):
+            return x + 1
+
+        obs.metrics.enable()
+        out = jax.jit(lambda x: op(x))(jnp.float32(1))
+        assert out == 2                          # no block on tracers
+        assert obs.kernel_stats() == {}          # and no bogus timing
+
+    def test_pool_bytes_counts_array_leaves(self):
+        tree = {"a": jnp.zeros((4, 8), jnp.float32), "b": 3,
+                "c": [jnp.zeros((2,), jnp.int32)]}
+        assert obs.pool_bytes(tree) == 4 * 8 * 4 + 2 * 4
+
+    def test_kernel_entry_points_record(self):
+        from repro.stream import GraphStore
+        rng = np.random.default_rng(0)
+        src = rng.integers(0, 50, 200).astype(np.uint32)
+        dst = rng.integers(0, 50, 200).astype(np.uint32)
+        obs.enable()
+        store = GraphStore.from_edges(50, src, dst)
+        store.apply(ins_src=[1, 2], ins_dst=[3, 4])
+        keys = list(obs.kernel_summary())
+        assert any(k.startswith("slab_update.update_views") for k in keys)
+
+
+# ============================================================================
+# NEUTRALITY — pools bit-identical with telemetry on vs off
+# ============================================================================
+
+def _churn_epochs(store, rng, V, ledger, *, epochs):
+    for _ in range(epochs):
+        pool = np.array(sorted(ledger), np.uint32)
+        di = rng.choice(len(pool), min(250, len(pool)), replace=False)
+        dels = pool[di]
+        ins = rng.integers(0, V, (350, 2)).astype(np.uint32)
+        ledger -= {(int(a), int(b)) for a, b in dels}
+        ledger |= {(int(a), int(b)) for a, b in ins}
+        store.apply(ins_src=ins[:, 0], ins_dst=ins[:, 1],
+                    del_src=dels[:, 0], del_dst=dels[:, 1])
+
+
+def _pool_leaves(store):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(store.views)]
+
+
+class TestNeutrality:
+    V = 300
+
+    def _drive_graph_store(self, enabled):
+        from repro.stream import (GraphStore, MaintenancePolicy,
+                                  PropertyRegistry, RequestPipeline)
+        from repro.stream.requests import (MembershipQuery, PropertyRead,
+                                           UpdateBatch)
+        from repro.algorithms import pagerank_stream_property
+        obs.reset()
+        obs.disable()
+        if enabled:
+            obs.enable()
+        rng = np.random.default_rng(7)
+        V = self.V
+        src = rng.integers(0, V, 2500).astype(np.uint32)
+        dst = rng.integers(0, V, 2500).astype(np.uint32)
+        store = GraphStore.from_edges(
+            V, src, dst, hashing=False,
+            maintenance=MaintenancePolicy(tombstone_ratio=0.1))
+        _churn_epochs(store, rng, V,
+                      set(zip(src.tolist(), dst.tolist())), epochs=6)
+        assert store.maintenance_count > 0       # maintenance exercised
+        registry = PropertyRegistry(store)
+        registry.register(pagerank_stream_property())
+        pipe = RequestPipeline(store, registry)
+        pipe.run([UpdateBatch(ins_src=[1, 2], ins_dst=[3, 4]),
+                  MembershipQuery([1, 2], [3, 4]),
+                  PropertyRead("pagerank")])
+        return _pool_leaves(store)
+
+    def _drive_sharded_store(self, enabled):
+        from repro.stream import MaintenancePolicy, ShardedGraphStore
+        obs.reset()
+        obs.disable()
+        if enabled:
+            obs.enable()
+        rng = np.random.default_rng(8)
+        V = self.V
+        src = rng.integers(0, V, 2500).astype(np.uint32)
+        dst = rng.integers(0, V, 2500).astype(np.uint32)
+        store = ShardedGraphStore.from_edges(
+            V, 4, src, dst,
+            maintenance=MaintenancePolicy(tombstone_ratio=0.1))
+        _churn_epochs(store, rng, V,
+                      set(zip(src.tolist(), dst.tolist())), epochs=6)
+        assert store.maintenance_count > 0
+        return _pool_leaves(store)
+
+    def test_graph_store_pools_identical_on_vs_off(self):
+        off = self._drive_graph_store(False)
+        on = self._drive_graph_store(True)
+        assert len(off) == len(on)
+        for a, b in zip(off, on):
+            assert a.dtype == b.dtype and a.shape == b.shape
+            assert np.array_equal(a, b)
+
+    def test_sharded_store_pools_identical_on_vs_off(self):
+        off = self._drive_sharded_store(False)
+        on = self._drive_sharded_store(True)
+        assert len(off) == len(on)
+        for a, b in zip(off, on):
+            assert a.dtype == b.dtype and a.shape == b.shape
+            assert np.array_equal(a, b)
+
+    def test_enabled_run_actually_collected_telemetry(self):
+        self._drive_graph_store(True)
+        counters = obs.get_registry().counters()
+        assert counters.get("store.apply.epochs", 0) > 0
+        assert any(k.startswith("kernel.") for k in counters)
+        assert len(obs.trace.events()) > 0
+        obs.reset()
+
+
+# ============================================================================
+# zero-overhead-when-off guard
+# ============================================================================
+
+class TestNoopOverhead:
+    def test_disabled_dispatch_overhead_bounded(self):
+        import time
+
+        def bare(x):
+            return x
+
+        @obs.timed_dispatch("fam")
+        def wrapped(x):
+            return x
+
+        # warm both paths, then compare medians over many trials; the
+        # bound is deliberately generous (scheduler noise on shared CI)
+        def med(fn):
+            ts = []
+            for _ in range(7):
+                t0 = time.perf_counter()
+                for _ in range(20000):
+                    fn(1)
+                ts.append(time.perf_counter() - t0)
+            ts.sort()
+            return ts[len(ts) // 2]
+
+        med(bare), med(wrapped)                  # warmup
+        assert med(wrapped) < 30 * med(bare) + 0.05
+
+    def test_disabled_span_and_helpers_cost_nothing_observable(self):
+        with obs.span("x", a=1):
+            pass
+        obs.instant("x")
+        obs.observe("x", 1.0)
+        assert obs.trace.events() == []
+        assert obs.get_registry().counters() == {}

@@ -1,0 +1,116 @@
+"""CI trace smoke: serve a small workload with the telemetry plane armed,
+then validate the exported Chrome trace against the schema Perfetto needs.
+
+Runs ``launch/serve.py --trace --metrics-json --maintain`` in a subprocess
+(the telemetry surface a user actually touches), then asserts:
+
+* the file is ``{"traceEvents": [...]}`` with ``displayTimeUnit``;
+* every event carries ``ph``/``name``/``ts``/``pid``;
+* timestamps are monotonic non-decreasing per thread (``tid``);
+* duration events nest: per ``tid``, ``B``/``E`` form a matched stack
+  with matching names (what trace viewers require to build flame rows);
+* the serving path produced real spans (store epochs AND kernel
+  dispatches) plus NONEMPTY kernel counters — the telemetry plane saw
+  the kernels, not just the host loop;
+* the metrics JSON carries per-class serve latency histograms with
+  populated exact percentiles.
+
+Usage: PYTHONPATH=src python tests/trace_smoke.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from collections import defaultdict
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_serve(trace_path: str, metrics_path: str) -> str:
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    cmd = [sys.executable, "-m", "repro.launch.serve",
+           "--vertices", "2000", "--initial-edges", "8000",
+           "--requests", "10", "--batch", "512", "--maintain",
+           "--trace", trace_path, "--metrics-json", metrics_path]
+    out = subprocess.run(cmd, cwd=ROOT, env=env, capture_output=True,
+                         text=True, timeout=900)
+    if out.returncode != 0:
+        sys.stderr.write(out.stdout + out.stderr)
+        raise SystemExit(f"serve exited {out.returncode}")
+    return out.stdout
+
+
+def check_trace(path: str) -> dict:
+    doc = json.loads(open(path).read())
+    assert "traceEvents" in doc, "missing traceEvents"
+    assert doc.get("displayTimeUnit") == "ms"
+    evs = doc["traceEvents"]
+    assert evs, "empty trace"
+
+    last_ts = defaultdict(float)
+    stacks = defaultdict(list)
+    names = set()
+    counters = {}
+    for e in evs:
+        assert {"ph", "name", "ts", "pid"} <= set(e), f"bad event {e}"
+        tid = e.get("tid", 0)
+        assert e["ts"] >= last_ts[tid], \
+            f"ts went backwards on tid {tid}: {e}"
+        last_ts[tid] = e["ts"]
+        if e["ph"] == "B":
+            stacks[tid].append(e["name"])
+            names.add(e["name"])
+        elif e["ph"] == "E":
+            assert stacks[tid], f"E without B: {e}"
+            top = stacks[tid].pop()
+            assert top == e["name"], \
+                f"mismatched span close: open {top}, close {e['name']}"
+        elif e["ph"] == "C":
+            counters[e["name"]] = e["args"]["value"]
+    for tid, st in stacks.items():
+        assert not st, f"unclosed spans on tid {tid}: {st}"
+
+    assert any(n.startswith("store.apply") for n in names), names
+    assert any(n.startswith("kernel.") for n in names), names
+    assert any(n.startswith("pipeline.") for n in names), names
+    kernel_counters = {k: v for k, v in counters.items()
+                       if k.startswith("kernel.") and v > 0}
+    assert kernel_counters, f"no nonempty kernel counters in {counters}"
+    return {"events": len(evs), "span_names": len(names),
+            "kernel_counters": len(kernel_counters)}
+
+
+def check_metrics(path: str) -> dict:
+    doc = json.loads(open(path).read())
+    hists = doc["histograms"]
+    serve = {k: v for k, v in hists.items()
+             if k.startswith("serve.latency.")}
+    assert serve, f"no serve latency histograms in {list(hists)}"
+    for name, s in serve.items():
+        assert s["count"] > 0, name
+        assert s["p99_s"] >= s["p50_s"] >= 0.0, (name, s)
+    assert doc.get("kernels"), "no kernel dispatch stats in metrics export"
+    return {"serve_classes": sorted(serve)}
+
+
+def main() -> None:
+    with tempfile.TemporaryDirectory() as td:
+        trace_path = os.path.join(td, "trace.json")
+        metrics_path = os.path.join(td, "metrics.json")
+        stdout = run_serve(trace_path, metrics_path)
+        assert "latency update" in stdout, "serve summary missing p50/p95/p99"
+        t = check_trace(trace_path)
+        m = check_metrics(metrics_path)
+    print(f"[trace_smoke] OK: {t['events']} events, "
+          f"{t['span_names']} span names, "
+          f"{t['kernel_counters']} nonempty kernel counters, "
+          f"serve classes {m['serve_classes']}")
+
+
+if __name__ == "__main__":
+    main()
