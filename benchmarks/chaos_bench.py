@@ -1,0 +1,236 @@
+"""Chaos bench: availability and crash recovery under scripted faults.
+
+One churn workload, three measured regimes over the full resilience plane
+(WAL + audits + admission guard + circuit breaker, DESIGN.md §11):
+
+* **calm**      — the plane armed, zero faults: proves no-fault neutrality
+  (pools bit-identical to a store running with nothing attached) and
+  prices the WAL/audit overhead;
+* **storm**     — corrupt batches (``faults.corrupt_batch``) and injected
+  OOM bursts hit a breaker-guarded ``RequestPipeline``: measures request
+  availability (non-error responses / total) and how many update groups
+  the breaker sheds while reads keep serving;
+* **crashes**   — a scripted kill at every instrumented apply phase, each
+  followed by ``resilience.recover`` (checkpoint restore + WAL-suffix
+  replay) and stream re-feed: measures recovery latency (seconds and
+  replayed epochs) and asserts the recovered pools converge bit-identical
+  to an uninterrupted oracle.
+
+Results land in ``BENCH_chaos.json``; the bit-identity and availability
+flags are asserted, so CI's chaos-smoke step fails loudly if resilience
+regresses.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro import resilience as rz
+from repro.algorithms import pagerank_stream_property
+from repro.resilience import faults
+from repro.stream import (GraphStore, MaintenancePolicy, PropertyRegistry,
+                          RequestPipeline, UpdateBatch, PropertyRead)
+
+from .timing import row
+
+_OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_chaos.json"
+
+APPLY_SITES = ("apply.admitted", "store.capacity_grow", "apply.post_wal",
+               "apply.pre_close", "apply.post_close")
+
+
+def _stream(seed, V, n_batches, *, n_ins, n_del):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, V, n_ins).astype(np.uint32),
+             rng.integers(0, V, n_ins).astype(np.uint32),
+             rng.integers(0, V, n_del).astype(np.uint32),
+             rng.integers(0, V, n_del).astype(np.uint32))
+            for _ in range(n_batches)]
+
+
+def _leaves(store):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(store.views)]
+
+
+def _identical(a, b):
+    return len(a) == len(b) and all(
+        x.shape == y.shape and np.array_equal(x, y) for x, y in zip(a, b))
+
+
+def _mk_store(V, seed, maintenance):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, V, 6 * V).astype(np.uint32)
+    dst = rng.integers(0, V, 6 * V).astype(np.uint32)
+    return GraphStore.from_edges(V, src, dst, maintenance=maintenance)
+
+
+# ---------------------------------------------------------------------------
+# regime 1: calm — neutrality + plane overhead
+# ---------------------------------------------------------------------------
+
+def calm(V, batches, tmp, maintenance):
+    def drive(resilient):
+        store = _mk_store(V, 11, maintenance)
+        if resilient:
+            store.attach_wal(rz.WriteAheadLog(tmp / "wal_calm"))
+            store.attach_audits(rz.AuditPolicy(every=4, fail_fast=True))
+        t0 = time.perf_counter()
+        for i_s, i_d, d_s, d_d in batches:
+            store.apply(i_s, i_d, None, d_s, d_d)
+        dt = time.perf_counter() - t0
+        if resilient:
+            store.wal.close()
+        return _leaves(store), dt
+
+    drive(False)                             # warmup: compile every kernel
+    base, t_plain = drive(False)
+    armed, t_armed = drive(True)
+    return {
+        "no_fault_bit_identical": _identical(base, armed),
+        "epoch_ms_plain": round(1e3 * t_plain / len(batches), 3),
+        "epoch_ms_armed": round(1e3 * t_armed / len(batches), 3),
+        "overhead_x": round(t_armed / t_plain, 3),
+    }
+
+
+# ---------------------------------------------------------------------------
+# regime 2: storm — corrupt batches + OOM bursts against the breaker
+# ---------------------------------------------------------------------------
+
+def storm(V, batches, maintenance):
+    store = _mk_store(V, 11, maintenance)
+    registry = PropertyRegistry(store)
+    registry.register(pagerank_stream_property())
+    pipe = RequestPipeline(store, registry, coalesce=False,
+                           breaker=rz.CircuitBreaker(threshold=3, cooldown=4))
+    rng = np.random.default_rng(5)
+    requests = []
+    for t, (i_s, i_d, d_s, d_d) in enumerate(batches * 3):
+        # bursts of 3 consecutive corrupt batches (= breaker threshold):
+        # each burst trips it, the following good updates are shed through
+        # the cooldown, then a half-open probe closes it again
+        if t % 8 in (5, 6, 7):
+            mode = faults.CORRUPTION_MODES[t % len(faults.CORRUPTION_MODES)]
+            c_s, c_d, c_w = faults.corrupt_batch(
+                rng, i_s, i_d, mode=mode, n_vertices=V, lanes=2)
+            requests.append(UpdateBatch(ins_src=c_s, ins_dst=c_d, ins_w=c_w))
+        else:
+            requests.append(UpdateBatch(ins_src=i_s, ins_dst=i_d,
+                                        del_src=d_s, del_dst=d_d))
+        requests.append(PropertyRead("pagerank"))
+
+    t0 = time.perf_counter()
+    responses = pipe.run(requests)
+    dt = time.perf_counter() - t0
+    ok = sum(1 for r in responses if r.kind != "error")
+    stale = sum(1 for r in responses
+                if r.kind == "property" and r.payload.get("stale"))
+    return {
+        "requests": len(requests),
+        "served_ok": ok,
+        "availability_pct": round(100.0 * ok / len(requests), 2),
+        "breaker": pipe.breaker.status(),
+        "stale_property_serves": stale,
+        "final_version": store.version,
+    }
+
+
+# ---------------------------------------------------------------------------
+# regime 3: crashes — kill at every apply phase, recover, converge
+# ---------------------------------------------------------------------------
+
+def crashes(V, batches, tmp, maintenance, *, ckpt_at=2, crash_at=5):
+    oracle = _mk_store(V, 11, maintenance)
+    vers = []
+    for i_s, i_d, d_s, d_d in batches:
+        oracle.apply(i_s, i_d, None, d_s, d_d)
+        vers.append(oracle.version)
+    want = _leaves(oracle)
+
+    runs = []
+    for site in APPLY_SITES:
+        ck, wd = tmp / f"ck_{site}", tmp / f"wal_{site}"
+        store = _mk_store(V, 11, maintenance).attach_wal(
+            rz.WriteAheadLog(wd))
+        registry = PropertyRegistry(store)
+        registry.register(pagerank_stream_property())
+        try:
+            for t, (i_s, i_d, d_s, d_d) in enumerate(batches):
+                if t == ckpt_at:
+                    store.save(ck, registry=registry)
+                if t == crash_at:
+                    with faults.inject(rz.FaultSpec(site, at=1)):
+                        store.apply(i_s, i_d, None, d_s, d_d)
+                else:
+                    store.apply(i_s, i_d, None, d_s, d_d)
+        except rz.InjectedCrash:
+            pass
+        store.wal.close()
+
+        t0 = time.perf_counter()
+        store2, _, report = rz.recover(
+            ck, wd, specs=[pagerank_stream_property()],
+            maintenance=maintenance, wal=rz.WriteAheadLog(wd))
+        t_recover = time.perf_counter() - t0
+        resume = vers.index(store2.version) + 1
+        for i_s, i_d, d_s, d_d in batches[resume:]:
+            store2.apply(i_s, i_d, None, d_s, d_d)
+        runs.append({
+            "site": site,
+            "recover_s": round(t_recover, 3),
+            "replayed_epochs": report.replayed,
+            "lost_in_flight": resume == crash_at,
+            "bit_identical": _identical(_leaves(store2), want),
+        })
+    return runs
+
+
+def run(scale: str = "quick"):
+    import tempfile
+    V, n_batches, n_ins, n_del = ((256, 8, 120, 24) if scale == "quick"
+                                  else (2048, 16, 1024, 256))
+    maintenance = MaintenancePolicy(tombstone_ratio=0.15)
+    batches = _stream(23, V, n_batches, n_ins=n_ins, n_del=n_del)
+
+    with tempfile.TemporaryDirectory() as td:
+        tmp = pathlib.Path(td)
+        calm_r = calm(V, batches, tmp, maintenance)
+        storm_r = storm(V, batches, maintenance)
+        crash_r = crashes(V, batches, tmp, maintenance)
+
+    assert calm_r["no_fault_bit_identical"], \
+        "resilience plane armed with zero faults must be pool-neutral"
+    assert all(r["bit_identical"] for r in crash_r), \
+        f"crash recovery diverged: {crash_r}"
+    assert storm_r["availability_pct"] > 50.0, storm_r
+
+    row("chaos_calm_overhead", calm_r["epoch_ms_armed"] * 1e3,
+        f"overhead={calm_r['overhead_x']}x;neutral="
+        f"{calm_r['no_fault_bit_identical']}")
+    row("chaos_storm", 0.0,
+        f"avail={storm_r['availability_pct']}%;"
+        f"trips={storm_r['breaker']['trips']};"
+        f"shed={storm_r['breaker']['shed']}")
+    for r in crash_r:
+        row(f"chaos_recover_{r['site']}", r["recover_s"] * 1e6,
+            f"replayed={r['replayed_epochs']};identical={r['bit_identical']}")
+
+    payload = {
+        "backend": jax.default_backend(),
+        "scale": scale,
+        "graph": {"V": V, "batches": n_batches,
+                  "ins_per_batch": n_ins, "del_per_batch": n_del},
+        "calm": calm_r,
+        "storm": storm_r,
+        "crashes": crash_r,
+        "note": ("calm = plane armed, zero faults (neutrality + overhead); "
+                 "storm = corrupt batches + breaker (availability); "
+                 "crashes = kill at each apply phase -> recover() -> "
+                 "re-feed, bit-identity asserted vs uninterrupted oracle."),
+    }
+    _OUT.write_text(json.dumps(payload, indent=2) + "\n")
+    row("chaos_bench_json", 0.0, str(_OUT.name))

@@ -23,7 +23,7 @@ def main() -> None:
     args = ap.parse_args()
     scale = "full" if args.full else "quick"
 
-    from . import (churn_bench, dynamic_speedup, memory_table,
+    from . import (chaos_bench, churn_bench, dynamic_speedup, memory_table,
                    pagerank_bench, serve_bench, sharded_bench, sweep_bench,
                    traversal, triangle_bench, update_bench,
                    update_throughput, wcc_bench)
@@ -40,6 +40,7 @@ def main() -> None:
         "update": update_bench,              # Fig 5 old-path vs update engine
         "sharded": sharded_bench,            # 8-device sharded stream plane
         "churn": churn_bench,                # maintenance plane under churn
+        "chaos": chaos_bench,                # fault injection + WAL recovery
     }
     from . import timing
     only = set(args.only.split(",")) if args.only else None

@@ -22,19 +22,102 @@ import jax.numpy as jnp
 import msgpack
 import numpy as np
 
+from ..resilience import faults
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint is missing, partial, or corrupt.
+
+    Raised with an actionable message (which file/key is bad, which steps
+    remain usable) instead of the bare KeyError/AssertionError a torn
+    directory used to surface.  ``latest_step`` never *selects* a
+    checkpoint that would raise this — a torn dir is skipped in favour of
+    the newest valid one — so this escaping usually means an explicit
+    ``step=`` pointed at a casualty.
+    """
+
+
+_REQUIRED_MANIFEST_KEYS = ("step", "treedef", "n_leaves", "extra", "leaves")
+
 
 def _flatten(tree) -> Tuple[list, Any]:
     leaves, treedef = jax.tree.flatten(tree)
     return leaves, treedef
 
 
+def _fsync_dir(path: Path) -> None:
+    """Durably record a directory's entries (the rename itself)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:                      # non-POSIX dir-open: best effort
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def validate_checkpoint(path: str | Path) -> Dict:
+    """Structurally validate one ``step_*`` dir; return its manifest.
+
+    Checks: the manifest exists and unpacks, carries the required keys,
+    and every leaf file it references is present and non-empty.  Raises
+    :class:`CheckpointError` naming the first problem found.
+    """
+    path = Path(path)
+    mf = path / "manifest.msgpack"
+    if not mf.exists():
+        raise CheckpointError(
+            f"{path} has no manifest.msgpack — the save was interrupted "
+            "before publish; delete the directory or pick another step")
+    try:
+        manifest = msgpack.unpackb(mf.read_bytes())
+    except Exception as e:
+        raise CheckpointError(
+            f"{path}/manifest.msgpack is corrupt ({type(e).__name__}: {e}) "
+            "— pick another step or re-checkpoint") from e
+    missing = [k for k in _REQUIRED_MANIFEST_KEYS if k not in manifest]
+    if missing:
+        raise CheckpointError(
+            f"{path}/manifest.msgpack is missing keys {missing} — saved by "
+            "an incompatible version; pick another step")
+    if len(manifest["leaves"]) != manifest["n_leaves"]:
+        raise CheckpointError(
+            f"{path} manifest lists {len(manifest['leaves'])} leaves but "
+            f"declares n_leaves={manifest['n_leaves']} — corrupt manifest")
+    for info in manifest["leaves"]:
+        leaf = path / f"leaf_{info['i']:05d}.npy"
+        if not leaf.exists() or leaf.stat().st_size == 0:
+            raise CheckpointError(
+                f"{path} is partial: {leaf.name} is "
+                f"{'missing' if not leaf.exists() else 'empty'} — the save "
+                "was interrupted; pick another step or re-checkpoint")
+    return manifest
+
+
+def _gc_stale(ckpt_dir: Path) -> None:
+    """Sweep work dirs a crashed saver left behind (.tmp_*/.old_*)."""
+    for junk in list(ckpt_dir.glob(".tmp_step_*")) + \
+            list(ckpt_dir.glob(".old_step_*")):
+        shutil.rmtree(junk, ignore_errors=True)
+
+
 def save(ckpt_dir: str | Path, step: int, tree: Any, *,
          extra: Optional[Dict] = None, keep_last: int = 3) -> Path:
-    """Atomically persist ``tree`` for ``step``.  Returns the final path."""
+    """Atomically persist ``tree`` for ``step``.  Returns the final path.
+
+    Crash-safe at every point: leaves and manifest are written and fsynced
+    into a hidden tmp dir, then published by rename (the previous
+    checkpoint of the same step is moved aside first and removed only
+    after the new one is in place — a kill mid-publish leaves at least one
+    restorable copy).  ``latest_step`` skips torn dirs, so an interrupted
+    save never shadows an older valid checkpoint.
+    """
     ckpt_dir = Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
     final = ckpt_dir / f"step_{step:010d}"
     tmp = ckpt_dir / f".tmp_step_{step:010d}_{os.getpid()}"
+    old = ckpt_dir / f".old_step_{step:010d}_{os.getpid()}"
     if tmp.exists():
         shutil.rmtree(tmp)
     tmp.mkdir()
@@ -49,40 +132,62 @@ def save(ckpt_dir: str | Path, step: int, tree: Any, *,
         "leaves": [],
     }
     for i, leaf in enumerate(leaves):
+        faults.fault_point("ckpt.save.leaf", step=int(step), i=i)
         arr = np.asarray(jax.device_get(leaf))
         raw = arr.dtype.kind == "V" or "bfloat16" in str(arr.dtype) \
             or "float8" in str(arr.dtype)
         store = arr.view(np.dtype(f"u{arr.dtype.itemsize}")) if raw else arr
-        np.save(tmp / f"leaf_{i:05d}.npy", store)
+        with open(tmp / f"leaf_{i:05d}.npy", "wb") as f:
+            np.save(f, store)
+            f.flush()
+            os.fsync(f.fileno())
         manifest["leaves"].append(
             {"i": i, "shape": list(arr.shape), "dtype": str(arr.dtype),
              "raw": bool(raw)})
+    faults.fault_point("ckpt.save.manifest", step=int(step))
     with open(tmp / "manifest.msgpack", "wb") as f:
         f.write(msgpack.packb(manifest))
         f.flush()
         os.fsync(f.fileno())
 
+    # publish: move any previous copy of this step aside, rename the tmp
+    # into place, only then drop the old copy.  No window exists where the
+    # step name points at nothing — a crash between the renames leaves the
+    # old copy recoverable under .old_* and latest_step falls back to the
+    # newest manifest-complete dir.
+    faults.fault_point("ckpt.save.publish", step=int(step))
     if final.exists():
-        shutil.rmtree(final)
+        if old.exists():
+            shutil.rmtree(old)
+        os.rename(final, old)
     os.rename(tmp, final)
+    _fsync_dir(ckpt_dir)
+    shutil.rmtree(old, ignore_errors=True)
 
-    # retention
+    # retention + sweep of any crashed saver's leftovers
     steps = sorted(p for p in ckpt_dir.glob("step_*") if p.is_dir())
-    for old in steps[:-keep_last]:
-        shutil.rmtree(old, ignore_errors=True)
+    for stale in steps[:-keep_last]:
+        shutil.rmtree(stale, ignore_errors=True)
+    _gc_stale(ckpt_dir)
     return final
 
 
 def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    """Newest step whose checkpoint is structurally complete.
+
+    Torn dirs (no manifest, missing leaves — an interrupted save) are
+    skipped, falling back to the newest valid one.
+    """
     ckpt_dir = Path(ckpt_dir)
     if not ckpt_dir.exists():
         return None
     steps = sorted(ckpt_dir.glob("step_*"))
-    # a dir is valid only if its manifest landed (atomic rename guarantees
-    # this, but be defensive against torn copies from older runs)
     for p in reversed(steps):
-        if (p / "manifest.msgpack").exists():
-            return int(p.name.split("_")[1])
+        try:
+            validate_checkpoint(p)
+        except CheckpointError:
+            continue
+        return int(p.name.split("_")[1])
     return None
 
 
@@ -92,14 +197,15 @@ def read_manifest(ckpt_dir: str | Path, *, step: Optional[int] = None) -> Dict:
     Restore paths that must rebuild a ``like`` pytree first (e.g. the stream
     GraphStore, whose SlabGraph metadata lives in ``extra``) read this to
     learn the structure, then call ``restore`` with the resolved step.
+    The checkpoint is structurally validated — a partial/corrupt dir raises
+    :class:`CheckpointError` with the offending file named.
     """
     ckpt_dir = Path(ckpt_dir)
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
-    with open(ckpt_dir / f"step_{step:010d}" / "manifest.msgpack", "rb") as f:
-        return msgpack.unpackb(f.read())
+    return validate_checkpoint(ckpt_dir / f"step_{step:010d}")
 
 
 def restore(ckpt_dir: str | Path, like: Any, *, step: Optional[int] = None,
@@ -116,12 +222,15 @@ def restore(ckpt_dir: str | Path, like: Any, *, step: Optional[int] = None,
         if step is None:
             raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
     path = ckpt_dir / f"step_{step:010d}"
-    with open(path / "manifest.msgpack", "rb") as f:
-        manifest = msgpack.unpackb(f.read())
+    manifest = validate_checkpoint(path)
 
     leaves_like, treedef = _flatten(like)
-    assert manifest["n_leaves"] == len(leaves_like), \
-        (manifest["n_leaves"], len(leaves_like))
+    if manifest["n_leaves"] != len(leaves_like):
+        raise CheckpointError(
+            f"{path} holds {manifest['n_leaves']} leaves but the restore "
+            f"skeleton has {len(leaves_like)} — the ``like`` pytree does "
+            "not match what was saved (wrong store kind, missing property "
+            "specs, or a different view set)")
     shard_leaves = (jax.tree.leaves(
         shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
         if shardings is not None else [None] * len(leaves_like))
@@ -136,7 +245,13 @@ def restore(ckpt_dir: str | Path, like: Any, *, step: Optional[int] = None,
 
     out = []
     for i, (ref, shd) in enumerate(zip(leaves_like, shard_leaves)):
-        arr = np.load(path / f"leaf_{i:05d}.npy")
+        try:
+            arr = np.load(path / f"leaf_{i:05d}.npy")
+        except Exception as e:
+            raise CheckpointError(
+                f"{path}/leaf_{i:05d}.npy failed to load "
+                f"({type(e).__name__}: {e}) — the checkpoint is corrupt; "
+                "pick another step or re-checkpoint") from e
         info = manifest["leaves"][i]
         if info.get("raw"):
             arr = arr.view(logical_dtype(info["dtype"]))

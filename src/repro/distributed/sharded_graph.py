@@ -386,6 +386,12 @@ def _resolve_routing(sg: ShardedSlabGraph, src, dst, w, cap: Optional[int]):
     n = src.shape[0]
     if cap is None:
         cap = n
+    # the loop is naturally bounded (cap >= n returns statically, pow2
+    # growth reaches n in O(log n) retries) — the explicit budget turns a
+    # logic regression or injected overflow storm into a structured error
+    # instead of a spin
+    attempts = 0
+    max_attempts = max(4, n.bit_length() + 2)
     while True:
         bsrc, bdst, bw, origin, overflow = route_edges(
             src, dst, w, n_shards=sg.n_shards, cap=cap)
@@ -396,10 +402,19 @@ def _resolve_routing(sg: ShardedSlabGraph, src, dst, w, cap: Optional[int]):
                 "insert/delete/query_edges_sharded traced with cap "
                 f"{cap} < batch {n}: overflow cannot be checked inside "
                 "jit — pass cap=None (safe default) or cap >= batch size")
-        over = int(overflow)
+        from ..resilience import faults
+        over = int(overflow) + faults.fault_overflow(
+            "route.resolve", cap=cap, n=n)
         if over == 0:
             return bsrc, bdst, bw, origin
-        new_cap = next_pow2(cap + over, lo=1)
+        attempts += 1
+        if attempts >= max_attempts:
+            from ..resilience.guard import RetryExhausted
+            raise RetryExhausted(
+                "route.resolve", attempts,
+                RuntimeError(f"routing still overflows at cap {cap} "
+                             f"(batch {n}, overflow {over})"))
+        new_cap = min(next_pow2(cap + over, lo=1), n)
         from .. import obs
         obs.instant("route.grow_retry", cap=cap, over=over,
                     new_cap=new_cap)

@@ -1,0 +1,53 @@
+"""`repro.resilience` — the fault-tolerance plane (DESIGN.md §11).
+
+The Meerkat loop assumes fault-free batch application; a serving system
+for millions of users cannot.  This package adds what the
+streaming-graph-systems survey (Besta et al., arXiv 1912.12740) identifies
+as the production layer on top — transactional batch ingestion, durability
+via logging, graceful degradation under load — in four pieces:
+
+* ``faults``     — deterministic seedable fault injection at named sites
+  across the stores, pipeline, and checkpoint layer (zero-cost when
+  disarmed — one branch per site, pools bit-identical on vs off);
+* ``wal``        — a durable CRC-framed write-ahead log of canonical
+  batches (fsync before dispatch, segment rotation, checkpoint-driven
+  truncation) and ``recover()`` = restore + WAL-suffix replay, proven
+  bit-identical to the uninterrupted run for both store kinds;
+* ``invariants`` — structural pool audits (chain well-formedness, degree
+  consistency, free-list disjointness, cross-view edge-multiset
+  agreement) on an ``AuditPolicy(every=N)`` cadence;
+* ``guard``      — admission-time batch validation (``QuarantinedBatch``),
+  bounded capacity-grow retry budgets, and the pipeline's circuit breaker
+  (shed updates after K consecutive failures, keep serving version-tagged
+  stale reads).
+
+All of it is opt-in: a store with no WAL attached, no audit policy, and no
+fault plan armed takes exactly the code path current main takes —
+tests/test_resilience.py asserts pool bit-identity for that.
+"""
+from __future__ import annotations
+
+from . import faults, guard, invariants, wal
+from .faults import (CRASH, LATENCY, OOM, OVERFLOW, FaultError, FaultPlan,
+                     FaultSpec, InjectedCrash, InjectedOOM, corrupt_batch,
+                     fault_overflow, fault_point, inject)
+from .guard import (PIPELINE_RECOVERABLE, CircuitBreaker, QuarantinedBatch,
+                    RetryBudget, RetryExhausted, run_with_retries,
+                    validate_batch)
+from .invariants import (AuditPolicy, InvariantReport,
+                         InvariantViolationError, Violation, audit_graph,
+                         audit_store, edge_multiset_hash)
+from .wal import (RecoveryReport, WalRecord, WriteAheadLog, read_wal,
+                  recover)
+
+__all__ = [
+    "faults", "guard", "invariants", "wal",
+    "CRASH", "OOM", "LATENCY", "OVERFLOW",
+    "FaultError", "FaultPlan", "FaultSpec", "InjectedCrash", "InjectedOOM",
+    "corrupt_batch", "fault_point", "fault_overflow", "inject",
+    "QuarantinedBatch", "RetryBudget", "RetryExhausted", "CircuitBreaker",
+    "run_with_retries", "validate_batch", "PIPELINE_RECOVERABLE",
+    "AuditPolicy", "InvariantReport", "InvariantViolationError", "Violation",
+    "audit_graph", "audit_store", "edge_multiset_hash",
+    "WriteAheadLog", "WalRecord", "RecoveryReport", "read_wal", "recover",
+]

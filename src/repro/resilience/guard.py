@@ -1,0 +1,252 @@
+"""Admission guards + overload protection for the serving path.
+
+Three defenses, all host-side and state-free until they fire:
+
+* :func:`validate_batch` — admission-time validation of RAW update inputs,
+  run before ``canonical_batch``'s uint32 casts can silently wrap a
+  negative id or truncate a float.  A bad batch raises
+  :class:`QuarantinedBatch` with structured per-field reasons; the store
+  version has not moved and no pool was touched.
+* :class:`RetryBudget` / :func:`run_with_retries` — bounded
+  retry-with-backoff around the capacity-grow paths (the things that can
+  transiently OOM).  Exhaustion raises :class:`RetryExhausted` instead of
+  looping forever.
+* :class:`CircuitBreaker` — trips after ``threshold`` consecutive apply
+  failures; while open the pipeline sheds update load (structured error
+  Responses) and keeps serving version-tagged stale property reads.  The
+  cooldown is counted in shed update groups, not wall time, so tests and
+  benches replay deterministically.
+
+Validation semantics mirror the update plane's actual contract: ``src``
+ids index bucket layouts and must be ``< n_vertices``; ``dst`` ids are
+sentinel-guarded on device and may exceed ``n_vertices`` (the churn bench
+streams a 2**20 key space into a 512-vertex store) but must not collide
+with the reserved key sentinels.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, List, Optional
+
+import numpy as np
+
+from .. import obs
+from ..core.hashing import EMPTY_KEY, INVALID_VERTEX, TOMBSTONE_KEY
+from .faults import InjectedOOM
+
+#: dst ids the update plane reserves (uint32 key sentinels)
+_SENTINELS = (int(TOMBSTONE_KEY), int(EMPTY_KEY), int(INVALID_VERTEX))
+
+
+class QuarantinedBatch(Exception):
+    """An update batch rejected at admission.  ``reasons`` is a list of
+    ``{"field", "reason", "count", "example"}`` dicts; the store it was
+    headed for is untouched (version unchanged, no pool mutated)."""
+
+    def __init__(self, reasons: List[dict]):
+        self.reasons = reasons
+        bits = "; ".join(f"{r['field']}: {r['reason']} x{r['count']}"
+                         for r in reasons)
+        super().__init__(f"batch quarantined — {bits}")
+
+
+class RetryExhausted(Exception):
+    """A bounded retry loop ran out of budget."""
+
+    def __init__(self, site: str, attempts: int, last: Exception):
+        super().__init__(f"{site}: {attempts} attempts exhausted "
+                         f"(last: {last})")
+        self.site = site
+        self.attempts = attempts
+        self.last = last
+
+
+def _check_ids(reasons: List[dict], field: str, raw, *,
+               n_vertices: int, is_src: bool) -> None:
+    a = np.asarray(() if raw is None else raw)
+    if a.size == 0:
+        return
+    if a.dtype.kind == "f":
+        bad = ~np.isfinite(a)
+        if bad.any():
+            reasons.append({"field": field, "reason": "non-finite id",
+                            "count": int(bad.sum()),
+                            "example": float(a[bad][0])})
+            return
+        a = a.astype(np.int64)
+    elif a.dtype.kind not in "iub":
+        reasons.append({"field": field, "reason": "non-numeric dtype",
+                        "count": int(a.size), "example": str(a.dtype)})
+        return
+    else:
+        a = a.astype(np.int64)
+    neg = a < 0
+    if neg.any():
+        reasons.append({"field": field, "reason": "negative id",
+                        "count": int(neg.sum()), "example": int(a[neg][0])})
+        return
+    if is_src:
+        oob = a >= n_vertices
+        if oob.any():
+            reasons.append({"field": field,
+                            "reason": f"src >= n_vertices ({n_vertices})",
+                            "count": int(oob.sum()),
+                            "example": int(a[oob][0])})
+    else:
+        bad = (a > 0xFFFFFFFF) | np.isin(a, _SENTINELS)
+        if bad.any():
+            reasons.append({"field": field,
+                            "reason": "reserved/overflowing dst key",
+                            "count": int(bad.sum()),
+                            "example": int(a[bad][0])})
+
+
+def validate_batch(ins_src, ins_dst, ins_w, del_src, del_dst, *,
+                   n_vertices: int) -> None:
+    """Admission validation on the RAW apply inputs (pre-canonicalisation).
+
+    Raises :class:`QuarantinedBatch` on: mismatched insert/delete halves,
+    non-finite or negative ids, src ids outside the vertex range, dst ids
+    colliding with the reserved key sentinels, and non-finite weights.
+    Accepted batches pass through untouched — the guard never modifies a
+    batch, so it is trivially neutral for pool bit-identity.
+    """
+    reasons: List[dict] = []
+    n_ins = len(np.asarray(() if ins_src is None else ins_src))
+    n_ind = len(np.asarray(() if ins_dst is None else ins_dst))
+    n_del = len(np.asarray(() if del_src is None else del_src))
+    n_dd = len(np.asarray(() if del_dst is None else del_dst))
+    if n_ins != n_ind:
+        reasons.append({"field": "ins", "reason":
+                        f"src/dst length mismatch ({n_ins} vs {n_ind})",
+                        "count": 1, "example": None})
+    if n_del != n_dd:
+        reasons.append({"field": "del", "reason":
+                        f"src/dst length mismatch ({n_del} vs {n_dd})",
+                        "count": 1, "example": None})
+    if ins_w is not None:
+        w = np.asarray(ins_w)
+        if len(w) != n_ins:
+            reasons.append({"field": "ins_w", "reason":
+                            f"weight length mismatch ({len(w)} vs {n_ins})",
+                            "count": 1, "example": None})
+        elif w.size and not np.isfinite(
+                w.astype(np.float64, copy=False)).all():
+            bad = ~np.isfinite(w.astype(np.float64, copy=False))
+            reasons.append({"field": "ins_w", "reason": "non-finite weight",
+                            "count": int(bad.sum()),
+                            "example": float(np.asarray(w)[bad][0])})
+    if not reasons:       # lengths agree: per-field id validation
+        _check_ids(reasons, "ins_src", ins_src, n_vertices=n_vertices,
+                   is_src=True)
+        _check_ids(reasons, "ins_dst", ins_dst, n_vertices=n_vertices,
+                   is_src=False)
+        _check_ids(reasons, "del_src", del_src, n_vertices=n_vertices,
+                   is_src=True)
+        _check_ids(reasons, "del_dst", del_dst, n_vertices=n_vertices,
+                   is_src=False)
+    if reasons:
+        obs.emit_event("batch_quarantined", reasons=len(reasons))
+        obs.inc("guard.quarantined")
+        raise QuarantinedBatch(reasons)
+
+
+# --------------------------------------------------------------------------
+# bounded retries
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RetryBudget:
+    """Bounded retry-with-backoff for transient failures (OOM kinds)."""
+    max_attempts: int = 4
+    backoff_s: float = 0.0     # 0 keeps tests/benches wall-time free
+    multiplier: float = 2.0
+
+
+def run_with_retries(fn: Callable[[], Any], *, budget: RetryBudget,
+                     site: str) -> Any:
+    """Run ``fn`` under the budget; only :class:`InjectedOOM` (the
+    transient-allocation failure class) is retried.  Exhaustion raises
+    :class:`RetryExhausted`."""
+    delay = budget.backoff_s
+    last: Optional[Exception] = None
+    for attempt in range(1, budget.max_attempts + 1):
+        try:
+            return fn()
+        except InjectedOOM as e:
+            last = e
+            obs.emit_event("retry", site=site, attempt=attempt)
+            obs.inc(f"guard.retry.{site}")
+            if delay:
+                time.sleep(delay)
+                delay *= budget.multiplier
+    raise RetryExhausted(site, budget.max_attempts, last)
+
+
+#: the failure classes the pipeline converts into error Responses (an
+#: InjectedCrash is deliberately NOT here — a simulated kill must unwind)
+PIPELINE_RECOVERABLE = (QuarantinedBatch, RetryExhausted, InjectedOOM)
+
+
+# --------------------------------------------------------------------------
+# circuit breaker
+# --------------------------------------------------------------------------
+
+CLOSED = "closed"
+OPEN = "open"
+HALF_OPEN = "half_open"
+
+
+class CircuitBreaker:
+    """Count-based breaker over the pipeline's update path.
+
+    ``threshold`` consecutive apply failures trip it OPEN; while open every
+    update group is shed (``allow()`` False).  After ``cooldown`` shed
+    groups the breaker goes HALF_OPEN and admits one probe: success closes
+    it, failure re-opens it (and restarts the cooldown).  Counting in shed
+    groups instead of wall time keeps chaos tests deterministic.
+    """
+
+    def __init__(self, *, threshold: int = 3, cooldown: int = 8):
+        assert threshold >= 1 and cooldown >= 1
+        self.threshold = int(threshold)
+        self.cooldown = int(cooldown)
+        self.state = CLOSED
+        self.failures = 0          # consecutive failures while closed
+        self.trips = 0
+        self.shed_count = 0        # total update groups shed
+        self._shed_since_trip = 0
+
+    def allow(self) -> bool:
+        """May the next update group run?  (OPEN counts toward cooldown via
+        ``shed`` — call it when this returns False.)"""
+        if self.state == OPEN and self._shed_since_trip >= self.cooldown:
+            self.state = HALF_OPEN
+            obs.emit_event("breaker_half_open")
+        return self.state != OPEN
+
+    def shed(self) -> None:
+        self.shed_count += 1
+        self._shed_since_trip += 1
+        obs.inc("breaker.shed")
+
+    def record_success(self) -> None:
+        if self.state != CLOSED:
+            obs.emit_event("breaker_closed")
+        self.state = CLOSED
+        self.failures = 0
+
+    def record_failure(self) -> None:
+        self.failures += 1
+        if self.state == HALF_OPEN or self.failures >= self.threshold:
+            if self.state != OPEN:
+                self.trips += 1
+                obs.emit_event("breaker_open", failures=self.failures)
+                obs.inc("breaker.trips")
+            self.state = OPEN
+            self._shed_since_trip = 0
+
+    def status(self) -> dict:
+        return {"state": self.state, "failures": self.failures,
+                "trips": self.trips, "shed": self.shed_count}

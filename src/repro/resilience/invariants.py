@@ -1,0 +1,289 @@
+"""Pool invariant audits — structural health checks on the slab pools.
+
+Thousands of donated in-place epochs mutate the pools with nothing ever
+re-validating them; a kernel bug (or a bit of corrupted state) would
+propagate silently until an oracle test happened to notice.  This module
+makes the well-formedness contract checkable on demand and on a
+``MaintenancePolicy``-style cadence (``AuditPolicy(every=N)`` — the store
+runs an audit every N closed epochs):
+
+* **chains** — every ``next_slab`` pointer lands in ``[-1, S)``, chains
+  from the bucket heads terminate within the pool (no cycles: a bounded
+  walk of ``S`` steps must exhaust every chain), every chained slab is
+  allocated and owned by its bucket's vertex;
+* **degrees** — per-vertex live-lane counts equal the ``degree`` field and
+  sum to ``n_edges``;
+* **free list** — ``free_list[:free_top]`` entries are in-range, unique,
+  unallocated, and disjoint from every live chain;
+* **cross-view** — the forward view's live edge multiset equals the
+  transpose view's with (src,dst) swapped, by order-independent hash
+  (splitmix64 sum), and the symmetric view equals the union of both
+  directions.
+
+Violations are structured (:class:`Violation`), mirrored into
+``obs.emit_event("invariant_violation", ...)`` and the store's bounded
+``audit_events`` stream; ``AuditPolicy(fail_fast=True)`` escalates them to
+:class:`InvariantViolationError`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .. import obs
+from ..core.hashing import TOMBSTONE_KEY
+
+_LIVE_KEY_MAX = np.uint32(TOMBSTONE_KEY)   # keys below this are live ids
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    view: str
+    check: str
+    detail: str
+    count: int = 1
+
+    def as_event(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class InvariantReport:
+    version: int
+    views: Tuple[str, ...]
+    checks_run: int
+    violations: Tuple[Violation, ...]
+    duration_s: float
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def as_event(self) -> dict:
+        return {"version": self.version, "views": list(self.views),
+                "checks_run": self.checks_run, "ok": self.ok,
+                "violations": [v.as_event() for v in self.violations],
+                "duration_s": self.duration_s}
+
+
+class InvariantViolationError(Exception):
+    def __init__(self, report: InvariantReport):
+        self.report = report
+        bits = "; ".join(f"{v.view}/{v.check}: {v.detail}"
+                         for v in report.violations[:4])
+        more = len(report.violations) - 4
+        super().__init__(
+            f"pool invariants violated at version {report.version}: {bits}"
+            + (f" (+{more} more)" if more > 0 else ""))
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditPolicy:
+    """When to audit and how hard to react (MaintenancePolicy-style)."""
+    every: int = 0                 # audit every N closed epochs (0 = never)
+    fail_fast: bool = False        # violations raise instead of just logging
+    cross_view: bool = True        # include the edge-multiset hash checks
+    views: Optional[Sequence[str]] = None   # None = all live views
+
+
+# --------------------------------------------------------------------------
+# per-graph structural checks (host-side numpy, like core.pool_stats)
+# --------------------------------------------------------------------------
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    """Vectorised splitmix64 finalizer (order-independent multiset hash =
+    wrap-sum of the per-edge hashes)."""
+    with np.errstate(over="ignore"):
+        x = (x + np.uint64(0x9E3779B97F4A7C15))
+        x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        return x ^ (x >> np.uint64(31))
+
+
+def live_edges(g, *, shard: int = 0, n_shards: int = 1
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """(src, dst) of every live lane; src re-globalised for sharded slices
+    (local owner ``v`` on shard ``k`` is global ``v * n_shards + k``)."""
+    keys = np.asarray(g.keys)
+    sv = np.asarray(g.slab_vertex)
+    live = (sv >= 0)[:, None] & (keys < _LIVE_KEY_MAX)
+    rows, lanes = np.nonzero(live)
+    src = sv[rows].astype(np.int64) * n_shards + shard
+    return src.astype(np.uint64), keys[rows, lanes].astype(np.uint64)
+
+
+def edge_multiset_hash(src: np.ndarray, dst: np.ndarray, *,
+                       swap: bool = False) -> int:
+    """Order-independent hash of the (src, dst) edge multiset."""
+    if swap:
+        src, dst = dst, src
+    key = (src.astype(np.uint64) << np.uint64(32)) | dst.astype(np.uint64)
+    with np.errstate(over="ignore"):
+        return int(_splitmix64(key).sum(dtype=np.uint64))
+
+
+def audit_graph(g, *, view: str = "forward") -> List[Violation]:
+    """Checks 1–3 (chains, degrees, free list) on one SlabGraph."""
+    out: List[Violation] = []
+    keys = np.asarray(g.keys)
+    nxt = np.asarray(g.next_slab)
+    sv = np.asarray(g.slab_vertex)
+    bv = np.asarray(g.bucket_vertex)
+    S = g.capacity_slabs
+    nb = g.n_buckets
+
+    # -- chain pointers in range ------------------------------------------
+    bad_ptr = (nxt < -1) | (nxt >= S)
+    if bad_ptr.any():
+        out.append(Violation(view, "chain_pointer_range",
+                             f"next_slab outside [-1, {S})",
+                             int(bad_ptr.sum())))
+        nxt = np.where(bad_ptr, -1, nxt)   # clamp so the walk can continue
+
+    # -- bounded walk from every bucket head: cycles + ownership ----------
+    visited = np.zeros(S, dtype=bool)
+    cur = np.arange(nb, dtype=np.int64)
+    owner = bv.astype(np.int64)
+    active = np.ones(nb, dtype=bool)
+    steps = 0
+    own_bad = 0
+    while active.any() and steps <= S:
+        at = cur[active]
+        visited[at] = True
+        own_bad += int((sv[at] != owner[active]).sum())
+        nxt_v = nxt[at]
+        cur[active] = np.maximum(nxt_v, 0)
+        active[active] = nxt_v >= 0
+        steps += 1
+    if active.any():
+        out.append(Violation(view, "chain_cycle",
+                             f"{int(active.sum())} chains still walking "
+                             f"after {S} steps (cycle)", int(active.sum())))
+    if own_bad:
+        out.append(Violation(view, "chain_ownership",
+                             "chained slab owned by a different vertex "
+                             "than its bucket", own_bad))
+    dangling = visited & (sv < 0)
+    if dangling.any():
+        out.append(Violation(view, "chain_unallocated",
+                             "live chain reaches an unallocated slab",
+                             int(dangling.sum())))
+
+    # -- degree / n_edges consistency -------------------------------------
+    live = (sv >= 0)[:, None] & (keys < _LIVE_KEY_MAX)
+    per_slab = live.sum(axis=1)
+    per_vertex = np.zeros(g.n_vertices, dtype=np.int64)
+    np.add.at(per_vertex, sv[sv >= 0], per_slab[sv >= 0])
+    deg = np.asarray(g.degree).astype(np.int64)
+    mism = per_vertex != deg
+    if mism.any():
+        v0 = int(np.nonzero(mism)[0][0])
+        out.append(Violation(view, "degree_mismatch",
+                             f"live lanes != degree for {int(mism.sum())} "
+                             f"vertices (e.g. v{v0}: {int(per_vertex[v0])} "
+                             f"vs {int(deg[v0])})", int(mism.sum())))
+    n_edges = int(np.asarray(g.n_edges))
+    if int(per_vertex.sum()) != n_edges:
+        out.append(Violation(view, "n_edges_mismatch",
+                             f"{int(per_vertex.sum())} live lanes vs "
+                             f"n_edges={n_edges}"))
+
+    # -- free list: in-range, unique, unallocated, disjoint from chains ---
+    top = int(np.asarray(g.free_top))
+    fl = np.asarray(g.free_list)[:top]
+    bad = (fl < 0) | (fl >= S)
+    if bad.any():
+        out.append(Violation(view, "free_list_range",
+                             f"free ids outside [0, {S})", int(bad.sum())))
+        fl = fl[~bad]
+    if len(np.unique(fl)) != len(fl):
+        out.append(Violation(view, "free_list_dup",
+                             "duplicate ids on the free list",
+                             len(fl) - len(np.unique(fl))))
+    realloc = sv[fl] >= 0
+    if realloc.any():
+        out.append(Violation(view, "free_list_allocated",
+                             "free-list slab still allocated",
+                             int(realloc.sum())))
+    in_chain = visited[fl]
+    if in_chain.any():
+        out.append(Violation(view, "free_list_in_chain",
+                             "free-list slab reachable from a live chain",
+                             int(in_chain.sum())))
+    return out
+
+
+# --------------------------------------------------------------------------
+# whole-store audit (both store kinds)
+# --------------------------------------------------------------------------
+
+def _store_edges(store, view: str) -> Tuple[np.ndarray, np.ndarray]:
+    """Global live (src, dst) of one view for either store kind."""
+    g = store.views[view]
+    if hasattr(g, "n_shards"):           # ShardedSlabGraph
+        from ..distributed.sharded_graph import shard_slice
+        parts = [live_edges(shard_slice(g, k), shard=k,
+                            n_shards=g.n_shards)
+                 for k in range(g.n_shards)]
+        src = np.concatenate([p[0] for p in parts])
+        dst = np.concatenate([p[1] for p in parts])
+        return src, dst
+    return live_edges(g)
+
+
+def audit_store(store, *, views: Optional[Sequence[str]] = None,
+                cross_view: bool = True) -> InvariantReport:
+    """Run every invariant over ``views`` (default: all live views)."""
+    t0 = time.perf_counter()
+    names = tuple(views) if views else tuple(store.views)
+    violations: List[Violation] = []
+    checks = 0
+    for name in names:
+        g = store.views[name]
+        if hasattr(g, "n_shards"):
+            from ..distributed.sharded_graph import shard_slice
+            for k in range(g.n_shards):
+                violations += [dataclasses.replace(v, view=f"{name}[{k}]")
+                               for v in audit_graph(shard_slice(g, k),
+                                                    view=name)]
+                checks += 6
+        else:
+            violations += audit_graph(g, view=name)
+            checks += 6
+
+    if cross_view and "forward" in names:
+        f_src, f_dst = _store_edges(store, "forward")
+        fwd_hash = edge_multiset_hash(f_src, f_dst)
+        if "transpose" in names:
+            t_src, t_dst = _store_edges(store, "transpose")
+            checks += 1
+            if edge_multiset_hash(t_src, t_dst, swap=True) != fwd_hash:
+                violations.append(Violation(
+                    "transpose", "edge_multiset",
+                    "transpose edge multiset != swapped forward multiset"))
+        if "symmetric" in names:
+            s_src, s_dst = _store_edges(store, "symmetric")
+            checks += 1
+            fwd = set(zip(f_src.tolist(), f_dst.tolist()))
+            union = fwd | {(d, s) for s, d in fwd}
+            sym = set(zip(s_src.tolist(), s_dst.tolist()))
+            if sym != union:
+                violations.append(Violation(
+                    "symmetric", "union_mismatch",
+                    f"symmetric view has {len(sym)} edges vs the "
+                    f"{len(union)}-edge union of both directions",
+                    abs(len(sym ^ union))))
+
+    report = InvariantReport(
+        version=store.version, views=names, checks_run=checks,
+        violations=tuple(violations),
+        duration_s=time.perf_counter() - t0)
+    for v in violations:
+        obs.emit_event("invariant_violation", version=store.version,
+                       **v.as_event())
+        obs.inc("invariants.violations")
+    obs.inc("invariants.audits")
+    return report

@@ -18,7 +18,7 @@ pytree so checkpoints restore without recomputing anything.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 from .. import obs
 from .store import AppliedBatch, GraphStore
@@ -148,6 +148,16 @@ class PropertyRegistry:
                         self.store.version - e.version)
         self._catch_up(e)
         return e.state
+
+    def peek(self, name: str) -> Tuple[Any, int]:
+        """``(state, version)`` as-is — NO catch-up, no device work.
+
+        The degraded-mode read: while the pipeline's circuit breaker is
+        open (store unhealthy), ``PropertyRead`` serves this version-tagged
+        possibly-stale state instead of forcing a replay through a store
+        that is failing."""
+        e = self._entries[name]
+        return e.state, e.version
 
     def refresh(self, name: str) -> Any:
         """Force a static recompute (also re-anchors the version)."""

@@ -13,6 +13,15 @@ number of device calls:
   queries only pay for the properties they read).
 
 Every request gets a ``Response`` carrying the store version it observed.
+
+Overload safety (DESIGN.md §11): malformed requests and recoverable apply
+failures (``QuarantinedBatch``, ``RetryExhausted``) come back as structured
+``kind="error"`` responses — the pipeline keeps serving the rest of the
+sequence.  An optional :class:`~repro.resilience.CircuitBreaker` sheds
+update groups after K consecutive apply failures while reads keep working;
+while the breaker is open, ``PropertyRead`` degrades to the registry's
+``peek`` — a version-tagged, possibly-stale state — instead of forcing a
+catch-up replay through a store that is failing.
 """
 from __future__ import annotations
 
@@ -23,6 +32,9 @@ from typing import Any, Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from .. import obs
+from ..resilience.faults import InjectedCrash
+from ..resilience.guard import PIPELINE_RECOVERABLE, CircuitBreaker, \
+    QuarantinedBatch
 from .properties import PropertyRegistry
 from .store import GraphStore
 
@@ -132,11 +144,15 @@ class RequestPipeline:
 
     def __init__(self, store: GraphStore,
                  registry: Optional[PropertyRegistry] = None, *,
-                 coalesce: bool = True, batch_membership: bool = True):
+                 coalesce: bool = True, batch_membership: bool = True,
+                 breaker: Optional[CircuitBreaker] = None):
         self.store = store
         self.registry = registry
         self.coalesce = coalesce
         self.batch_membership = batch_membership
+        # optional overload valve: updates shed while open, reads degrade
+        # to version-tagged stale serves (None = fail per-request only)
+        self.breaker = breaker
 
     # -- group runners ------------------------------------------------------
     def _apply_updates(self, group: List[UpdateBatch]) -> Dict[str, Any]:
@@ -171,6 +187,15 @@ class RequestPipeline:
         if group > 1:
             obs.inc(f"pipeline.coalesced.{kind}", group - 1)
 
+    def _fail(self, kind: str, exc: BaseException, dt: float) -> Response:
+        """Structured error Response for one recoverable failure."""
+        payload: Dict[str, Any] = {"error": type(exc).__name__,
+                                   "detail": str(exc)}
+        if isinstance(exc, QuarantinedBatch):
+            payload["reasons"] = exc.reasons
+        obs.inc(f"pipeline.errors.{kind}")
+        return Response("error", self.store.version, payload, dt)
+
     # -- driver -------------------------------------------------------------
     def run(self, requests: Sequence[Request]) -> List[Response]:
         responses: List[Optional[Response]] = [None] * len(requests)
@@ -183,8 +208,34 @@ class RequestPipeline:
                        and isinstance(requests[j], UpdateBatch)):
                     j += 1
                 t0 = time.perf_counter()
-                with obs.span("pipeline.update", coalesced=j - i):
-                    payload = self._apply_updates(list(requests[i:j]))
+                if self.breaker is not None and not self.breaker.allow():
+                    self.breaker.shed()
+                    dt = time.perf_counter() - t0
+                    self._observe("shed", dt, j - i)
+                    payload = {"error": "circuit_open", "shed": True,
+                               "breaker": self.breaker.status()}
+                    for k in range(i, j):
+                        responses[k] = Response("error", self.store.version,
+                                                payload, dt)
+                    i = j
+                    continue
+                try:
+                    with obs.span("pipeline.update", coalesced=j - i):
+                        payload = self._apply_updates(list(requests[i:j]))
+                except InjectedCrash:
+                    raise                # simulated kill: nothing catches it
+                except PIPELINE_RECOVERABLE as e:
+                    if self.breaker is not None:
+                        self.breaker.record_failure()
+                    dt = time.perf_counter() - t0
+                    self._observe("error", dt, j - i)
+                    resp = self._fail("update", e, dt)
+                    for k in range(i, j):
+                        responses[k] = resp
+                    i = j
+                    continue
+                if self.breaker is not None:
+                    self.breaker.record_success()
                 dt = time.perf_counter() - t0
                 self._observe("update", dt, j - i)
                 for k in range(i, j):
@@ -216,17 +267,44 @@ class RequestPipeline:
                 responses[i] = Response("neighbors", self.store.version,
                                         payload, dt)
             elif isinstance(r, PropertyRead):
-                assert self.registry is not None, \
-                    "PropertyRead requires a PropertyRegistry"
                 t0 = time.perf_counter()
-                with obs.span("pipeline.property", prop=r.name):
-                    value = self.registry.read(r.name)
-                dt = time.perf_counter() - t0
-                self._observe("property", dt)
-                responses[i] = Response("property", self.store.version,
-                                        {"name": r.name, "value": value},
-                                        dt)
+                if self.registry is None:
+                    responses[i] = Response(
+                        "error", self.store.version,
+                        {"error": "no_registry",
+                         "detail": "PropertyRead requires a "
+                                   "PropertyRegistry"},
+                        time.perf_counter() - t0)
+                elif self.breaker is not None and self.breaker.state == "open":
+                    # degraded serving: the store is shedding writes — do
+                    # NOT force a catch-up replay through it; serve the
+                    # last good state, tagged with the version it is valid
+                    # for so callers can see the staleness.
+                    value, version = self.registry.peek(r.name)
+                    dt = time.perf_counter() - t0
+                    self._observe("property", dt)
+                    obs.inc("pipeline.stale_reads")
+                    responses[i] = Response(
+                        "property", version,
+                        {"name": r.name, "value": value, "stale": True,
+                         "staleness": self.store.version - version}, dt)
+                else:
+                    with obs.span("pipeline.property", prop=r.name):
+                        value = self.registry.read(r.name)
+                    dt = time.perf_counter() - t0
+                    self._observe("property", dt)
+                    responses[i] = Response("property", self.store.version,
+                                            {"name": r.name, "value": value},
+                                            dt)
             else:
-                raise TypeError(f"unknown request {type(r).__name__}")
+                # an unknown request must not take the whole sequence down:
+                # answer it with a structured error and keep serving.
+                obs.inc("pipeline.errors.unknown_request")
+                responses[i] = Response(
+                    "error", self.store.version,
+                    {"error": "unknown_request",
+                     "detail": f"unsupported request type "
+                               f"{type(r).__name__}",
+                     "request": type(r).__name__}, 0.0)
             i = j
         return responses

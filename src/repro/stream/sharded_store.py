@@ -42,7 +42,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional
+from functools import partial
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +69,8 @@ from ..distributed.sharded_graph import place_on_mesh as _place_graph
 from ..kernels.slab_update.ops import (_copy_aliased, delete_edges_local,
                                        insert_edges_local,
                                        query_edges_local)
+from ..resilience import faults
+from ..resilience.guard import run_with_retries, validate_batch
 from .store import (ALL_VIEWS, FORWARD, SYMMETRIC, TRANSPOSE, AppliedBatch,
                     VersionedStoreBase, _pad_f32, _pad_u32, _pow2,
                     canonical_batch, dedup_pairs)
@@ -516,14 +519,31 @@ class ShardedGraphStore(VersionedStoreBase):
         checks run on host high-water accounting — no per-epoch device
         sync — see module doc.
         """
+        # admission guard FIRST, on the raw inputs (see GraphStore.apply)
+        validate_batch(ins_src, ins_dst, ins_w, del_src, del_dst,
+                       n_vertices=self.n_vertices)
         t0 = time.perf_counter()
         epoch_span = obs.span("store.apply", version=self.version,
                               sharded=True)
         epoch_span.__enter__()
+        try:
+            batch = self._apply_inner(t0, epoch_span, ins_src, ins_dst,
+                                      ins_w, del_src, del_dst)
+        finally:
+            epoch_span.__exit__(None, None, None)
+
+        # -- maintenance + audit planes: policy checks on the closed epoch --
+        self._auto_maintain()
+        self._auto_audit()
+        return batch
+
+    def _apply_inner(self, t0, epoch_span, ins_src, ins_dst, ins_w,
+                     del_src, del_dst) -> AppliedBatch:
         with obs.span("store.apply.host_dedup"):
             i_s, i_d, i_w, d_s, d_d = canonical_batch(
                 ins_src, ins_dst, ins_w, del_src, del_dst,
                 weighted=self.weighted)
+        faults.fault_point("apply.admitted", version=self.version)
         roles = tuple(v for v in ALL_VIEWS if v in self._views)
         S = self.n_shards
         mode = self._mode()
@@ -562,50 +582,58 @@ class ShardedGraphStore(VersionedStoreBase):
                               routing_cap_blocks(arr, S, block)))
             return (pair, tot)
 
-        route_span = obs.span("store.apply.route", mode=mode)
-        route_span.__enter__()
-        one = (1, 1) if mode == "shard_map" else 1
-        fwd_ins = tr_ins = fwd_del = tr_del = one
-        sym_ins = sym_del = 1
-        if len(d_s):
-            fwd_del = cap_of("fwd_del", d_s, p_del // S)
-            tr_del = cap_of("tr_del", d_d, p_del // S)
-            sym_del = cap_of("sym_del", _sym_concat_u32(d_s, d_d, p_del))
-        if len(i_s):
-            fwd_ins = cap_of("fwd_ins", i_s, p_ins // S)
-            tr_ins = cap_of("tr_ins", i_d, p_ins // S)
-            sym_ins = cap_of("sym_ins", _sym_concat_u32(i_s, i_d, p_ins))
-            per_view = {
-                FORWARD: max_owner_count(i_s, S),
-                TRANSPOSE: max_owner_count(i_d, S),
-                SYMMETRIC: max_owner_count(np.concatenate([i_s, i_d]), S)}
-            for name in roles:
-                reserve = next_pow2(per_view[name], lo=1) + 64
-                sg = self._views[name]
-                cap_before = int(sg.graphs.keys.shape[1])
-                if cap_before - self._high(name) < reserve:
-                    # the running estimate charges a whole slab per routed
-                    # insert, so it overestimates hard; before paying a
-                    # pool concat, re-prime with one exact device read (a
-                    # sync only when the estimate crosses capacity — not
-                    # per epoch) so the bound cannot compound into
-                    # spurious per-epoch growth
-                    self._high_water[name] = int(
-                        jnp.max(sg.graphs.next_free))
-                    self._views[name] = ensure_capacity_sharded(
-                        sg, reserve, high=self._high_water[name])
-                    cap_after = int(
-                        self._views[name].graphs.keys.shape[1])
-                    if cap_after != cap_before:
-                        obs.instant("capacity_grow", view=name,
-                                    before=cap_before, after=cap_after)
-                        obs.emit_event("capacity_grow", view=name,
-                                       version=self.version,
-                                       before=cap_before, after=cap_after)
-                        obs.inc("store.capacity_grow")
-                self._last_reserve[name] = reserve
-        caps = (fwd_del, tr_del, sym_del, fwd_ins, tr_ins, sym_ins)
-        route_span.__exit__(None, None, None)
+        with obs.span("store.apply.route", mode=mode):
+            one = (1, 1) if mode == "shard_map" else 1
+            fwd_ins = tr_ins = fwd_del = tr_del = one
+            sym_ins = sym_del = 1
+            if len(d_s):
+                fwd_del = cap_of("fwd_del", d_s, p_del // S)
+                tr_del = cap_of("tr_del", d_d, p_del // S)
+                sym_del = cap_of("sym_del", _sym_concat_u32(d_s, d_d, p_del))
+            if len(i_s):
+                fwd_ins = cap_of("fwd_ins", i_s, p_ins // S)
+                tr_ins = cap_of("tr_ins", i_d, p_ins // S)
+                sym_ins = cap_of("sym_ins", _sym_concat_u32(i_s, i_d, p_ins))
+                per_view = {
+                    FORWARD: max_owner_count(i_s, S),
+                    TRANSPOSE: max_owner_count(i_d, S),
+                    SYMMETRIC: max_owner_count(np.concatenate([i_s, i_d]),
+                                               S)}
+
+                def _ensure(name):
+                    reserve = next_pow2(per_view[name], lo=1) + 64
+                    sg = self._views[name]
+                    cap_before = int(sg.graphs.keys.shape[1])
+                    if cap_before - self._high(name) < reserve:
+                        # the running estimate charges a whole slab per
+                        # routed insert, so it overestimates hard; before
+                        # paying a pool concat, re-prime with one exact
+                        # device read (a sync only when the estimate
+                        # crosses capacity — not per epoch) so the bound
+                        # cannot compound into spurious per-epoch growth
+                        faults.fault_point("store.capacity_grow",
+                                           view=name, version=self.version)
+                        self._high_water[name] = int(
+                            jnp.max(sg.graphs.next_free))
+                        self._views[name] = ensure_capacity_sharded(
+                            sg, reserve, high=self._high_water[name])
+                        cap_after = int(
+                            self._views[name].graphs.keys.shape[1])
+                        if cap_after != cap_before:
+                            obs.instant("capacity_grow", view=name,
+                                        before=cap_before, after=cap_after)
+                            obs.emit_event("capacity_grow", view=name,
+                                           version=self.version,
+                                           before=cap_before,
+                                           after=cap_after)
+                            obs.inc("store.capacity_grow")
+                    self._last_reserve[name] = reserve
+
+                for name in roles:
+                    run_with_retries(partial(_ensure, name),
+                                     budget=self.retry,
+                                     site="store.capacity_grow")
+            caps = (fwd_del, tr_del, sym_del, fwd_ins, tr_ins, sym_ins)
 
         # -- canonical device batches (every view derives from these) -------
         del_sj = del_dj = del_mask = None
@@ -619,73 +647,83 @@ class ShardedGraphStore(VersionedStoreBase):
             ins_wj = _pad_f32(i_w, p_ins)
             ins = (ins_sj, ins_dj, ins_wj)
 
-        # -- single donated route+mutate dispatch over every live view ------
-        n_inserted = n_deleted = 0
-        if ins is not None or dels is not None:
-            key = (mode, roles, caps, p_del, p_ins, i_w is not None)
-            if key not in self._dispatch_keys:
-                self._dispatch_keys.add(key)
-                self.recompile_count += 1
-                obs.inc("store.sharded.recompiles")
-                obs.instant("sharded_recompile", mode=mode)
-            dispatch_span = obs.span("store.apply.dispatch", mode=mode,
-                                     version=self.version, views=len(roles))
-            dispatch_span.__enter__()
-            if mode == "shard_map":
-                in_views = _copy_aliased(
-                    tuple(self._views[r].graphs for r in roles))
-                new_graphs, ins_mask, del_mask = _apply_sm_don(
-                    in_views, dels, ins, roles=roles,
-                    n_shards=S, caps=caps, mesh=self.mesh)
-                for r, g in zip(roles, new_graphs):
-                    self._views[r] = dataclasses.replace(self._views[r],
-                                                         graphs=g)
-            else:
-                in_views = _copy_aliased(
-                    tuple(self._views[r] for r in roles))
-                new_views, ins_mask, del_mask = _apply_jit_don(
-                    in_views, ins, dels, roles=roles, n_shards=S, caps=caps)
-                for r, g in zip(roles, new_views):
-                    self._views[r] = g
-            if del_mask is not None:
-                n_deleted = int(jnp.sum(del_mask.astype(jnp.int32)))
-            if ins_mask is not None:
-                n_inserted = int(jnp.sum(ins_mask.astype(jnp.int32)))
-            dispatch_span.__exit__(None, None, None)
-            # exact host accounting: the worst shard allocates at most its
-            # routed insert count in new slabs this epoch
-            if len(i_s):
-                for name in roles:
-                    self._high_water[name] = (self._high(name)
-                                              + per_view[name])
+        # -- durability: journal the canonical batch, THEN dispatch ---------
+        wal_token = self._wal_append(i_s, i_d, i_w, d_s, d_d)
+        faults.fault_point("apply.post_wal", version=self.version)
 
-        # -- version bump + notification (epoch still open) -----------------
-        with obs.span("store.apply.notify"):
-            batch = self._record_batch(
-                ins_src=ins_sj, ins_dst=ins_dj, ins_w=ins_wj,
-                ins_mask=ins_mask, del_src=del_sj, del_dst=del_dj,
-                del_mask=del_mask,
-                n_inserted=n_inserted, n_deleted=n_deleted)
+        try:
+            # -- single donated route+mutate dispatch over every live view --
+            n_inserted = n_deleted = 0
+            if ins is not None or dels is not None:
+                key = (mode, roles, caps, p_del, p_ins, i_w is not None)
+                if key not in self._dispatch_keys:
+                    self._dispatch_keys.add(key)
+                    self.recompile_count += 1
+                    obs.inc("store.sharded.recompiles")
+                    obs.instant("sharded_recompile", mode=mode)
+                with obs.span("store.apply.dispatch", mode=mode,
+                              version=self.version, views=len(roles)):
+                    if mode == "shard_map":
+                        in_views = _copy_aliased(
+                            tuple(self._views[r].graphs for r in roles))
+                        new_graphs, ins_mask, del_mask = _apply_sm_don(
+                            in_views, dels, ins, roles=roles,
+                            n_shards=S, caps=caps, mesh=self.mesh)
+                        for r, g in zip(roles, new_graphs):
+                            self._views[r] = dataclasses.replace(
+                                self._views[r], graphs=g)
+                    else:
+                        in_views = _copy_aliased(
+                            tuple(self._views[r] for r in roles))
+                        new_views, ins_mask, del_mask = _apply_jit_don(
+                            in_views, ins, dels, roles=roles, n_shards=S,
+                            caps=caps)
+                        for r, g in zip(roles, new_views):
+                            self._views[r] = g
+                    if del_mask is not None:
+                        n_deleted = int(jnp.sum(del_mask.astype(jnp.int32)))
+                    if ins_mask is not None:
+                        n_inserted = int(jnp.sum(
+                            ins_mask.astype(jnp.int32)))
+                # exact host accounting: the worst shard allocates at most
+                # its routed insert count in new slabs this epoch
+                if len(i_s):
+                    for name in roles:
+                        self._high_water[name] = (self._high(name)
+                                                  + per_view[name])
+            faults.fault_point("apply.pre_close", version=self.version)
 
-        # -- close the epoch: folded into the fused dispatch above; only an
-        # empty batch (no dispatch) still closes here, where it is a no-op
-        # value-wise (the pointers already sit at the previous close)
-        if ins is None and dels is None:
-            with obs.span("store.apply.epoch_close"):
-                for name, sg in self._views.items():
-                    self._views[name] = dataclasses.replace(
-                        sg, graphs=update_slab_pointers(sg.graphs))
+            # -- version bump + notification (epoch still open) -------------
+            with obs.span("store.apply.notify"):
+                batch = self._record_batch(
+                    ins_src=ins_sj, ins_dst=ins_dj, ins_w=ins_wj,
+                    ins_mask=ins_mask, del_src=del_sj, del_dst=del_dj,
+                    del_mask=del_mask,
+                    n_inserted=n_inserted, n_deleted=n_deleted)
+
+            # -- close the epoch: folded into the fused dispatch above; only
+            # an empty batch (no dispatch) still closes here, where it is a
+            # no-op value-wise (pointers already sit at the previous close)
+            if ins is None and dels is None:
+                with obs.span("store.apply.epoch_close"):
+                    for name, sg in self._views.items():
+                        self._views[name] = dataclasses.replace(
+                            sg, graphs=update_slab_pointers(sg.graphs))
+            faults.fault_point("apply.post_close", version=self.version)
+        except faults.InjectedCrash:
+            raise              # a simulated kill: the WAL record survives
+        except BaseException:
+            # failed apply: drop the journaled batch (see GraphStore.apply)
+            if wal_token is not None:
+                self.wal.rollback(wal_token)
+            raise
 
         epoch_span.annotate(inserted=n_inserted, deleted=n_deleted)
-        epoch_span.__exit__(None, None, None)
         if obs.metrics.enabled():
             obs.observe("store.apply", time.perf_counter() - t0)
             obs.inc("store.apply.epochs")
             obs.inc("store.apply.inserted", n_inserted)
             obs.inc("store.apply.deleted", n_deleted)
-
-        # -- maintenance plane: policy check on the closed epoch ------------
-        self._auto_maintain()
         return batch
 
     # ----------------------------------------------------- maintenance plane
@@ -796,6 +834,138 @@ class ShardedGraphStore(VersionedStoreBase):
         return EdgeFrontier(jnp.asarray(out_src), jnp.asarray(out_dst),
                             jnp.asarray(out_w), jnp.asarray(n, jnp.int32),
                             jnp.asarray(overflow))
+
+    # ------------------------------------------------------------ checkpoint
+    def _resilience_meta(self) -> dict:
+        # the sharded store's host accounting (high-water capacity bounds,
+        # sticky routing caps) steers capacity growth and jit
+        # specialisation — persist it so a WAL replay after restore makes
+        # the same growth decisions as the crashed process (leaf-for-leaf
+        # recovery, including pool SHAPES)
+        meta = super()._resilience_meta()
+        meta["high_water"] = {k: int(v)
+                              for k, v in self._high_water.items()}
+        meta["sticky_caps"] = [[m, s, int(c)]
+                               for (m, s), c in self._sticky_caps.items()]
+        return meta
+
+    def _adopt_resilience_meta(self, meta: dict) -> None:
+        super()._adopt_resilience_meta(meta)
+        res = meta.get("resilience") or {}
+        self._high_water = {k: int(v)
+                            for k, v in res.get("high_water", {}).items()}
+        self._sticky_caps = {(m, s): int(c)
+                             for m, s, c in res.get("sticky_caps", [])}
+
+    def save(self, ckpt_dir, step: Optional[int] = None, *, registry=None,
+             extra: Optional[dict] = None, keep_last: int = 3):
+        """Persist every view's stacked pools (+ property states)
+        atomically — the sharded rendering of ``GraphStore.save``.  The
+        checkpoint is mesh-agnostic: ``restore`` rebuilds with
+        ``mesh=None`` and ``place_on_mesh`` re-pins on whatever mesh the
+        new job brings up (elastic restart)."""
+        from ..checkpoint import ckpt
+        step = self.version if step is None else int(step)
+        props = {} if registry is None else registry.states()
+        prop_versions = {} if registry is None else registry.versions()
+        meta = {
+            "stream_store": True,
+            "sharded_store": True,
+            "version": int(self.version),
+            "n_vertices": int(self.n_vertices),
+            "n_shards": int(self.n_shards),
+            "weighted": bool(self.weighted),
+            "views": {name: int(sg.graphs.n_buckets)
+                      for name, sg in self._views.items()},
+            "prop_versions": {k: int(v) for k, v in prop_versions.items()},
+            "resilience": self._resilience_meta(),
+        }
+        if extra:
+            meta.update(extra)
+        path = ckpt.save(
+            ckpt_dir, step,
+            {"views": {name: sg.graphs
+                       for name, sg in self._views.items()},
+             "props": props},
+            extra=meta, keep_last=keep_last)
+        if self.wal is not None and step == self.version:
+            self.wal.truncate(self.version)
+        return path
+
+    @classmethod
+    def restore(cls, ckpt_dir, *, step: Optional[int] = None,
+                specs: Sequence = (), policies: Optional[Dict[str, str]] = None,
+                log_capacity: int = 64, maintenance=None,
+                dispatch: str = "auto"):
+        """Rebuild (store, registry) from a sharded checkpoint (the
+        ``GraphStore.restore`` contract; views come back with
+        ``mesh=None`` — call ``place_on_mesh`` to re-pin)."""
+        import jax as _jax
+
+        from ..checkpoint import ckpt
+        from ..checkpoint.ckpt import CheckpointError
+        from ..core.slab_graph import empty as _empty
+        manifest = ckpt.read_manifest(ckpt_dir, step=step)
+        meta = manifest["extra"]
+        missing = [k for k in ("n_vertices", "n_shards", "weighted",
+                               "views", "prop_versions")
+                   if k not in meta]
+        if missing or not meta.get("sharded_store"):
+            raise CheckpointError(
+                f"{ckpt_dir} step {manifest['step']} is not a "
+                f"ShardedGraphStore checkpoint (missing meta: "
+                f"{missing or ['sharded_store']}) — pick another step= "
+                "or re-checkpoint")
+        V = int(meta["n_vertices"])
+        S = int(meta["n_shards"])
+        weighted = bool(meta["weighted"])
+        n_local = -(-V // S)
+
+        def view_like(n_buckets: int) -> ShardedSlabGraph:
+            # structural skeleton only: the loader takes shapes from the
+            # saved arrays and dtypes/treedef from this — the static
+            # n_buckets/n_vertices meta must match the saved pools, the
+            # leaf shapes need not
+            bc = np.zeros(n_local, np.int32)
+            bc[0] = n_buckets
+            g0 = _empty(n_local, bc, n_buckets + 1, weighted=weighted)
+            return _jax.tree.map(lambda x: x[None], g0)
+
+        like_views = {name: view_like(nb)
+                      for name, nb in meta["views"].items()}
+        spec_by_name = {s.name: s for s in specs}
+        like_props = {}
+        for name in meta["prop_versions"]:
+            if name not in spec_by_name:
+                raise KeyError(
+                    f"checkpoint stores property {name!r}; pass its "
+                    f"PropertySpec via specs= to restore it")
+            like_props[name] = spec_by_name[name].state_like(V)
+        tree, _ = ckpt.restore(ckpt_dir, {"views": like_views,
+                                          "props": like_props},
+                               step=manifest["step"])
+        views = {name: ShardedSlabGraph(graphs=graphs, n_shards=S,
+                                        n_vertices_global=V)
+                 for name, graphs in tree["views"].items()}
+        store = cls(views, weighted=weighted, version=meta["version"],
+                    log_capacity=log_capacity, maintenance=maintenance,
+                    dispatch=dispatch)
+        store._adopt_resilience_meta(meta)
+
+        registry = None
+        if spec_by_name:
+            from .properties import PropertyRegistry
+            registry = PropertyRegistry(store)
+            policies = policies or {}
+            for name, spec in spec_by_name.items():
+                if name in tree["props"]:
+                    registry.register(spec,
+                                      policy=policies.get(name, "lazy"),
+                                      _state=tree["props"][name],
+                                      _version=meta["prop_versions"][name])
+                else:
+                    registry.register(spec, policy=policies.get(name, "lazy"))
+        return store, registry
 
 
 # ----------------------------------------------------------------------------

@@ -61,6 +61,9 @@ from ..core.slab_graph import (SlabGraph, empty, ensure_capacity,
                                from_edges_host, next_pow2,
                                update_slab_pointers)
 from ..core.worklist import EdgeFrontier, expand_vertices
+from ..resilience import faults
+from ..resilience.guard import (RetryBudget, run_with_retries,
+                                validate_batch)
 
 FORWARD = "forward"
 TRANSPOSE = "transpose"
@@ -178,6 +181,88 @@ class VersionedStoreBase:
         #: slabs reclaimed — bounded like the batch log.  Mirrored into
         #: ``obs.metrics`` events when telemetry is on.
         self.maintenance_events: List[dict] = []
+        # ----------------------------------------------- resilience plane
+        #: optional WriteAheadLog — every apply journals its canonical
+        #: batch (fsync) BEFORE the donated dispatch (DESIGN.md §11)
+        self.wal = None
+        #: optional AuditPolicy — pool invariant audits every N epochs
+        self.audits = None
+        self._epochs_since_audit = 0
+        #: bounded stream of InvariantReport events (like maintenance_events)
+        self.audit_events: List[dict] = []
+        #: bounded retry-with-backoff for transient capacity-grow failures
+        self.retry = RetryBudget()
+
+    # ----------------------------------------------------- resilience plane
+    def attach_wal(self, wal) -> "VersionedStoreBase":
+        """Journal every applied batch through ``wal`` (fsync-before-
+        dispatch); pair with ``save``/``resilience.recover`` for
+        crash-exact recovery.  Returns self."""
+        self.wal = wal
+        return self
+
+    def attach_audits(self, policy) -> "VersionedStoreBase":
+        """Run pool invariant audits on the policy's cadence.  Returns
+        self."""
+        self.audits = policy
+        return self
+
+    def _wal_append(self, i_s, i_d, i_w, d_s, d_d):
+        """Durably journal the canonical batch for version+1 (the version
+        ``_record_batch`` will assign); returns the rollback token or
+        None when no WAL is attached."""
+        if self.wal is None:
+            return None
+        with obs.span("store.apply.wal", version=self.version):
+            token = self.wal.append(self.version + 1, i_s, i_d, i_w,
+                                    d_s, d_d)
+        obs.inc("store.wal.appends")
+        return token
+
+    def audit(self, *, views=None, cross_view: bool = True):
+        """Run the pool invariant audit now; returns the
+        ``InvariantReport`` (also appended to ``audit_events``)."""
+        from ..resilience.invariants import audit_store
+        report = audit_store(self, views=views, cross_view=cross_view)
+        self.audit_events.append(report.as_event())
+        if len(self.audit_events) > self._log_capacity:
+            self.audit_events = self.audit_events[-self._log_capacity:]
+        return report
+
+    def _auto_audit(self) -> None:
+        """Epoch-close hook: audit on the AuditPolicy cadence."""
+        if self.audits is None or not self.audits.every:
+            return
+        self._epochs_since_audit += 1
+        if self._epochs_since_audit < self.audits.every:
+            return
+        self._epochs_since_audit = 0
+        report = self.audit(views=self.audits.views,
+                            cross_view=self.audits.cross_view)
+        if not report.ok and self.audits.fail_fast:
+            from ..resilience.invariants import InvariantViolationError
+            raise InvariantViolationError(report)
+
+    def _resilience_meta(self) -> dict:
+        """Host-side counters a checkpoint must carry so a recovered
+        store's maintenance triggers replay exactly like the crashed
+        process's would have (WAL replay determinism)."""
+        return {"epochs_since_maint": int(self._epochs_since_maint),
+                "deletes_since_maint": int(self._deletes_since_maint),
+                "tombstone_base": int(self._tombstone_base),
+                "last_reserve": {k: int(v)
+                                 for k, v in self._last_reserve.items()}}
+
+    def _adopt_resilience_meta(self, meta: dict) -> None:
+        res = meta.get("resilience")
+        if not res:
+            return
+        self._epochs_since_maint = int(res.get("epochs_since_maint", 0))
+        self._deletes_since_maint = int(res.get("deletes_since_maint", 0))
+        self._tombstone_base = int(res.get("tombstone_base", 0))
+        self._last_reserve = {k: int(v)
+                              for k, v in res.get("last_reserve",
+                                                  {}).items()}
 
     def add_listener(self, fn: Callable[[AppliedBatch], None]) -> None:
         """Subscribe to applied batches (called with the epoch still open)."""
@@ -421,79 +506,120 @@ class GraphStore(VersionedStoreBase):
         through one donated ``update_views`` dispatch.  Weighted stores
         default missing insert weights to 1.0.  Returns the
         ``AppliedBatch`` record (also appended to the catch-up log).
+
+        Resilience plane (DESIGN.md §11): the RAW inputs are validated at
+        admission (``QuarantinedBatch`` on corruption — nothing moved),
+        the canonical batch journals to the attached WAL (fsync) before
+        the donated dispatch, capacity growth runs under the store's
+        ``RetryBudget``, and every phase carries a named fault point.
         """
+        # admission guard FIRST, on the raw inputs: canonical_batch's
+        # uint32 casts would silently wrap a negative/float id
+        validate_batch(ins_src, ins_dst, ins_w, del_src, del_dst,
+                       n_vertices=self.n_vertices)
         t0 = time.perf_counter()
         epoch_span = obs.span("store.apply", version=self.version)
         epoch_span.__enter__()
-        with obs.span("store.apply.host_dedup"):
-            i_s, i_d, i_w, d_s, d_d = canonical_batch(
-                ins_src, ins_dst, ins_w, del_src, del_dst,
-                weighted=self.weighted)
+        try:
+            with obs.span("store.apply.host_dedup"):
+                i_s, i_d, i_w, d_s, d_d = canonical_batch(
+                    ins_src, ins_dst, ins_w, del_src, del_dst,
+                    weighted=self.weighted)
+            faults.fault_point("apply.admitted", version=self.version)
 
-        roles = tuple(v for v in ALL_VIEWS if v in self._views)
+            roles = tuple(v for v in ALL_VIEWS if v in self._views)
 
-        # -- capacity (inserts allocate at most one slab per batch lane) ----
-        if len(i_s):
-            with obs.span("store.apply.capacity"):
+            # -- capacity (inserts allocate at most one slab per lane) ------
+            if len(i_s):
+                with obs.span("store.apply.capacity"):
+                    p = _pow2(len(i_s))
+
+                    def _grow():
+                        faults.fault_point("store.capacity_grow",
+                                           version=self.version)
+                        for name in roles:
+                            need = (2 * p + 64 if name == SYMMETRIC
+                                    else p + 64)
+                            self._views[name] = ensure_capacity(
+                                self._views[name], need)
+                            self._last_reserve[name] = need
+
+                    run_with_retries(_grow, budget=self.retry,
+                                     site="store.capacity_grow")
+
+            # -- canonical device batches (every view derives from these) ---
+            del_sj = del_dj = del_mask = None
+            ins_sj = ins_dj = ins_wj = ins_mask = None
+            dels = ins = None
+            if len(d_s):
+                p = _pow2(len(d_s))
+                del_sj, del_dj = _pad_u32(d_s, p), _pad_u32(d_d, p)
+                dels = (del_sj, del_dj)
+            if len(i_s):
                 p = _pow2(len(i_s))
-                for name in roles:
-                    need = 2 * p + 64 if name == SYMMETRIC else p + 64
-                    self._views[name] = ensure_capacity(self._views[name],
-                                                        need)
-                    self._last_reserve[name] = need
+                ins_sj, ins_dj = _pad_u32(i_s, p), _pad_u32(i_d, p)
+                ins_wj = _pad_f32(i_w, p)
+                ins = (ins_sj, ins_dj, ins_wj)
 
-        # -- canonical device batches (every view derives from these) -------
-        del_sj = del_dj = del_mask = None
-        ins_sj = ins_dj = ins_wj = ins_mask = None
-        dels = ins = None
-        if len(d_s):
-            p = _pow2(len(d_s))
-            del_sj, del_dj = _pad_u32(d_s, p), _pad_u32(d_d, p)
-            dels = (del_sj, del_dj)
-        if len(i_s):
-            p = _pow2(len(i_s))
-            ins_sj, ins_dj = _pad_u32(i_s, p), _pad_u32(i_d, p)
-            ins_wj = _pad_f32(i_w, p)
-            ins = (ins_sj, ins_dj, ins_wj)
+            # -- durability: journal the canonical batch, THEN dispatch -----
+            wal_token = self._wal_append(i_s, i_d, i_w, d_s, d_d)
+            faults.fault_point("apply.post_wal", version=self.version)
 
-        # -- single stacked engine dispatch over every live view ------------
-        n_inserted = n_deleted = 0
-        if ins is not None or dels is not None:
-            with obs.span("store.apply.dispatch", version=self.version,
-                          views=len(roles)):
-                new_views, ins_mask, del_mask = update_views(
-                    tuple(self._views[r] for r in roles), roles, ins, dels)
-                for r, g in zip(roles, new_views):
-                    self._views[r] = g
-                if del_mask is not None:
-                    n_deleted = int(jnp.sum(del_mask.astype(jnp.int32)))
-                if ins_mask is not None:
-                    n_inserted = int(jnp.sum(ins_mask.astype(jnp.int32)))
+            try:
+                # -- single stacked engine dispatch over every live view ----
+                n_inserted = n_deleted = 0
+                if ins is not None or dels is not None:
+                    with obs.span("store.apply.dispatch",
+                                  version=self.version, views=len(roles)):
+                        new_views, ins_mask, del_mask = update_views(
+                            tuple(self._views[r] for r in roles), roles,
+                            ins, dels)
+                        for r, g in zip(roles, new_views):
+                            self._views[r] = g
+                        if del_mask is not None:
+                            n_deleted = int(jnp.sum(
+                                del_mask.astype(jnp.int32)))
+                        if ins_mask is not None:
+                            n_inserted = int(jnp.sum(
+                                ins_mask.astype(jnp.int32)))
+                faults.fault_point("apply.pre_close", version=self.version)
 
-        # -- version bump + notification (epoch still open) -----------------
-        with obs.span("store.apply.notify"):
-            batch = self._record_batch(
-                ins_src=ins_sj, ins_dst=ins_dj, ins_w=ins_wj,
-                ins_mask=ins_mask, del_src=del_sj, del_dst=del_dj,
-                del_mask=del_mask,
-                n_inserted=n_inserted, n_deleted=n_deleted)
+                # -- version bump + notification (epoch still open) ---------
+                with obs.span("store.apply.notify"):
+                    batch = self._record_batch(
+                        ins_src=ins_sj, ins_dst=ins_dj, ins_w=ins_wj,
+                        ins_mask=ins_mask, del_src=del_sj, del_dst=del_dj,
+                        del_mask=del_mask,
+                        n_inserted=n_inserted, n_deleted=n_deleted)
 
-        # -- close the epoch on every view ----------------------------------
-        with obs.span("store.apply.epoch_close",
-                      sync=tuple(self._views.values())):
-            for name, g in self._views.items():
-                self._views[name] = update_slab_pointers(g)
+                # -- close the epoch on every view --------------------------
+                with obs.span("store.apply.epoch_close",
+                              sync=tuple(self._views.values())):
+                    for name, g in self._views.items():
+                        self._views[name] = update_slab_pointers(g)
+                faults.fault_point("apply.post_close", version=self.version)
+            except faults.InjectedCrash:
+                raise          # a simulated kill: the WAL record survives
+            except BaseException:
+                # the journaled batch never applied in THIS process and the
+                # caller sees the failure — drop the record so a later
+                # recovery replay doesn't resurrect a rejected batch
+                if wal_token is not None:
+                    self.wal.rollback(wal_token)
+                raise
 
-        epoch_span.annotate(inserted=n_inserted, deleted=n_deleted)
-        epoch_span.__exit__(None, None, None)
+            epoch_span.annotate(inserted=n_inserted, deleted=n_deleted)
+        finally:
+            epoch_span.__exit__(None, None, None)
         if obs.metrics.enabled():
             obs.observe("store.apply", time.perf_counter() - t0)
             obs.inc("store.apply.epochs")
             obs.inc("store.apply.inserted", n_inserted)
             obs.inc("store.apply.deleted", n_deleted)
 
-        # -- maintenance plane: policy check on the closed epoch ------------
+        # -- maintenance + audit planes: policy checks on the closed epoch --
         self._auto_maintain()
+        self._auto_audit()
         return batch
 
     # ----------------------------------------------------- maintenance plane
@@ -554,30 +680,47 @@ class GraphStore(VersionedStoreBase):
             "views": {name: int(g.n_buckets)
                       for name, g in self._views.items()},
             "prop_versions": {k: int(v) for k, v in prop_versions.items()},
+            "resilience": self._resilience_meta(),
         }
         if extra:
             meta.update(extra)
-        return ckpt.save(ckpt_dir, step, {"views": dict(self._views),
+        path = ckpt.save(ckpt_dir, step, {"views": dict(self._views),
                                           "props": props}, extra=meta,
                          keep_last=keep_last)
+        # the checkpoint now covers every journaled batch up to this
+        # version: retire the WAL segments it subsumes
+        if self.wal is not None and step == self.version:
+            self.wal.truncate(self.version)
+        return path
 
     @classmethod
     def restore(cls, ckpt_dir, *, step: Optional[int] = None,
                 specs: Sequence = (), policies: Optional[Dict[str, str]] = None,
-                log_capacity: int = 64):
+                log_capacity: int = 64, maintenance=None):
         """Rebuild (store, registry) from a checkpoint.
 
         ``specs`` must cover every property saved in the checkpoint (their
         ``state_like`` builds the restore skeleton; their maintainers resume
         from the saved states + versions).  Returns ``(store, registry)``;
         the registry is None when the checkpoint carried no properties and
-        no specs were given.
+        no specs were given.  ``maintenance=`` re-attaches the policy the
+        crashed process ran — its trigger counters are restored from the
+        manifest, so a WAL replay re-derives maintenance epochs exactly.
         """
         from ..checkpoint import ckpt
+        from ..checkpoint.ckpt import CheckpointError
         manifest = ckpt.read_manifest(ckpt_dir, step=step)
         meta = manifest["extra"]
-        assert meta.get("stream_store"), \
-            f"{ckpt_dir} step {manifest['step']} is not a GraphStore checkpoint"
+        missing = [k for k in ("n_vertices", "weighted", "views",
+                               "prop_versions")
+                   if not meta.get("stream_store") or k not in meta]
+        if missing or not meta.get("stream_store"):
+            raise CheckpointError(
+                f"{ckpt_dir} step {manifest['step']} is not a GraphStore "
+                f"checkpoint (missing meta: "
+                f"{missing or ['stream_store']}) — it was saved by a "
+                "different layer or its manifest is from an incompatible "
+                "version; pick another step= or re-checkpoint")
         V = int(meta["n_vertices"])
         weighted = bool(meta["weighted"])
 
@@ -600,7 +743,9 @@ class GraphStore(VersionedStoreBase):
                                           "props": like_props},
                                step=manifest["step"])
         store = cls(tree["views"], weighted=weighted,
-                    version=meta["version"], log_capacity=log_capacity)
+                    version=meta["version"], log_capacity=log_capacity,
+                    maintenance=maintenance)
+        store._adopt_resilience_meta(meta)
 
         registry = None
         if spec_by_name:

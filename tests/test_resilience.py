@@ -1,0 +1,580 @@
+"""Resilience-plane tests (repro.resilience, DESIGN.md §11).
+
+Coverage planes:
+
+* units — WAL framing/rotation/torn-tail/rollback/truncation, fault-plan
+  selectors and disarm semantics, admission validation (quarantine
+  reasons), retry budgets, circuit-breaker state machine, checkpoint
+  validation and crash-safe publish;
+* CRASH RECOVERY (the acceptance contract) — a fault-injected kill at
+  every instrumented apply phase, followed by ``resilience.recover``
+  (checkpoint restore + WAL-suffix replay) and re-feeding the remaining
+  stream, converges leaf-for-leaf bit-identical with the uninterrupted
+  twin — for both ``GraphStore`` and ``ShardedGraphStore``, with a
+  PropertyRegistry attached and maintenance epochs interleaved;
+* invariant audits — clean stores audit green; deliberately corrupted
+  pools are caught by the named check;
+* NO-FAULT NEUTRALITY — with the whole resilience plane armed (WAL,
+  audits, admission validation) but no faults injected, pools stay
+  bit-identical to a store running without any of it.
+"""
+import os
+
+import numpy as np
+import pytest
+import jax
+
+from repro import obs
+from repro import resilience as rz
+from repro.resilience import faults
+from repro.algorithms import pagerank_stream_property
+from repro.checkpoint import ckpt
+from repro.checkpoint.ckpt import CheckpointError
+from repro.stream import (GraphStore, MaintenancePolicy, PropertyRegistry,
+                          PropertySpec, RequestPipeline, ShardedGraphStore)
+from repro.stream.requests import (MembershipQuery, PropertyRead,
+                                   UpdateBatch)
+
+
+@pytest.fixture(autouse=True)
+def _clean_planes():
+    faults.reset()
+    obs.disable()
+    obs.reset()
+    yield
+    faults.reset()
+    obs.disable()
+    obs.reset()
+
+
+V = 96
+APPLY_SITES = ("apply.admitted", "store.capacity_grow", "apply.post_wal",
+               "apply.pre_close", "apply.post_close")
+
+
+def _stream(seed, n_batches, *, n_ins=60, n_del=12):
+    """Deterministic churn stream with FIXED shapes (one jit key)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_batches):
+        i_s = rng.integers(0, V, n_ins).astype(np.uint32)
+        i_d = rng.integers(0, V, n_ins).astype(np.uint32)
+        d_s = rng.integers(0, V, n_del).astype(np.uint32)
+        d_d = rng.integers(0, V, n_del).astype(np.uint32)
+        out.append((i_s, i_d, d_s, d_d))
+    return out
+
+
+def _pool_leaves(store):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(store.views)]
+
+
+def _assert_leaves_equal(a, b):
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        assert x.dtype == y.dtype and x.shape == y.shape
+        assert np.array_equal(x, y)
+
+
+def _seed_edges(seed=3, n=400):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, V, n).astype(np.uint32),
+            rng.integers(0, V, n).astype(np.uint32))
+
+
+def _mk_graph_store():
+    src, dst = _seed_edges()
+    return GraphStore.from_edges(
+        V, src, dst, maintenance=MaintenancePolicy(tombstone_ratio=0.15))
+
+
+def _mk_sharded_store():
+    src, dst = _seed_edges()
+    return ShardedGraphStore.from_edges(
+        V, 4, src, dst, maintenance=MaintenancePolicy(tombstone_ratio=0.15))
+
+
+# ============================================================================
+# WAL units
+# ============================================================================
+
+class TestWal:
+    def test_roundtrip_weighted_and_rotation(self, tmp_path):
+        wal = rz.WriteAheadLog(tmp_path, segment_records=2)
+        for v in range(1, 6):
+            wal.append(v, [v, v + 1], [v + 2, v + 3],
+                       [0.5 * v, 1.5 * v], [v], [v + 9])
+        wal.close()
+        assert len(list(tmp_path.glob("wal-*.log"))) == 3  # 2+2+1
+        recs, torn = rz.read_wal(tmp_path)
+        assert not torn and [r.version for r in recs] == [1, 2, 3, 4, 5]
+        r = recs[2]
+        assert r.ins_src.tolist() == [3, 4]
+        assert r.ins_w is not None and r.ins_w.tolist() == [1.5, 4.5]
+        assert r.del_dst.tolist() == [12]
+        recs, _ = rz.read_wal(tmp_path, after_version=3)
+        assert [r.version for r in recs] == [4, 5]
+
+    def test_unweighted_has_no_w(self, tmp_path):
+        with rz.WriteAheadLog(tmp_path) as wal:
+            wal.append(1, [1], [2], None, [], [])
+        recs, _ = rz.read_wal(tmp_path)
+        assert recs[0].ins_w is None and recs[0].del_src.size == 0
+
+    def test_torn_tail_detected_and_prefix_survives(self, tmp_path):
+        with rz.WriteAheadLog(tmp_path) as wal:
+            wal.append(1, [1], [2], None, [], [])
+            wal.append(2, [3], [4], None, [], [])
+        seg = next(tmp_path.glob("wal-*.log"))
+        data = seg.read_bytes()
+        seg.write_bytes(data[:-3])                 # torn mid-record
+        recs, torn = rz.read_wal(tmp_path)
+        assert torn and [r.version for r in recs] == [1]
+
+    def test_crc_corruption_stops_replay(self, tmp_path):
+        with rz.WriteAheadLog(tmp_path) as wal:
+            wal.append(1, [1], [2], None, [], [])
+            wal.append(2, [3], [4], None, [], [])
+        seg = next(tmp_path.glob("wal-*.log"))
+        data = bytearray(seg.read_bytes())
+        data[-1] ^= 0xFF                           # flip payload byte of rec 2
+        seg.write_bytes(bytes(data))
+        recs, torn = rz.read_wal(tmp_path)
+        assert torn and [r.version for r in recs] == [1]
+
+    def test_rollback_drops_tail_record(self, tmp_path):
+        wal = rz.WriteAheadLog(tmp_path)
+        wal.append(1, [1], [2], None, [], [])
+        token = wal.append(2, [3], [4], None, [], [])
+        wal.rollback(token)
+        wal.append(2, [7], [8], None, [], [])      # retried batch, same v
+        wal.close()
+        recs, torn = rz.read_wal(tmp_path)
+        assert not torn
+        assert [(r.version, r.ins_src.tolist()) for r in recs] == \
+            [(1, [1]), (2, [7])]
+
+    def test_truncate_drops_covered_segments(self, tmp_path):
+        wal = rz.WriteAheadLog(tmp_path, segment_records=2)
+        for v in range(1, 7):
+            wal.append(v, [v], [v], None, [], [])
+        # segments start at v=1,3,5; a checkpoint at v=4 covers 1-2 and 3-4
+        removed = wal.truncate(4)
+        assert removed == 2
+        recs, _ = rz.read_wal(tmp_path)
+        assert [r.version for r in recs] == [5, 6]
+        wal.close()
+
+    def test_reopen_after_crash_continues_segment(self, tmp_path):
+        wal = rz.WriteAheadLog(tmp_path)
+        wal.append(1, [1], [2], None, [], [])
+        wal._f.close()                             # simulated kill: no close()
+        wal2 = rz.WriteAheadLog(tmp_path)
+        wal2.append(1, [5], [6], None, [], [])     # same first_version segment
+        wal2.close()
+        recs, torn = rz.read_wal(tmp_path)
+        assert not torn and len(recs) == 1         # v1 dedup: first wins
+
+
+# ============================================================================
+# fault harness units
+# ============================================================================
+
+class TestFaults:
+    def test_selectors_fire_deterministically(self):
+        with faults.inject(rz.FaultSpec("s", kind=rz.LATENCY, every=2,
+                                        times=0)) as plan:
+            for _ in range(6):
+                faults.fault_point("s")
+        assert [f["hit"] for f in plan.fired] == [2, 4, 6]
+
+    def test_at_is_one_based_and_times_bounds(self):
+        with faults.inject(rz.FaultSpec("s", kind=rz.OVERFLOW, at=2,
+                                        amount=5)) as plan:
+            got = [faults.fault_overflow("s") for _ in range(4)]
+        assert got == [0, 5, 0, 0] and plan.hits["s"] == 4
+
+    def test_disarmed_is_noop_and_crash_disarms(self):
+        assert not faults.enabled()
+        faults.fault_point("anything")             # no plan: no effect
+        with pytest.raises(rz.InjectedCrash):
+            with faults.inject(rz.FaultSpec("s", at=1)):
+                faults.fault_point("s")
+        assert not faults.enabled()                # disarmed through unwind
+
+    def test_nesting_rejected(self):
+        with faults.inject(rz.FaultSpec("s", at=99)):
+            with pytest.raises(RuntimeError):
+                with faults.inject(rz.FaultSpec("t", at=1)):
+                    pass
+
+
+# ============================================================================
+# admission guard / retries / breaker units
+# ============================================================================
+
+class TestGuard:
+    def test_clean_batch_passes(self):
+        rz.validate_batch([1, 2], [3, 4], [0.5, 1.5], [5], [6], n_vertices=V)
+
+    @pytest.mark.parametrize("mode,field", [
+        (faults.OOB_SRC, "ins_src"), (faults.NEGATIVE_SRC, "ins_src"),
+        (faults.SENTINEL_DST, "ins_dst"), (faults.NAN_WEIGHT, "ins_w")])
+    def test_corrupt_batches_quarantined(self, mode, field):
+        rng = np.random.default_rng(0)
+        src = np.arange(8, dtype=np.uint32)
+        dst = np.arange(8, 16, dtype=np.uint32)
+        c_s, c_d, c_w = faults.corrupt_batch(rng, src, dst, mode=mode,
+                                             n_vertices=V)
+        with pytest.raises(rz.QuarantinedBatch) as ei:
+            rz.validate_batch(c_s, c_d, c_w, [], [], n_vertices=V)
+        assert any(r["field"] == field for r in ei.value.reasons)
+
+    def test_length_mismatch_quarantined(self):
+        with pytest.raises(rz.QuarantinedBatch):
+            rz.validate_batch([1, 2], [3], None, [], [], n_vertices=V)
+
+    def test_retry_budget_absorbs_then_exhausts(self):
+        calls = {"n": 0}
+
+        def flaky():
+            calls["n"] += 1
+            if calls["n"] < 3:
+                raise rz.InjectedOOM("s", calls["n"])
+            return "ok"
+        assert rz.run_with_retries(
+            flaky, budget=rz.RetryBudget(max_attempts=4), site="s") == "ok"
+        with pytest.raises(rz.RetryExhausted) as ei:
+            rz.run_with_retries(
+                lambda: (_ for _ in ()).throw(rz.InjectedOOM("s", 0)),
+                budget=rz.RetryBudget(max_attempts=2), site="s")
+        assert ei.value.attempts == 2
+
+    def test_breaker_state_machine(self):
+        br = rz.CircuitBreaker(threshold=2, cooldown=2)
+        assert br.allow()
+        br.record_failure()
+        assert br.allow() and br.state == "closed"
+        br.record_failure()                        # trip
+        assert br.state == "open" and br.trips == 1
+        assert not br.allow(); br.shed()
+        assert not br.allow(); br.shed()
+        assert br.allow() and br.state == "half_open"   # probe admitted
+        br.record_failure()                        # probe fails: re-open
+        assert br.state == "open" and br.trips == 2
+        br.shed(); br.shed()
+        assert br.allow()
+        br.record_success()
+        assert br.state == "closed" and br.failures == 0
+
+
+# ============================================================================
+# invariant audits
+# ============================================================================
+
+class TestInvariants:
+    def test_clean_stores_audit_green(self):
+        store = _mk_graph_store()
+        report = rz.audit_store(store)
+        assert report.ok and report.checks_run >= 20
+
+    def test_degree_corruption_detected(self):
+        import dataclasses
+        store = _mk_graph_store()
+        g = store.views["forward"]
+        store._views["forward"] = dataclasses.replace(
+            g, degree=g.degree.at[0].add(1), n_edges=g.n_edges + 1)
+        report = rz.audit_store(store, cross_view=False)
+        checks = {v.check for v in report.violations}
+        assert "degree_mismatch" in checks and "n_edges_mismatch" in checks
+
+    def test_chain_cycle_detected(self):
+        import dataclasses
+        import jax.numpy as jnp
+        store = _mk_graph_store()
+        g = store.views["forward"]
+        nxt = np.asarray(g.next_slab).copy()
+        head = int(np.asarray(g.bucket_offset)[0])
+        nxt[head] = head                           # self-loop chain
+        store._views["forward"] = dataclasses.replace(
+            g, next_slab=jnp.asarray(nxt))
+        report = rz.audit_store(store, views=["forward"], cross_view=False)
+        assert any(v.check == "chain_cycle" for v in report.violations)
+
+    def test_cross_view_divergence_detected(self):
+        store = _mk_graph_store()
+        # drop the transpose view's pools for a fresh empty one: the edge
+        # multisets now disagree
+        from repro.core.slab_graph import empty
+        nb = store.views["transpose"].n_buckets
+        bc = np.zeros(V, np.int32)
+        bc[0] = nb
+        store._views["transpose"] = empty(V, bc, nb + 1, weighted=False)
+        report = rz.audit_store(store, views=["forward", "transpose"])
+        assert any(v.check == "edge_multiset" for v in report.violations)
+
+    def test_audit_policy_cadence_and_fail_fast(self, tmp_path):
+        store = _mk_graph_store().attach_audits(
+            rz.AuditPolicy(every=2, fail_fast=True))
+        for i_s, i_d, d_s, d_d in _stream(11, 4):
+            store.apply(i_s, i_d, None, d_s, d_d)  # healthy: no raise
+        assert len(store.audit_events) >= 1
+        assert all(e["ok"] for e in store.audit_events)
+
+
+# ============================================================================
+# crash recovery — kill at every apply phase, recover, converge bit-identical
+# ============================================================================
+
+CKPT_AT = 2          # checkpoint lands after this many applies
+CRASH_AT = 5         # the fault plan arms on this apply (0-based index)
+N_BATCHES = 8
+
+
+def _crash_recover_converge(site, tmp_path, mk_store, store_cls):
+    ck, wd = tmp_path / "ck", tmp_path / "wal"
+    batches = _stream(seed=23, n_batches=N_BATCHES)
+    policy = MaintenancePolicy(tombstone_ratio=0.15)
+    if store_cls is ShardedGraphStore:
+        from repro.stream import sharded_pagerank_property
+        pr_spec = sharded_pagerank_property
+    else:
+        pr_spec = pagerank_stream_property
+
+    # uninterrupted twin (records the version after each apply)
+    twin = mk_store()
+    vers = []
+    for i_s, i_d, d_s, d_d in batches:
+        twin.apply(i_s, i_d, None, d_s, d_d)
+        vers.append(twin.version)
+
+    # journaled run, killed mid-apply at the target site
+    store = mk_store().attach_wal(rz.WriteAheadLog(wd))
+    registry = PropertyRegistry(store)
+    registry.register(pr_spec())
+    crashed = False
+    try:
+        for t, (i_s, i_d, d_s, d_d) in enumerate(batches):
+            if t == CKPT_AT:
+                store.save(ck, registry=registry)
+            if t == CRASH_AT:
+                with faults.inject(rz.FaultSpec(site, at=1)):
+                    store.apply(i_s, i_d, None, d_s, d_d)
+            else:
+                store.apply(i_s, i_d, None, d_s, d_d)
+    except rz.InjectedCrash:
+        crashed = True
+    assert crashed, f"fault at {site} never fired"
+    store.wal.close()
+
+    # a restarted process: restore + WAL replay, then re-feed the stream
+    store2, registry2, report = rz.recover(
+        ck, wd, store_cls=store_cls,
+        specs=[pr_spec()], maintenance=policy,
+        wal=rz.WriteAheadLog(wd))
+    assert not report.anomalies
+    assert report.checkpoint_version == vers[CKPT_AT - 1]
+    assert store2.version in vers, \
+        f"recovered to v{store2.version}, not on the twin trajectory {vers}"
+    resume = vers.index(store2.version) + 1
+    # pre-WAL kills lose the in-flight batch (resume == CRASH_AT);
+    # post-WAL kills recover it from the log (resume == CRASH_AT + 1)
+    assert resume in (CRASH_AT, CRASH_AT + 1)
+    for i_s, i_d, d_s, d_d in batches[resume:]:
+        store2.apply(i_s, i_d, None, d_s, d_d)
+
+    assert store2.version == twin.version
+    _assert_leaves_equal(_pool_leaves(store2), _pool_leaves(twin))
+    assert registry2 is not None
+    pr2 = np.asarray(registry2.read("pagerank"))
+    assert np.all(np.isfinite(pr2))
+
+
+class TestCrashRecovery:
+    @pytest.mark.parametrize("site", APPLY_SITES)
+    def test_graph_store(self, site, tmp_path):
+        _crash_recover_converge(site, tmp_path, _mk_graph_store, GraphStore)
+
+    @pytest.mark.parametrize("site", APPLY_SITES)
+    def test_sharded_store(self, site, tmp_path):
+        _crash_recover_converge(site, tmp_path, _mk_sharded_store,
+                                ShardedGraphStore)
+
+    def test_failed_apply_rolls_back_wal(self, tmp_path):
+        """A recoverable failure AFTER the WAL append (not a simulated
+        kill) must not leave the dead batch journaled — replay would
+        resurrect a batch the store rejected."""
+        store = _mk_graph_store().attach_wal(rz.WriteAheadLog(tmp_path))
+        with pytest.raises(rz.InjectedOOM):
+            with faults.inject(rz.FaultSpec("apply.pre_close",
+                                            kind=rz.OOM, at=1)):
+                store.apply([1], [2], None, [], [])
+        assert store.version == 0                  # batch never versioned
+        recs, _ = rz.read_wal(tmp_path)
+        assert recs == []                          # rolled back
+        store.apply([1], [2], None, [], [])
+        assert store.version == 1
+        store.wal.close()
+        recs, _ = rz.read_wal(tmp_path)
+        assert [r.version for r in recs] == [1]
+
+
+# ============================================================================
+# checkpoint atomicity & validation
+# ============================================================================
+
+class TestCheckpointSafety:
+    def _save_once(self, store, ck):
+        return store.save(ck)
+
+    @pytest.mark.parametrize("site", ["ckpt.save.leaf", "ckpt.save.manifest",
+                                      "ckpt.save.publish"])
+    def test_crash_mid_save_keeps_previous_checkpoint(self, site, tmp_path):
+        store = _mk_graph_store()
+        store.save(tmp_path)                       # good checkpoint at v0
+        store.apply([1, 2], [3, 4], None, [], [])
+        with pytest.raises(rz.InjectedCrash):
+            with faults.inject(rz.FaultSpec(site, at=1)):
+                store.save(tmp_path)               # dies mid-save
+        # the previous checkpoint must still be discoverable and loadable
+        step = ckpt.latest_step(tmp_path)
+        assert step == 0
+        restored, _ = GraphStore.restore(tmp_path)
+        assert restored.version == 0
+        # and a retried save fully replaces it
+        store.save(tmp_path)
+        assert ckpt.latest_step(tmp_path) == store.version
+
+    def test_overwrite_same_step_is_crash_safe(self, tmp_path):
+        store = _mk_graph_store()
+        store.save(tmp_path, step=7)
+        with pytest.raises(rz.InjectedCrash):
+            with faults.inject(rz.FaultSpec("ckpt.save.publish", at=1)):
+                store.save(tmp_path, step=7)       # overwrite dies pre-rename
+        assert ckpt.latest_step(tmp_path) == 7     # old copy intact
+        ckpt.validate_checkpoint(tmp_path / "step_0000000007")
+
+    def test_torn_dir_skipped_and_rejected(self, tmp_path):
+        store = _mk_graph_store()
+        store.save(tmp_path, step=1)
+        torn = tmp_path / "step_0000000009"
+        torn.mkdir()
+        (torn / "manifest.msgpack").write_bytes(b"\x00garbage")
+        assert ckpt.latest_step(tmp_path) == 1     # torn dir skipped
+        with pytest.raises(CheckpointError, match="corrupt"):
+            ckpt.read_manifest(tmp_path, step=9)
+
+    def test_missing_leaf_rejected_with_actionable_error(self, tmp_path):
+        store = _mk_graph_store()
+        path = store.save(tmp_path, step=2)
+        victim = sorted(path.glob("leaf_*.npy"))[0]
+        os.unlink(victim)
+        with pytest.raises(CheckpointError, match=victim.name):
+            ckpt.read_manifest(tmp_path, step=2)
+        assert ckpt.latest_step(tmp_path) is None  # nothing valid left
+
+    def test_non_stream_checkpoint_rejected_by_restore(self, tmp_path):
+        ckpt.save(tmp_path, 0, {"x": np.zeros(3)}, extra={"other": True})
+        with pytest.raises(CheckpointError, match="not a GraphStore"):
+            GraphStore.restore(tmp_path)
+        with pytest.raises(CheckpointError, match="ShardedGraphStore"):
+            ShardedGraphStore.restore(tmp_path)
+
+
+# ============================================================================
+# pipeline overload safety
+# ============================================================================
+
+def _count_property():
+    return PropertySpec(
+        name="n_ins", init=lambda store: 0,
+        on_batch=lambda store, state, batch: state + batch.n_inserted,
+        refresh=lambda store: int(store.views["forward"].n_edges),
+        state_like=lambda n: 0)
+
+
+class TestPipelineResilience:
+    def test_unknown_request_gets_error_response_and_serving_continues(self):
+        store = _mk_graph_store()
+        pipe = RequestPipeline(store)
+        rs = pipe.run([object(), MembershipQuery([0], [1]),
+                       UpdateBatch(ins_src=[1], ins_dst=[2])])
+        assert rs[0].kind == "error"
+        assert rs[0].payload["error"] == "unknown_request"
+        assert rs[1].kind == "member" and rs[2].kind == "update"
+
+    def test_quarantined_update_reports_reasons(self):
+        store = _mk_graph_store()
+        pipe = RequestPipeline(store)
+        v0 = store.version
+        rs = pipe.run([UpdateBatch(ins_src=[V + 50], ins_dst=[1])])
+        assert rs[0].kind == "error"
+        assert rs[0].payload["error"] == "QuarantinedBatch"
+        assert rs[0].payload["reasons"][0]["field"] == "ins_src"
+        assert store.version == v0                 # nothing applied
+
+    def test_breaker_sheds_then_recovers_and_reads_degrade(self):
+        store = _mk_graph_store()
+        registry = PropertyRegistry(store)
+        registry.register(_count_property())
+        pipe = RequestPipeline(
+            store, registry, coalesce=False,
+            breaker=rz.CircuitBreaker(threshold=2, cooldown=2))
+        bad = UpdateBatch(ins_src=[V + 9], ins_dst=[1])
+        good = UpdateBatch(ins_src=[4], ins_dst=[5])
+        read = PropertyRead("n_ins")
+
+        r1, r2 = pipe.run([bad, bad])              # 2 failures: trips
+        assert pipe.breaker.state == "open"
+        r3, rr, r4 = pipe.run([good, read, good])  # shed, stale read, shed
+        assert r3.payload["error"] == "circuit_open" and r3.payload["shed"]
+        assert rr.kind == "property" and rr.payload["stale"]
+        assert rr.payload["staleness"] == store.version - rr.version
+        assert r4.payload["error"] == "circuit_open"
+        assert pipe.breaker.shed_count == 2
+        (r5,) = pipe.run([good])                   # half-open probe succeeds
+        assert r5.kind == "update"
+        assert pipe.breaker.state == "closed"
+        (r6,) = pipe.run([read])                   # fresh read again
+        assert "stale" not in r6.payload
+
+    def test_property_read_without_registry_is_structured_error(self):
+        store = _mk_graph_store()
+        (r,) = RequestPipeline(store).run([PropertyRead("x")])
+        assert r.kind == "error" and r.payload["error"] == "no_registry"
+
+
+# ============================================================================
+# NO-FAULT NEUTRALITY — the resilience plane armed but quiet changes nothing
+# ============================================================================
+
+class TestNeutrality:
+    def _drive(self, resilient, tmp_path):
+        store = _mk_graph_store()
+        if resilient:
+            store.attach_wal(rz.WriteAheadLog(tmp_path / "wal"))
+            store.attach_audits(rz.AuditPolicy(every=2, fail_fast=True))
+        registry = PropertyRegistry(store)
+        registry.register(pagerank_stream_property())
+        for i_s, i_d, d_s, d_d in _stream(seed=31, n_batches=5):
+            store.apply(i_s, i_d, None, d_s, d_d)
+        if resilient:
+            store.wal.close()
+        return _pool_leaves(store)
+
+    def test_graph_store_pools_identical_with_plane_armed(self, tmp_path):
+        _assert_leaves_equal(self._drive(False, tmp_path),
+                             self._drive(True, tmp_path))
+
+    def test_sharded_store_pools_identical_with_plane_armed(self, tmp_path):
+        def drive(resilient):
+            store = _mk_sharded_store()
+            if resilient:
+                store.attach_wal(rz.WriteAheadLog(tmp_path / "wal_s"))
+                store.attach_audits(rz.AuditPolicy(every=2, fail_fast=True))
+            for i_s, i_d, d_s, d_d in _stream(seed=37, n_batches=4):
+                store.apply(i_s, i_d, None, d_s, d_d)
+            if resilient:
+                store.wal.close()
+            return _pool_leaves(store)
+        _assert_leaves_equal(drive(False), drive(True))
