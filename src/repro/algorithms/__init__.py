@@ -13,8 +13,10 @@ from .sssp import (INF, NO_PARENT, TreeState, init_state, relax_edges,
                    relax_sweep, run_to_convergence, sssp_decremental,
                    sssp_incremental, sssp_static)
 from .sssp import stream_property as sssp_stream_property
-from .triangle import (count_kernel, search_edges, triangles_decremental,
-                       triangles_incremental, triangles_static)
+from .triangle import (batch_graph, count_kernel, search_edges,
+                       triangles_decremental, triangles_incremental,
+                       triangles_static, undirected_host)
+from .triangle import stream_property as triangle_stream_property
 from .wcc import (count_components, wcc_incremental_batch,
                   wcc_incremental_naive, wcc_incremental_slab_iterator,
                   wcc_incremental_update_iterator, wcc_labelprop_ref,
@@ -28,11 +30,12 @@ __all__ = [
     "INF", "NO_PARENT", "TreeState", "init_state", "relax_edges",
     "relax_sweep", "run_to_convergence", "sssp_decremental",
     "sssp_incremental", "sssp_static",
-    "count_kernel", "search_edges", "triangles_decremental",
-    "triangles_incremental", "triangles_static",
+    "batch_graph", "count_kernel", "search_edges", "triangles_decremental",
+    "triangles_incremental", "triangles_static", "undirected_host",
     "count_components", "wcc_incremental_batch", "wcc_incremental_naive",
     "wcc_incremental_slab_iterator", "wcc_incremental_update_iterator",
     "wcc_labelprop_ref", "wcc_labelprop_sweep", "wcc_static",
     "bfs_stream_property", "pagerank_stream_property",
-    "sssp_stream_property", "wcc_stream_property",
+    "sssp_stream_property", "triangle_stream_property",
+    "wcc_stream_property",
 ]

@@ -1,11 +1,19 @@
 """Dynamic triangle counting (paper §4.3, Appendix A.1, Algs. 7–9).
 
 Inclusion–exclusion over (graph, update-graph) pairs after Makkar, Bader &
-Green.  The ``Count(G1, G2, edges)`` kernel computes, per edge (u,v), the
-number of w ∈ adj_G2(v) with (u,w) ∈ G1 — on the GPU a warp walks v's slabs
-and probes u's hash bucket per lane; here a lane-vector walks v's slab chain
-while the probe is a vectorised bucket chain-walk over lane chunks (the
-``slab_intersect`` Pallas kernel implements the probe).
+Green.  The counting core lives in the ``kernels.slab_intersect`` family
+(``count_edges`` with ``impl="auto"|"pallas"|"jnp"|"oracle"``); this module
+is the thin algorithm driver on top of it:
+
+  * ``triangles_static``       — edge-parallel count over the compacted edge
+    set, with host-side grow-and-retry on compaction overflow.
+  * ``triangles_incremental``  / ``triangles_decremental`` — Algs. 7/8 via
+    the Count() inclusion–exclusion, with the batch graph B built **on
+    device** through the slab_update engine (``batch_graph``).
+  * ``stream_property``        — live triangle count through
+    ``GraphStore.apply`` epochs: incremental delta on insert-only batches,
+    decremental on delete-only, refresh fallback on mixed / self-loop
+    epochs.  Maintenance epochs leave the count untouched.
 
 With the batch expressed in BOTH orientations (undirected adjacency):
 
@@ -17,79 +25,46 @@ decremental line is Alg. 8 verbatim, the incremental line its inclusion–
 exclusion dual — both are property-tested against brute force.)
 
 Hashing stays ENABLED for TC (paper §6.3: restricting the probe to one slab
-list improves TC by ~15×, opposite of the traversal algorithms).
+list improves TC by ~15×, opposite of the traversal algorithms).  The
+``max_bpv`` knob only bounds candidate enumeration from G2's buckets — the
+G1 membership probe is hash-indexed — so the single-bucket batch graph B
+always runs with ``batch_bpv=1`` regardless of the main graph's shape.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from ..core.batch import edge_buckets, probe
-from ..core.hashing import INVALID_SLAB, SLAB_WIDTH, is_valid_vertex
-from ..core.slab_graph import SlabGraph
+from ..core.hashing import INVALID_VERTEX, SLAB_WIDTH
+from ..core.slab_graph import SlabGraph, empty, next_pow2
 from ..core.worklist import pool_edges
+from ..kernels.slab_intersect import count_edges
+from ..kernels.slab_intersect.ref import search_edges_ref as search_edges
 
 
-def search_edges(g: SlabGraph, us: jnp.ndarray, ws: jnp.ndarray,
-                 mask: jnp.ndarray) -> jnp.ndarray:
-    """Paper's ``SearchEdge`` batched: (u,w) ∈ G?  One hash-probe chain walk."""
-    b = edge_buckets(g, us, ws, mask)
-    found, _, _ = probe(g, b, ws, mask)
-    return found & mask
-
-
-@partial(jax.jit, static_argnames=("max_bpv", "lane_chunk"))
 def count_kernel(g1: SlabGraph, g2: SlabGraph, us: jnp.ndarray,
                  vs: jnp.ndarray, emask: jnp.ndarray, *, max_bpv: int = 4,
-                 lane_chunk: int = 32) -> jnp.ndarray:
-    """Alg. 9: Σ_edges |N_G1(u) ∩ N_G2(v)| (w drawn from G2's adjacency).
-
-    Outer ``while_loop`` advances every edge's SlabIterator over v's chain in
-    G2 one slab per step; per step the 128 candidate lanes are probed against
-    G1 in ``lane_chunk`` slices to bound the transient gather footprint
-    (the VMEM tile of the Pallas version).
-    """
-    E = us.shape[0]
-    v = jnp.where(emask, vs, 0).astype(jnp.int32)
-    j = jnp.arange(max_bpv, dtype=jnp.int32)[None, :]
-    bmask = emask[:, None] & (j < g2.bucket_count[v][:, None])
-    cur0 = jnp.where(bmask, g2.bucket_offset[v][:, None] + j,
-                     INVALID_SLAB).reshape(-1)
-    u_flat = jnp.broadcast_to(us[:, None], (E, max_bpv)).reshape(-1)
-    m_flat = bmask.reshape(-1)
-
-    def cond(state):
-        cur, _ = state
-        return jnp.any(cur != INVALID_SLAB)
-
-    def body(state):
-        cur, total = state
-        active = cur != INVALID_SLAB
-        rows = g2.keys[jnp.maximum(cur, 0)]                    # (Eb,128)
-        wvalid = active[:, None] & is_valid_vertex(rows) & m_flat[:, None]
-        for c in range(0, SLAB_WIDTH, lane_chunk):             # unrolled
-            wchunk = rows[:, c:c + lane_chunk].reshape(-1)
-            mchunk = wvalid[:, c:c + lane_chunk].reshape(-1)
-            uu = jnp.broadcast_to(u_flat[:, None],
-                                  (u_flat.shape[0], lane_chunk)).reshape(-1)
-            found = search_edges(g1, uu, wchunk, mchunk)
-            total = total + jnp.sum(found.astype(jnp.int32))
-        cur = jnp.where(active, g2.next_slab[jnp.maximum(cur, 0)],
-                        INVALID_SLAB)
-        return cur, total
-
-    _, total = jax.lax.while_loop(
-        cond, body, (cur0, jnp.asarray(0, jnp.int32)))
-    return total
+                 lane_chunk: int = 32, impl: str = "auto") -> jnp.ndarray:
+    """Alg. 9's ``Count(G1, G2, edges)`` — thin driver over the family's
+    ``count_edges`` (kept under the historical name for API stability)."""
+    return count_edges(g1, g2, us, vs, emask, impl=impl, max_bpv=max_bpv,
+                       lane_chunk=lane_chunk)
 
 
 @partial(jax.jit, static_argnames=("max_edges",))
 def compact_edges(g: SlabGraph, *, max_edges: int):
-    """Dense (src, dst, count) arrays of the current edge set (prefix-sum
-    compaction of the pool view) — feeds chunked edge-parallel kernels."""
+    """Dense (src, dst, count, overflow) of the current edge set (prefix-sum
+    compaction of the pool view) — feeds chunked edge-parallel kernels.
+
+    ``overflow`` is the number of live lanes that did NOT fit in
+    ``max_edges`` — the explicit witness callers must check (the analogue of
+    ``route_edges``'s overflow count); ``triangles_static`` grows and
+    retries on it.
+    """
     view = pool_edges(g)
     src = view.src.reshape(-1)
     dst = view.dst.reshape(-1)
@@ -100,32 +75,136 @@ def compact_edges(g: SlabGraph, *, max_edges: int):
     es = jnp.zeros((max_edges,), jnp.uint32).at[idx].set(
         src.astype(jnp.uint32), mode="drop")
     ed = jnp.zeros((max_edges,), jnp.uint32).at[idx].set(dst, mode="drop")
-    return es, ed, jnp.minimum(jnp.sum(m), max_edges)
+    total = jnp.sum(m)
+    return (es, ed, jnp.minimum(total, max_edges),
+            jnp.maximum(total - max_edges, 0))
 
 
 def triangles_static(g: SlabGraph, *, max_bpv: int = 4,
                      max_edges: int | None = None,
-                     chunk: int = 8192) -> jnp.ndarray:
+                     chunk: int = 8192, impl: str = "auto") -> jnp.ndarray:
     """Static count over an undirected graph (both orientations stored):
     Σ_{(u,v)} |N(u)∩N(v)| counts each triangle 6×.
 
     Edge-parallel over COMPACTED edges in fixed-size chunks — the padded
-    pool view would multiply probe rows by the slab fill factor.
+    pool view would multiply probe rows by the slab fill factor.  The
+    compaction capacity starts at ``max_edges`` (default: the live edge
+    count rounded up) and grows-and-retries on the overflow witness, like
+    ``distributed._resolve_routing`` does for routing caps; the pool-lane
+    total is a hard ceiling, so the ladder always terminates.
     """
-    if max_edges is None:
-        max_edges = g.capacity_slabs * SLAB_WIDTH
-    es, ed, n = compact_edges(g, max_edges=max_edges)
+    cap_pool = g.capacity_slabs * SLAB_WIDTH
+    cap = min(cap_pool, max_edges if max_edges is not None
+              else next_pow2(max(int(g.n_edges), 1)))
+    attempts = max(4, cap_pool.bit_length() + 1)
+    for _ in range(attempts):
+        es, ed, n, overflow = compact_edges(g, max_edges=cap)
+        if int(overflow) == 0:
+            break
+        if cap >= cap_pool:      # unreachable: lanes can't exceed the pool
+            break
+        cap = min(cap * 2, cap_pool)
+    else:
+        from ..resilience.guard import RetryExhausted
+        raise RetryExhausted(
+            "triangle.compact", attempts,
+            RuntimeError(f"compact_edges still overflows at cap {cap}"))
+
     es = jnp.pad(es, (0, chunk))   # slice windows never clamp
     ed = jnp.pad(ed, (0, chunk))
     n = int(n)
     total = jnp.asarray(0, jnp.int32)
     for c0 in range(0, n, chunk):
         m = jnp.arange(chunk) < (n - c0)
-        total = total + count_kernel(
+        total = total + count_edges(
             g, g, jax.lax.dynamic_slice(es, (c0,), (chunk,)),
-            jax.lax.dynamic_slice(ed, (c0,), (chunk,)), m, max_bpv=max_bpv)
+            jax.lax.dynamic_slice(ed, (c0,), (chunk,)), m,
+            impl=impl, max_bpv=max_bpv)
     return total // 6
 
+
+# ---------------------------------------------------------------------------
+# device-built batch graphs + canonical-pair helpers
+# ---------------------------------------------------------------------------
+
+_U32_MAX = jnp.uint32(0xFFFFFFFF)
+
+
+def batch_graph(n_vertices: int, bsrc: jnp.ndarray, bdst: jnp.ndarray,
+                bmask: jnp.ndarray) -> SlabGraph:
+    """Build the update graph B on device from a canonical batch.
+
+    Single-bucket layout (``bucket_count == 1`` everywhere, so probes into B
+    run with ``batch_bpv=1``); both orientations of every masked pair are
+    committed through the slab_update engine — no host set arithmetic.
+    """
+    from ..kernels.slab_update import insert_edges
+    B = int(bsrc.shape[0])
+    cap = next_pow2(n_vertices + (2 * B) // SLAB_WIDTH + 2)
+    gb = empty(n_vertices, np.ones(n_vertices, np.int32), cap)
+    gsrc = jnp.concatenate([jnp.where(bmask, bsrc, 0),
+                            jnp.where(bmask, bdst, 0)]).astype(jnp.uint32)
+    gdst = jnp.concatenate([jnp.where(bmask, bdst, _U32_MAX),
+                            jnp.where(bmask, bsrc, _U32_MAX)]
+                           ).astype(jnp.uint32)   # sentinel = masked lane
+    gb, _ = insert_edges(gb, gsrc, gdst)
+    return gb
+
+
+@jax.jit
+def _canonical_sorted(lo: jnp.ndarray, hi: jnp.ndarray, mask: jnp.ndarray):
+    """Stable two-key sort of masked canonical pairs (uint64-free: x64 is
+    disabled on device, so pair keys stay as two uint32 sort keys)."""
+    l = jnp.where(mask, lo, _U32_MAX).astype(jnp.uint32)
+    h = jnp.where(mask, hi, _U32_MAX).astype(jnp.uint32)
+    iota = jnp.arange(lo.shape[0], dtype=jnp.int32)
+    sl, sh, perm = jax.lax.sort((l, h, iota), num_keys=2, is_stable=True)
+    eq_prev = ((sl == jnp.roll(sl, 1)) & (sh == jnp.roll(sh, 1))
+               ).at[0].set(False)
+    return sl, sh, perm, eq_prev
+
+
+@jax.jit
+def dedup_canonical(lo: jnp.ndarray, hi: jnp.ndarray,
+                    mask: jnp.ndarray) -> jnp.ndarray:
+    """First-occurrence mask of each distinct masked (lo, hi) pair."""
+    sl, _, perm, eq_prev = _canonical_sorted(lo, hi, mask)
+    keep_sorted = ~eq_prev & (sl != _U32_MAX)
+    return jnp.zeros(mask.shape, bool).at[perm].set(keep_sorted)
+
+
+@jax.jit
+def pair_duplicated(lo: jnp.ndarray, hi: jnp.ndarray,
+                    mask: jnp.ndarray) -> jnp.ndarray:
+    """Per-lane: does the masked multiset hold this (lo, hi) pair twice?
+
+    With directed-deduped, loop-free lanes a duplicate can only be the
+    reverse orientation of the same undirected pair — the "was the reverse
+    edge inserted in this very batch" predicate of the stream hook.
+    """
+    sl, sh, perm, eq_prev = _canonical_sorted(lo, hi, mask)
+    eq_next = ((sl == jnp.roll(sl, -1)) & (sh == jnp.roll(sh, -1))
+               ).at[-1].set(False)
+    dup = jnp.zeros(mask.shape, bool).at[perm].set(eq_prev | eq_next)
+    return dup & mask
+
+
+def undirected_host(src, dst) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side canonical undirected dedup (numpy sort/unique idiom — the
+    vectorised replacement for per-pair Python set comprehensions)."""
+    src = np.asarray(src, dtype=np.uint32)
+    dst = np.asarray(dst, dtype=np.uint32)
+    lo = np.minimum(src, dst)
+    hi = np.maximum(src, dst)
+    key = np.unique((lo.astype(np.uint64) << np.uint64(32))
+                    | hi.astype(np.uint64))
+    return ((key >> np.uint64(32)).astype(np.uint32),
+            (key & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+
+
+# ---------------------------------------------------------------------------
+# incremental / decremental deltas (Algs. 7/8)
+# ---------------------------------------------------------------------------
 
 def _both_orientations(bsrc, bdst, bmask):
     us = jnp.concatenate([bsrc, bdst])
@@ -134,29 +213,133 @@ def _both_orientations(bsrc, bdst, bmask):
     return us, vs, m
 
 
-@partial(jax.jit, static_argnames=("max_bpv",))
 def triangles_incremental(g_new: SlabGraph, g_batch: SlabGraph,
                           bsrc: jnp.ndarray, bdst: jnp.ndarray,
-                          bmask: jnp.ndarray, *, max_bpv: int = 4
-                          ) -> jnp.ndarray:
+                          bmask: jnp.ndarray, *, max_bpv: int = 4,
+                          batch_bpv: Optional[int] = None,
+                          impl: str = "auto") -> jnp.ndarray:
     """Alg. 7: triangles gained by inserting the batch (already applied to
-    ``g_new``; ``g_batch`` holds the batch edges, both orientations)."""
+    ``g_new``; ``g_batch`` holds the batch edges, both orientations).
+
+    ``batch_bpv`` bounds candidate enumeration from ``g_batch``'s buckets
+    (1 for ``batch_graph``-built graphs); defaults to ``max_bpv``.
+    """
+    bb = max_bpv if batch_bpv is None else batch_bpv
     us, vs, m = _both_orientations(bsrc, bdst, bmask)
-    s1 = count_kernel(g_new, g_new, us, vs, m, max_bpv=max_bpv)
-    s2 = count_kernel(g_new, g_batch, us, vs, m, max_bpv=max_bpv)
-    s3 = count_kernel(g_batch, g_batch, us, vs, m, max_bpv=max_bpv)
+    s1 = count_edges(g_new, g_new, us, vs, m, impl=impl, max_bpv=max_bpv)
+    s2 = count_edges(g_new, g_batch, us, vs, m, impl=impl, max_bpv=bb)
+    s3 = count_edges(g_batch, g_batch, us, vs, m, impl=impl, max_bpv=bb)
     return (3 * (s1 - s2) + s3) // 6
 
 
-@partial(jax.jit, static_argnames=("max_bpv",))
 def triangles_decremental(g_post: SlabGraph, g_batch: SlabGraph,
                           bsrc: jnp.ndarray, bdst: jnp.ndarray,
-                          bmask: jnp.ndarray, *, max_bpv: int = 4
-                          ) -> jnp.ndarray:
+                          bmask: jnp.ndarray, *, max_bpv: int = 4,
+                          batch_bpv: Optional[int] = None,
+                          impl: str = "auto") -> jnp.ndarray:
     """Alg. 8: triangles lost by deleting the batch (already applied to
     ``g_post``)."""
+    bb = max_bpv if batch_bpv is None else batch_bpv
     us, vs, m = _both_orientations(bsrc, bdst, bmask)
-    s1 = count_kernel(g_post, g_post, us, vs, m, max_bpv=max_bpv)
-    s2 = count_kernel(g_post, g_batch, us, vs, m, max_bpv=max_bpv)
-    s3 = count_kernel(g_batch, g_batch, us, vs, m, max_bpv=max_bpv)
+    s1 = count_edges(g_post, g_post, us, vs, m, impl=impl, max_bpv=max_bpv)
+    s2 = count_edges(g_post, g_batch, us, vs, m, impl=impl, max_bpv=bb)
+    s3 = count_edges(g_batch, g_batch, us, vs, m, impl=impl, max_bpv=bb)
     return (3 * (s1 + s2) + s3) // 6
+
+
+# ---------------------------------------------------------------------------
+# repro.stream registration hook
+# ---------------------------------------------------------------------------
+
+def _sym_bpv(g: SlabGraph) -> int:
+    # pow2-quantized so maintenance-driven bucket reshapes walk a small
+    # ladder of jit specializations instead of one per distinct max.
+    return next_pow2(int(jnp.max(g.bucket_count)), lo=1)
+
+
+def stream_property(*, impl: str = "auto", chunk: int = 8192):
+    """PropertySpec: live global triangle count over the SYMMETRIC view.
+
+    Insert-only epochs advance by ``triangles_incremental`` over the edges
+    the symmetric view actually gained; delete-only epochs by
+    ``triangles_decremental`` over what it lost.  Mixed epochs (deletes are
+    applied before inserts, so neither single-sided formula sees the right
+    intermediate graph) and epochs touching self-loops fall back to the
+    static recount; maintenance epochs keep the count as-is (the edge set
+    is untouched and the state is a scalar, so compaction perms cannot
+    invalidate it).
+
+    A forward edge changes the symmetric view only when its reverse is not
+    also stored: a gained (s,d) is an undirected gain iff (d,s) was absent
+    before the batch (present now either means it pre-existed — no gain —
+    or was co-inserted, which ``pair_duplicated`` detects); a deleted (s,d)
+    is an undirected loss iff (d,s) is absent after it.  Canonical (lo, hi)
+    dedup then collapses co-updated orientation twins to one pair.
+
+    Self-loops anywhere in the graph poison the Σ|N(u)∩N(v)| = 6T algebra
+    (w may equal u, and (u,u) edges contribute degree terms), so deltas are
+    only trusted while the graph is loop-free AND the batch touches no
+    loop; otherwise the epoch refreshes.  The loop scan is one vectorised
+    (i,i) probe over V, memoized per store version.
+    """
+    from ..stream.properties import PropertySpec
+
+    loop_memo = {"version": None, "present": False}
+
+    def _has_loops(store):
+        if loop_memo["version"] != store.version:
+            from ..kernels.slab_update import query_edges
+            ii = jnp.arange(store.n_vertices, dtype=jnp.uint32)
+            loop_memo["present"] = bool(
+                jnp.any(query_edges(store.forward, ii, ii)))
+            loop_memo["version"] = store.version
+        return loop_memo["present"]
+
+    def _refresh(store):
+        g = store.symmetric
+        if g is None:
+            raise ValueError("triangle_stream_property needs the symmetric "
+                             "view (with_symmetric=True)")
+        return triangles_static(g, max_bpv=_sym_bpv(g), chunk=chunk,
+                                impl=impl)
+
+    def _delta_pairs(store, src, dst, mask, *, inserts: bool):
+        from ..kernels.slab_update import query_edges
+        rev_post = query_edges(store.forward, dst, src) & mask
+        lo = jnp.minimum(src, dst)
+        hi = jnp.maximum(src, dst)
+        if inserts:
+            rev_pre = rev_post & ~pair_duplicated(lo, hi, mask)
+            changed = mask & ~rev_pre
+        else:
+            changed = mask & ~rev_post
+        keep = dedup_canonical(lo, hi, changed)
+        return (jnp.where(keep, lo, 0).astype(jnp.uint32),
+                jnp.where(keep, hi, 0).astype(jnp.uint32), keep)
+
+    def _on_batch(store, count, batch):
+        if batch.maintenance:
+            return count
+        has_ins = batch.n_inserted > 0
+        has_del = batch.n_deleted > 0
+        if not has_ins and not has_del:
+            return count
+        if has_ins and has_del:
+            return _refresh(store)
+        if has_ins:
+            src, dst, mask = batch.ins_src, batch.ins_dst, batch.ins_mask
+        else:
+            src, dst, mask = batch.del_src, batch.del_dst, batch.del_mask
+        if bool(jnp.any(mask & (src == dst))) or _has_loops(store):
+            return _refresh(store)       # self-loops break the 6T algebra
+        lo, hi, keep = _delta_pairs(store, src, dst, mask, inserts=has_ins)
+        g = store.symmetric
+        gb = batch_graph(store.n_vertices, lo, hi, keep)
+        kw = dict(max_bpv=_sym_bpv(g), batch_bpv=1, impl=impl)
+        if has_ins:
+            return count + triangles_incremental(g, gb, lo, hi, keep, **kw)
+        return count - triangles_decremental(g, gb, lo, hi, keep, **kw)
+
+    return PropertySpec(
+        name="triangles", init=_refresh, on_batch=_on_batch,
+        refresh=_refresh, state_like=lambda n: jnp.zeros((), jnp.int32))

@@ -741,3 +741,79 @@ def bfs_sharded(sg_in: ShardedSlabGraph, *, src: int,
 
     return _run_sharded_fix(sg_in, dispatch, rows, fix_of,
                             (dist0, changed0))
+
+
+# ----------------------------------------------------------------------------
+# Distributed triangle counting (slab_intersect family, Alg. 9)
+# ----------------------------------------------------------------------------
+# 6T = Σ_k Σ_j Count(shard_j, shard_k, { (u,v) on shard k : owner(u) = j }):
+# candidate enumeration N(v) is shard-local on owner(v) = k (stored src ids
+# are local, stored dst keys global — exactly what the intersect kernel's G2
+# walk needs), while the (u,w) membership probe resolves entirely on
+# owner(u) = j because u's whole adjacency lives there.  The S rotations of
+# the stacked pools realise the Σ_j as the systolic all-to-all idiom; each
+# rotation is ONE vmapped count over every shard, and the final Σ_k is the
+# single collective reduction.
+
+def _compact_shard_edges(srcf, dstf, okf, *, cap: int):
+    """Per-shard prefix-sum edge compaction (flattened pool lanes)."""
+    m = okf.astype(jnp.int32)
+    pos = jnp.cumsum(m) - m
+    idx = jnp.where(okf & (pos < cap), pos, cap)
+    es = jnp.zeros((cap,), jnp.uint32).at[idx].set(
+        srcf.astype(jnp.uint32), mode="drop")
+    ed = jnp.zeros((cap,), jnp.uint32).at[idx].set(dstf, mode="drop")
+    return es, ed, jnp.minimum(jnp.sum(m), cap)
+
+
+@partial(jax.jit, static_argnames=("impl", "interpret", "max_bpv", "cap"))
+def _triangle_counts_sharded(graphs, *, impl: str, interpret: bool,
+                             max_bpv: int, cap: int) -> jnp.ndarray:
+    from ..core.worklist import pool_edges
+    from ..kernels.slab_intersect.ops import count_edges_local
+    S = graphs.keys.shape[0]
+    view = jax.vmap(pool_edges)(graphs)
+    es, ed, n = jax.vmap(partial(_compact_shard_edges, cap=cap))(
+        view.src.reshape(S, -1), view.dst.reshape(S, -1),
+        view.valid.reshape(S, -1))
+    emask = jnp.arange(cap)[None, :] < n[:, None]
+    owner = (ed % jnp.uint32(S)).astype(jnp.int32)
+    u_local = ed // jnp.uint32(S)
+    shard_ids = jnp.arange(S, dtype=jnp.int32)[:, None]
+    vcount = jax.vmap(partial(count_edges_local, impl=impl,
+                              interpret=interpret, max_bpv=max_bpv,
+                              lane_chunk=32, edges_per_tile=8))
+    total = jnp.zeros((S,), jnp.int32)
+    for r in range(S):
+        g1 = jax.tree.map(lambda x: jnp.roll(x, -r, axis=0), graphs)
+        m = emask & (owner == (shard_ids + r) % S)
+        total = total + vcount(g1, graphs, u_local, es, m)
+    return total
+
+
+def triangles_sharded(sg_sym: ShardedSlabGraph, *, impl: str = "auto",
+                      interpret: Optional[bool] = None,
+                      max_bpv: Optional[int] = None,
+                      cap: Optional[int] = None) -> jnp.ndarray:
+    """Global triangle count over the SYMMETRIC sharded view.
+
+    Bit-identical to ``algorithms.triangles_static`` on the unsharded union
+    (integer sums, order-free).  ``cap`` bounds the per-shard compacted edge
+    set and defaults to the exact worst-shard live-lane count (pow2), so it
+    never overflows; ``max_bpv`` defaults to the pow2-rounded worst bucket
+    count across shards.
+    """
+    from ..kernels.slab_intersect.ops import _resolve
+    impl, interpret = _resolve(impl, interpret)
+    graphs = sg_sym.graphs
+    S = sg_sym.n_shards
+    if max_bpv is None:
+        max_bpv = next_pow2(int(jnp.max(graphs.bucket_count)), lo=1)
+    if cap is None:
+        from ..core.worklist import pool_edges
+        valid = jax.vmap(lambda g: pool_edges(g).valid)(graphs)
+        cap = next_pow2(int(jnp.max(jnp.sum(
+            valid.reshape(S, -1).astype(jnp.int32), axis=1))), lo=128)
+    counts = _triangle_counts_sharded(graphs, impl=impl, interpret=interpret,
+                                      max_bpv=max_bpv, cap=cap)
+    return jnp.sum(counts) // 6

@@ -1,0 +1,16 @@
+"""Neighborhood-intersection engine: the triangle-counting plane (Alg. 9).
+
+The two-hop sibling of ``slab_sweep``/``slab_update``: a tiled Pallas chain
+walk over v's slabs in G2 whose candidate lanes are hash-probed straight
+into G1, with per-tile termination at both hops — see DESIGN.md §12 for the
+API contract and the ``ref.py`` oracle's role.
+"""
+from .kernel import probe_hits_pallas, slab_count_pallas
+from .ops import (IMPLS, adjacency_rows, count_edges, count_edges_local,
+                  count_shards, materialize_chains, search_edges_kernel)
+from .ref import count_edges_ref, probe_hits_ref, search_edges_ref
+
+__all__ = ["IMPLS", "count_edges", "count_edges_local", "count_shards",
+           "adjacency_rows", "materialize_chains", "search_edges_kernel",
+           "slab_count_pallas", "probe_hits_pallas",
+           "count_edges_ref", "probe_hits_ref", "search_edges_ref"]

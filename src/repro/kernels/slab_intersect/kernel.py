@@ -1,16 +1,31 @@
-"""Pallas kernel for the triangle-counting hash probe (paper Alg. 9).
+"""Pallas kernels for the triangle-counting plane (paper Alg. 9, §4.3).
 
-The GPU kernel walks v's slabs and, per lane w, probes u's hash bucket with a
-warp-cooperative chain walk.  The TPU form splits responsibilities:
+Two kernels, two halves of the paper's GPU TC loop:
 
-  * the host materialises, per query (u, w), the candidate slab rows of u's
-    bucket chain (bounded, ``max_chain`` static) — chain walking is pointer
-    chasing, best done once in XLA;
-  * the kernel then does the bandwidth-heavy part: gather the candidate rows
-    (Q_blk, C, 128) into VMEM and reduce lane-equality (the warp ballot) into
-    a per-query hit bit.
+``slab_count_pallas`` — the fused neighborhood-intersection kernel, the
+family's engine core.  Work items are (edge, bucket) pairs: each owns one
+SlabIterator over v's slab chain in G2.  A grid step owns a tile of
+``edges_per_tile`` items; per hop it gathers the tile's current G2 slab
+rows ((T, 128) through VMEM — the warp-coalesced slab read), masks the
+valid candidate lanes w, and then probes every candidate straight into G1
+with a fused hash-probe chain walk (``slab_update``'s probe, inlined):
+``bucket_offset[u] + hash(w) % bucket_count[u]`` starts a (T, lane_chunk)
+block of chain cursors whose own while-loop walks G1 slabs comparing all
+128 lanes per hop (lane-wide equality as the warp-ballot analogue).
+Candidates are consumed in ``lane_chunk`` slices so the transient
+(T, lane_chunk, 128) G1 gather stays a bounded VMEM tile.  Termination is
+**per tile** at both levels: a tile whose chains are done exits instead of
+idling until the globally longest chain finishes — the whole-batch
+``lax.while_loop`` of the ``ref.py`` oracle cannot do either.
 
-Queries are tiled (queries_per_block, C); the key pool stays in ``pl.ANY``.
+``probe_hits_pallas`` — the standalone membership probe (kept from the
+family's first cut): the host materialises each query's candidate slab
+rows, the kernel gathers and ballot-reduces them.  ``ops.search_edges_kernel``
+drives it; the fused count kernel above subsumes it for TC proper.
+
+Both kernels are validated in ``interpret=True`` mode against ``ref.py``
+(tests/test_kernels.py, tests/test_triangle_stream.py); TPU is the compile
+target.
 """
 from __future__ import annotations
 
@@ -20,6 +35,137 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ...core.hashing import INVALID_SLAB
+
+# Plain ints: jnp scalars at module scope would be captured closure constants,
+# which pallas_call rejects — inline literals trace fine.
+_KNUTH = 2654435761
+_EMPTY = 0xFFFFFFFE
+_TOMBSTONE = 0xFFFFFFFD
+_INVALID = 0xFFFFFFFF
+
+
+# ----------------------------------------------------------------------------
+# fused neighborhood-intersection count
+# ----------------------------------------------------------------------------
+
+def _count_kernel(cur_ref, u_ref, g2keys_ref, g2next_ref, g1keys_ref,
+                  g1next_ref, boff_ref, bcnt_ref, out_ref, *,
+                  slab_width: int, lane_chunk: int):
+    T = cur_ref.shape[0]
+    end = jnp.int32(-1)                     # INVALID_SLAB, as a literal
+    cur0 = cur_ref[...]                     # (T, 1) int32; -1 = inactive
+    u = u_ref[...]                          # (T, 1) int32, pre-sanitized
+    lane_iota = jax.lax.broadcasted_iota(jnp.int32, (1, slab_width), 1)
+    lane_iota3 = jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, slab_width), 2)
+
+    # per-item G1 bucket window of u — loop-invariant, hoisted out
+    boff = boff_ref[jnp.maximum(u, 0)]      # (T, 1) int32
+    bcnt = bcnt_ref[jnp.maximum(u, 0)]      # (T, 1) int32
+
+    def probe_chunk(w, wm, total):
+        """Fused hash-probe of a (T, K) candidate block into G1."""
+        h = ((w.astype(jnp.uint32) * jnp.uint32(_KNUTH)) >> jnp.uint32(8)) \
+            % jnp.maximum(bcnt, 1).astype(jnp.uint32)
+        ok = wm & (bcnt > 0)
+        pcur0 = jnp.where(ok, boff + h.astype(jnp.int32), end)  # (T, K)
+        found0 = jnp.zeros(w.shape, dtype=jnp.bool_)
+
+        def pcond(state):
+            pc, _ = state
+            return jnp.any(pc != end)                # per-tile termination
+
+        def pbody(state):
+            pc, found = state
+            walking = pc != end
+            idx = jnp.maximum(pc, 0)[..., None] * slab_width + lane_iota3
+            rows = g1keys_ref[idx]                   # (T, K, W) uint32
+            hit = jnp.any((rows == w[..., None]) & walking[..., None],
+                          axis=-1)
+            found = found | hit
+            nxt = g1next_ref[jnp.maximum(pc, 0)]
+            pc = jnp.where(walking & ~hit, nxt, end)
+            return pc, found
+
+        _, found = jax.lax.while_loop(pcond, pbody, (pcur0, found0))
+        return total + jnp.sum(found.astype(jnp.int32), axis=1,
+                               keepdims=True)
+
+    def cond(state):
+        cur, _ = state
+        return jnp.any(cur != end)                   # per-tile termination
+
+    def body(state):
+        cur, total = state
+        walking = cur != end
+        idx = jnp.maximum(cur, 0) * slab_width + lane_iota      # (T, W)
+        rows = g2keys_ref[idx]                                  # (T, W) u32
+        valid = walking & (rows != jnp.uint32(_EMPTY)) \
+            & (rows != jnp.uint32(_TOMBSTONE)) & (rows != jnp.uint32(_INVALID))
+        for c in range(0, slab_width, lane_chunk):   # static unroll
+            total = probe_chunk(rows[:, c:c + lane_chunk],
+                                valid[:, c:c + lane_chunk], total)
+        nxt = g2next_ref[jnp.maximum(cur, 0)]
+        cur = jnp.where(walking, nxt, end)
+        return cur, total
+
+    _, total = jax.lax.while_loop(
+        cond, body, (cur0, jnp.zeros((T, 1), dtype=jnp.int32)))
+    out_ref[...] = total
+
+
+@functools.partial(jax.jit, static_argnames=("edges_per_tile", "lane_chunk",
+                                             "interpret"))
+def slab_count_pallas(g1_keys: jnp.ndarray, g1_next: jnp.ndarray,
+                      g1_boff: jnp.ndarray, g1_bcnt: jnp.ndarray,
+                      g2_keys: jnp.ndarray, g2_next: jnp.ndarray,
+                      start: jnp.ndarray, us: jnp.ndarray, *,
+                      edges_per_tile: int = 8, lane_chunk: int = 16,
+                      interpret: bool = False) -> jnp.ndarray:
+    """Per-work-item |N_G1(u) ∩ slab-chain(start in G2)| counts.
+
+    ``start`` (B,) int32 head slabs of v's buckets in G2 (-1 = inactive work
+    item), ``us`` (B,) int32 sanitized u per item (indexes ``g1_boff`` /
+    ``g1_bcnt``; items whose u is garbage must carry start == -1).  Returns
+    (B,) int32 counts whose sum equals ``ref.count_edges_ref``'s total.
+    """
+    assert g1_keys.shape[1] == g2_keys.shape[1]
+    W = g1_keys.shape[1]
+    if W % lane_chunk:
+        raise ValueError(f"lane_chunk {lane_chunk} must divide {W}")
+    B = start.shape[0]
+    T = max(1, min(edges_per_tile, B))
+    pad = (-B) % T
+    if pad:
+        start = jnp.pad(start, (0, pad), constant_values=INVALID_SLAB)
+        us = jnp.pad(us, (0, pad))
+    Bp = start.shape[0]
+
+    col = pl.BlockSpec((T, 1), lambda i: (i, 0))
+    out = pl.pallas_call(
+        functools.partial(_count_kernel, slab_width=W,
+                          lane_chunk=lane_chunk),
+        grid=(Bp // T,),
+        in_specs=[col, col,
+                  pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=col,
+        out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
+        interpret=interpret,
+    )(start.astype(jnp.int32)[:, None], us.astype(jnp.int32)[:, None],
+      g2_keys.reshape(-1), g2_next, g1_keys.reshape(-1), g1_next,
+      g1_boff, g1_bcnt)
+    return out[:B, 0]
+
+
+# ----------------------------------------------------------------------------
+# standalone membership probe (host-materialised candidate rows)
+# ----------------------------------------------------------------------------
 
 def _probe_kernel(w_ref, rows_ref, keys_ref, o_ref):
     w = w_ref[...]                       # (Q, 1) uint32

@@ -1,7 +1,77 @@
-"""Pure-jnp oracle for the slab_intersect probe."""
+"""Pure-jnp oracles for the slab_intersect family.
+
+``count_edges_ref`` is the original ``algorithms.triangle.count_kernel``
+path kept verbatim as the bit-exact reference for the engine
+(``ops.count_edges``): a whole-batch ``lax.while_loop`` over every edge's
+SlabIterator in G2 with a Python-unrolled lane-chunk probe into G1.  It
+terminates only when the globally longest chain finishes and re-gathers
+every chunk's probe chain from scratch — exactly the costs the tiled
+Pallas kernel and the scan-fused jnp engine avoid — but it is the simplest
+correct rendering of Alg. 9 and the family's ground truth.
+
+``probe_hits_ref`` is the oracle for the standalone hash-probe kernel
+(``kernel.probe_hits_pallas``).
+"""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+
+from ...core.batch import edge_buckets, probe
+from ...core.hashing import INVALID_SLAB, SLAB_WIDTH, is_valid_vertex
+from ...core.slab_graph import SlabGraph
+
+
+def search_edges_ref(g: SlabGraph, us: jnp.ndarray, ws: jnp.ndarray,
+                     mask: jnp.ndarray) -> jnp.ndarray:
+    """Paper's ``SearchEdge`` batched: (u,w) ∈ G?  One hash-probe chain walk."""
+    b = edge_buckets(g, us, ws, mask)
+    found, _, _ = probe(g, b, ws, mask)
+    return found & mask
+
+
+def count_edges_ref(g1: SlabGraph, g2: SlabGraph, us: jnp.ndarray,
+                    vs: jnp.ndarray, emask: jnp.ndarray, *, max_bpv: int = 4,
+                    lane_chunk: int = 32) -> jnp.ndarray:
+    """Alg. 9: Σ_edges |N_G1(u) ∩ N_G2(v)| (w drawn from G2's adjacency).
+
+    Outer ``while_loop`` advances every edge's SlabIterator over v's chain in
+    G2 one slab per step; per step the 128 candidate lanes are probed against
+    G1 in ``lane_chunk`` slices to bound the transient gather footprint
+    (the VMEM tile of the Pallas version).
+    """
+    E = us.shape[0]
+    v = jnp.where(emask, vs, 0).astype(jnp.int32)
+    j = jnp.arange(max_bpv, dtype=jnp.int32)[None, :]
+    bmask = emask[:, None] & (j < g2.bucket_count[v][:, None])
+    cur0 = jnp.where(bmask, g2.bucket_offset[v][:, None] + j,
+                     INVALID_SLAB).reshape(-1)
+    u_flat = jnp.broadcast_to(us[:, None], (E, max_bpv)).reshape(-1)
+    m_flat = bmask.reshape(-1)
+
+    def cond(state):
+        cur, _ = state
+        return jnp.any(cur != INVALID_SLAB)
+
+    def body(state):
+        cur, total = state
+        active = cur != INVALID_SLAB
+        rows = g2.keys[jnp.maximum(cur, 0)]                    # (Eb,128)
+        wvalid = active[:, None] & is_valid_vertex(rows) & m_flat[:, None]
+        for c in range(0, SLAB_WIDTH, lane_chunk):             # unrolled
+            wchunk = rows[:, c:c + lane_chunk].reshape(-1)
+            mchunk = wvalid[:, c:c + lane_chunk].reshape(-1)
+            uu = jnp.broadcast_to(u_flat[:, None],
+                                  (u_flat.shape[0], lane_chunk)).reshape(-1)
+            found = search_edges_ref(g1, uu, wchunk, mchunk)
+            total = total + jnp.sum(found.astype(jnp.int32))
+        cur = jnp.where(active, g2.next_slab[jnp.maximum(cur, 0)],
+                        INVALID_SLAB)
+        return cur, total
+
+    _, total = jax.lax.while_loop(
+        cond, body, (cur0, jnp.asarray(0, jnp.int32)))
+    return total
 
 
 def probe_hits_ref(ws: jnp.ndarray, cand_rows: jnp.ndarray,

@@ -64,7 +64,7 @@ from ..distributed.sharded_graph import (SHARD_AXIS, ShardedSlabGraph,
                                          reassemble_global, route_exchange,
                                          routing_cap, routing_cap_blocks,
                                          shard_from_edges_host, shard_slice,
-                                         wcc_sharded)
+                                         triangles_sharded, wcc_sharded)
 from ..distributed.sharded_graph import place_on_mesh as _place_graph
 from ..kernels.slab_update.ops import (_copy_aliased, delete_edges_local,
                                        insert_edges_local,
@@ -1052,3 +1052,35 @@ def sharded_bfs_property(src: int, *, max_iters: int = 100000):
     return PropertySpec(
         name=f"bfs_{src}", init=_run, on_batch=_on_batch, refresh=_run,
         state_like=lambda n: jnp.zeros((n,), jnp.int32))
+
+
+def sharded_triangle_property(*, impl: str = "auto"):
+    """PropertySpec: live global triangle count over the sharded SYMMETRIC
+    view — per-shard intersect counts (``triangles_sharded``'s rotated
+    all-to-all decomposition) folded by one collective reduction.
+
+    Epochs that change the edge set recount; maintenance and no-op epochs
+    keep the scalar as-is (compaction perms cannot invalidate it).  The
+    count is a pure function of the current graph, so lazy replay collapses
+    to a single recount.  Bit-identical to ``triangles_static`` /
+    ``triangle_stream_property`` on the unsharded union.
+    """
+    from .properties import PropertySpec
+
+    def _run(store):
+        if store.symmetric is None:
+            raise ValueError("sharded triangle counting probes the "
+                             "symmetric view; build the store with "
+                             "with_symmetric=True")
+        return triangles_sharded(store.symmetric, impl=impl)
+
+    def _on_batch(store, count, batch):
+        if batch.maintenance or (batch.n_inserted == 0
+                                 and batch.n_deleted == 0):
+            return count
+        return _run(store)
+
+    return PropertySpec(
+        name="triangles", init=_run, on_batch=_on_batch, refresh=_run,
+        state_like=lambda n: jnp.zeros((), jnp.int32),
+        collapse_replay=True)

@@ -1,0 +1,241 @@
+"""Triangle plane: slab_intersect family identity + live stream property.
+
+Three layers of guarantees:
+
+* leaf — every ``impl`` of ``count_edges`` (pallas-interpret / jnp / oracle)
+  is count-identical to ``count_edges_ref`` on random hashed graphs
+  (hypothesis-driven, shim fallback included);
+* algorithm — ``triangles_static``'s grow-and-retry compaction and the
+  ``compact_edges`` overflow witness behave;
+* stream — ``triangle_stream_property`` (GraphStore) and
+  ``sharded_triangle_property`` (ShardedGraphStore) stay bit-identical to
+  the ``triangles_static`` oracle across ≥20 mixed insert/delete epochs
+  with maintenance compaction actually firing.
+"""
+import sys
+import pathlib
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+from _hypothesis_compat import given, settings, st
+
+from repro.algorithms import (triangle_stream_property, triangles_static,
+                              undirected_host)
+from repro.algorithms.triangle import _sym_bpv, compact_edges
+from repro.core.slab_graph import from_edges_host
+from repro.kernels.slab_intersect import count_edges, count_edges_ref
+from repro.stream.maintenance import MaintenancePolicy
+from repro.stream.properties import PropertyRegistry
+from repro.stream.store import GraphStore
+
+
+def _und_graph(n, src, dst, *, hashing=True):
+    s2 = np.concatenate([src, dst])
+    d2 = np.concatenate([dst, src])
+    return from_edges_host(n, s2, d2, hashing=hashing)
+
+
+def _brute(n, src, dst):
+    """Dense-matrix truth for LOOP-FREE undirected edge sets."""
+    A = np.zeros((n, n), bool)
+    A[src.astype(np.int64), dst.astype(np.int64)] = True
+    A = A | A.T
+    np.fill_diagonal(A, False)
+    Ai = A.astype(np.int64)
+    return int(np.trace(Ai @ Ai @ Ai) // 6)
+
+
+# ---------------------------------------------------------------------------
+# leaf: engine-vs-oracle identity for every impl
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([True, False]))
+def test_count_edges_impls_match_oracle(seed, hashing):
+    rng = np.random.default_rng(seed)
+    V = int(rng.integers(16, 80))
+    E = int(rng.integers(10, 400))
+    src = rng.integers(0, V, E).astype(np.uint32)
+    dst = rng.integers(0, V, E).astype(np.uint32)
+    g = _und_graph(V, src, dst, hashing=hashing)
+    mb = int(jnp.max(g.bucket_count))
+    us, vs = jnp.asarray(src), jnp.asarray(dst)
+    mask = jnp.asarray(rng.random(E) < 0.9)
+    want = int(count_edges_ref(g, g, us, vs, mask, max_bpv=mb))
+    for impl in ("pallas", "jnp", "oracle"):
+        got = int(count_edges(g, g, us, vs, mask, impl=impl, max_bpv=mb))
+        assert got == want, (impl, got, want)
+
+
+def test_count_edges_unknown_impl_raises():
+    g = _und_graph(8, np.array([0], np.uint32), np.array([1], np.uint32))
+    with pytest.raises(ValueError, match="unknown impl"):
+        count_edges(g, g, jnp.zeros(1, jnp.uint32), jnp.ones(1, jnp.uint32),
+                    jnp.ones(1, bool), impl="cuda")
+
+
+def test_count_edges_cross_graph_pair():
+    # G1 != G2: candidates enumerate from G2, membership probes hit G1 —
+    # max_bpv only needs to dominate G2's buckets.
+    rng = np.random.default_rng(3)
+    V = 32
+    s1 = rng.integers(0, V, 120).astype(np.uint32)
+    d1 = rng.integers(0, V, 120).astype(np.uint32)
+    s2 = rng.integers(0, V, 40).astype(np.uint32)
+    d2 = rng.integers(0, V, 40).astype(np.uint32)
+    g1 = _und_graph(V, s1, d1)
+    g2 = _und_graph(V, s2, d2, hashing=False)    # single-bucket G2
+    us, vs = jnp.asarray(s2), jnp.asarray(d2)
+    m = jnp.ones(40, bool)
+    want = int(count_edges_ref(g1, g2, us, vs, m, max_bpv=1))
+    for impl in ("pallas", "jnp"):
+        assert int(count_edges(g1, g2, us, vs, m, impl=impl,
+                               max_bpv=1)) == want
+
+
+# ---------------------------------------------------------------------------
+# algorithm: overflow witness + grow-and-retry, static vs brute
+# ---------------------------------------------------------------------------
+
+def test_compact_edges_overflow_witness():
+    rng = np.random.default_rng(5)
+    src = rng.integers(0, 32, 200).astype(np.uint32)
+    dst = rng.integers(0, 32, 200).astype(np.uint32)
+    g = _und_graph(32, src, dst)
+    live = int(jnp.sum(compact_edges(g, max_edges=4096)[2]))
+    es, ed, n, overflow = compact_edges(g, max_edges=16)
+    assert int(n) == 16
+    assert int(overflow) == live - 16
+    _, _, n2, ov2 = compact_edges(g, max_edges=live)
+    assert int(n2) == live and int(ov2) == 0
+
+
+def test_triangles_static_grows_past_small_cap():
+    rng = np.random.default_rng(6)
+    lo, hi = undirected_host(rng.integers(0, 40, 300).astype(np.uint32),
+                             rng.integers(0, 40, 300).astype(np.uint32))
+    keep = lo != hi
+    lo, hi = lo[keep], hi[keep]
+    g = _und_graph(40, lo, hi)
+    want = _brute(40, lo, hi)
+    # start the compaction ladder far below the live edge count
+    got = int(triangles_static(g, max_bpv=_sym_bpv(g), max_edges=32))
+    assert got == want
+
+
+def test_undirected_host_matches_set():
+    rng = np.random.default_rng(9)
+    src = rng.integers(0, 50, 400).astype(np.uint32)
+    dst = rng.integers(0, 50, 400).astype(np.uint32)
+    lo, hi = undirected_host(src, dst)
+    want = sorted({(min(int(a), int(b)), max(int(a), int(b)))
+                   for a, b in zip(src, dst)})
+    assert list(zip(lo.tolist(), hi.tolist())) == want
+
+
+# ---------------------------------------------------------------------------
+# stream: churn epochs vs the triangles_static oracle, maintenance firing
+# ---------------------------------------------------------------------------
+
+def _churn_script(rng, V, epochs, live):
+    """Yield (ins_src, ins_dst, del_src, del_dst) per epoch: insert-only,
+    delete-only and mixed epochs interleaved, with duplicate inserts,
+    missing deletes, reversed pairs and an occasional self-loop."""
+    for ep in range(epochs):
+        kind = ep % 4
+        i_s = i_d = d_s = d_d = None
+        if kind in (0, 2):                      # inserts (0: pure, 2: mixed)
+            i_s = rng.integers(0, V, 24).astype(np.uint32)
+            i_d = rng.integers(0, V, 24).astype(np.uint32)
+            if ep % 8 != 0:                     # mostly loop-free
+                i_d = np.where(i_s == i_d, (i_d + 1) % V, i_d)
+            i_d = i_d.astype(np.uint32)
+        if kind in (1, 2):                      # deletes (1: pure, 2: mixed)
+            pool = list(live)
+            picks = pool[:12] if pool else []
+            d_s = np.array([p[0] for p in picks] + [0], np.uint32)
+            d_d = np.array([p[1] for p in picks] + [0], np.uint32)
+        if kind == 3:                           # reversed-orientation inserts
+            pool = list(live)[:12]
+            if pool:
+                i_s = np.array([p[1] for p in pool], np.uint32)
+                i_d = np.array([p[0] for p in pool], np.uint32)
+            else:
+                i_s = np.array([1], np.uint32)
+                i_d = np.array([2], np.uint32)
+        yield i_s, i_d, d_s, d_d
+        if d_s is not None:
+            live -= set(zip(d_s.tolist(), d_d.tolist()))
+        if i_s is not None:
+            live |= set(zip(i_s.tolist(), i_d.tolist()))
+
+
+class TestTriangleStreamProperty:
+    EPOCHS = 24
+
+    def test_graphstore_churn_bit_identical(self):
+        rng = np.random.default_rng(21)
+        V = 48
+        src = rng.integers(0, V, 260).astype(np.uint32)
+        dst = rng.integers(0, V, 260).astype(np.uint32)
+        store = GraphStore.from_edges(
+            V, src, dst, hashing=True,
+            maintenance=MaintenancePolicy(tombstone_ratio=0.05, every=7))
+        reg = PropertyRegistry(store)
+        reg.register(triangle_stream_property())
+        assert int(reg.read("triangles")) == int(
+            triangles_static(store.symmetric,
+                             max_bpv=_sym_bpv(store.symmetric)))
+        live = set(zip(src.tolist(), dst.tolist()))
+        for i_s, i_d, d_s, d_d in _churn_script(rng, V, self.EPOCHS, live):
+            store.apply(ins_src=i_s, ins_dst=i_d, del_src=d_s, del_dst=d_d)
+            got = int(reg.read("triangles"))
+            want = int(triangles_static(store.symmetric,
+                                        max_bpv=_sym_bpv(store.symmetric)))
+            assert got == want, (store.version, got, want)
+        assert store.maintenance_count > 0     # compaction actually fired
+
+    def test_shardedstore_churn_bit_identical(self):
+        from repro.stream.sharded_store import (ShardedGraphStore,
+                                                sharded_triangle_property)
+        rng = np.random.default_rng(22)
+        V = 48
+        src = rng.integers(0, V, 260).astype(np.uint32)
+        dst = rng.integers(0, V, 260).astype(np.uint32)
+        store = ShardedGraphStore.from_edges(
+            V, 4, src, dst,
+            maintenance=MaintenancePolicy(tombstone_ratio=0.05, every=7))
+        mirror = GraphStore.from_edges(V, src, dst, hashing=True)
+        reg = PropertyRegistry(store)
+        reg.register(sharded_triangle_property())
+        live = set(zip(src.tolist(), dst.tolist()))
+        for i_s, i_d, d_s, d_d in _churn_script(rng, V, self.EPOCHS, live):
+            store.apply(ins_src=i_s, ins_dst=i_d, del_src=d_s, del_dst=d_d)
+            mirror.apply(ins_src=i_s, ins_dst=i_d, del_src=d_s, del_dst=d_d)
+            got = int(reg.read("triangles"))
+            want = int(triangles_static(mirror.symmetric,
+                                        max_bpv=_sym_bpv(mirror.symmetric)))
+            assert got == want, (store.version, got, want)
+        assert store.maintenance_count > 0
+
+    def test_refresh_matches_incremental_state(self):
+        """Registry-forced refresh lands on the same scalar the delta path
+        maintained (the re-anchor contract for a scalar property)."""
+        rng = np.random.default_rng(23)
+        V = 40
+        src = rng.integers(0, V, 200).astype(np.uint32)
+        dst = rng.integers(0, V, 200).astype(np.uint32)
+        keep = src != dst
+        store = GraphStore.from_edges(V, src[keep], dst[keep], hashing=True)
+        reg = PropertyRegistry(store)
+        reg.register(triangle_stream_property())
+        for _ in range(3):
+            s = rng.integers(0, V, 16).astype(np.uint32)
+            d = rng.integers(0, V, 16).astype(np.uint32)
+            d = np.where(s == d, (d + 1) % V, d).astype(np.uint32)
+            store.apply(ins_src=s, ins_dst=d)
+            maintained = int(reg.read("triangles"))
+            assert int(reg.refresh("triangles")) == maintained
