@@ -140,6 +140,47 @@ def storm(V, batches, maintenance):
 
 
 # ---------------------------------------------------------------------------
+# regime 2b: burn storm — latency-SLO violations trip the breaker without
+# a single failed request (obs.health burn-rate shedding, ISSUE 10)
+# ---------------------------------------------------------------------------
+
+def burn_storm(V, batches, maintenance):
+    """Injected LATENCY faults slow every apply far past the declared SLO:
+    nothing ever throws, so a failure-count breaker would never trip —
+    the HealthEngine's error-budget burn rate must do it instead."""
+    from repro.obs.health import HealthEngine, SLOTarget
+    store = _mk_store(V, 11, maintenance)
+    registry = PropertyRegistry(store)
+    registry.register(pagerank_stream_property())
+    engine = HealthEngine(
+        [SLOTarget("update", latency_s=0.005, objective=0.5)], window=16)
+    breaker = rz.CircuitBreaker(threshold=99, cooldown=3,
+                                burn_threshold=1.5)
+    pipe = RequestPipeline(store, registry, coalesce=False, breaker=breaker,
+                           health=engine, health_every=4)
+    requests = []
+    for i_s, i_d, d_s, d_d in batches * 2:
+        requests.append(UpdateBatch(ins_src=i_s, ins_dst=i_d,
+                                    del_src=d_s, del_dst=d_d))
+        requests.append(PropertyRead("pagerank"))
+    with faults.inject(rz.FaultSpec("apply.admitted", kind=faults.LATENCY,
+                                    every=1, times=0, delay_s=0.02)):
+        responses = pipe.run(requests)
+    shed = sum(1 for r in responses if r.payload.get("shed"))
+    ok = sum(1 for r in responses if r.kind != "error")
+    report = engine.report()
+    return {
+        "requests": len(requests),
+        "served_ok": ok,
+        "shed_groups": shed,
+        "breaker": breaker.status(),
+        "worst_burn": round(report.worst_burn, 2),
+        "update_slo_ms": 5.0,
+        "final_version": store.version,
+    }
+
+
+# ---------------------------------------------------------------------------
 # regime 3: crashes — kill at every apply phase, recover, converge
 # ---------------------------------------------------------------------------
 
@@ -200,6 +241,7 @@ def run(scale: str = "quick"):
         tmp = pathlib.Path(td)
         calm_r = calm(V, batches, tmp, maintenance)
         storm_r = storm(V, batches, maintenance)
+        burn_r = burn_storm(V, batches, maintenance)
         crash_r = crashes(V, batches, tmp, maintenance)
 
     assert calm_r["no_fault_bit_identical"], \
@@ -207,6 +249,9 @@ def run(scale: str = "quick"):
     assert all(r["bit_identical"] for r in crash_r), \
         f"crash recovery diverged: {crash_r}"
     assert storm_r["availability_pct"] > 50.0, storm_r
+    assert burn_r["breaker"]["burn_trips"] >= 1, \
+        f"burn-rate shedding never engaged: {burn_r}"
+    assert burn_r["shed_groups"] >= 1, burn_r
 
     row("chaos_calm_overhead", calm_r["epoch_ms_armed"] * 1e3,
         f"overhead={calm_r['overhead_x']}x;neutral="
@@ -215,6 +260,10 @@ def run(scale: str = "quick"):
         f"avail={storm_r['availability_pct']}%;"
         f"trips={storm_r['breaker']['trips']};"
         f"shed={storm_r['breaker']['shed']}")
+    row("chaos_burn_storm", 0.0,
+        f"burn={burn_r['worst_burn']};"
+        f"burn_trips={burn_r['breaker']['burn_trips']};"
+        f"shed={burn_r['shed_groups']}")
     for r in crash_r:
         row(f"chaos_recover_{r['site']}", r["recover_s"] * 1e6,
             f"replayed={r['replayed_epochs']};identical={r['bit_identical']}")
@@ -226,11 +275,15 @@ def run(scale: str = "quick"):
                   "ins_per_batch": n_ins, "del_per_batch": n_del},
         "calm": calm_r,
         "storm": storm_r,
+        "burn_storm": burn_r,
         "crashes": crash_r,
         "note": ("calm = plane armed, zero faults (neutrality + overhead); "
                  "storm = corrupt batches + breaker (availability); "
-                 "crashes = kill at each apply phase -> recover() -> "
-                 "re-feed, bit-identity asserted vs uninterrupted oracle."),
+                 "burn_storm = injected latency blows the update SLO "
+                 "without a single failure -> health burn rate trips the "
+                 "breaker; crashes = kill at each apply phase -> "
+                 "recover() -> re-feed, bit-identity asserted vs "
+                 "uninterrupted oracle."),
     }
     _OUT.write_text(json.dumps(payload, indent=2) + "\n")
     row("chaos_bench_json", 0.0, str(_OUT.name))

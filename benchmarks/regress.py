@@ -1,0 +1,381 @@
+"""Perf-regression gate — diff fresh bench runs against committed baselines.
+
+Every bench suite OVERWRITES its ``BENCH_*.json`` artifact at the repo
+root, so the committed file IS the baseline — until the suite runs.  The
+gate therefore works in two phases around a ``benchmarks.run --check``
+invocation:
+
+1. :func:`snapshot_baselines` parses the committed artifacts into memory
+   BEFORE any suite runs (the on-disk files are about to be clobbered);
+2. after the suites overwrite them, :func:`check` re-reads the fresh
+   artifacts and compares metric-by-metric against the snapshot.
+
+Comparison model — per-metric :class:`MetricSpec` with a direction and a
+multiplicative noise tolerance:
+
+* ``higher`` (throughputs, speedups): regressed when
+  ``fresh < baseline * floor`` — the floor is generous (default 0.45x)
+  because quick-scale runs on a shared CPU container are noisy;
+* ``lower`` (latencies): regressed when ``fresh > baseline * ceil``
+  (default 1.9x — deliberately under 2x, so a genuine 2x latency
+  regression ALWAYS fails the gate; the self-test pins that);
+* ``equal`` (deterministic invariants: bit-identity flags, agreed
+  triangle counts, capacity trajectories): any drift regresses.
+
+Percentile metrics additionally carry a ``samples`` guard: with fewer
+than ``min_samples`` requests behind a p95/p99 the comparison is SKIPPED
+(recorded, not failed) — a tail estimated from 4 samples is an anecdote,
+not a metric.  ``serve_bench`` records the per-class sample count next to
+every percentile for exactly this reason.
+
+Suites whose fresh run used a different ``scale``/``backend`` than the
+committed baseline are skipped whole — cross-scale ratios are not
+comparable.
+
+CLI::
+
+    python -m benchmarks.run --only serve --check   # gate a fresh run
+    python -m benchmarks.regress --selftest         # prove the gate trips
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import sys
+from typing import Any, Dict, List, Optional, Sequence
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+#: suite name (benchmarks.run key) -> committed artifact
+BENCH_FILES: Dict[str, str] = {
+    "serve": "BENCH_serve.json",
+    "sweep": "BENCH_sweep.json",
+    "update": "BENCH_update.json",
+    "churn": "BENCH_churn.json",
+    "triangle": "BENCH_triangle.json",
+    "sharded": "BENCH_sharded.json",
+    "chaos": "BENCH_chaos.json",
+}
+
+#: defaults: floor for higher-is-better, ceil for lower-is-better
+HIGHER_FLOOR = 0.45
+LOWER_CEIL = 1.9
+MIN_SAMPLES = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    """One gated metric.  ``path`` is dotted; a segment that hits a LIST
+    either selects the element whose ``name`` field matches the segment,
+    or ``*`` to assert over every element."""
+    suite: str
+    path: str
+    direction: str                     # "higher" | "lower" | "equal"
+    tolerance: Optional[float] = None  # ratio vs baseline (None = default)
+    samples_path: Optional[str] = None  # sibling sample-count guard
+    min_samples: int = MIN_SAMPLES
+
+    def limit(self) -> float:
+        if self.tolerance is not None:
+            return self.tolerance
+        return HIGHER_FLOOR if self.direction == "higher" else LOWER_CEIL
+
+
+SPECS: List[MetricSpec] = [
+    # -- serve: throughput ratios + per-class latency tails -----------------
+    MetricSpec("serve", "requests_per_sec.stream_insert_only", "higher"),
+    MetricSpec("serve", "requests_per_sec.stream_mixed_del25", "higher"),
+    MetricSpec("serve", "speedup_insert_only", "higher"),
+    MetricSpec("serve", "open_loop.achieved_req_per_s", "higher"),
+    MetricSpec("serve", "latency_ms.update.p95", "lower",
+               samples_path="latency_ms.update.samples"),
+    MetricSpec("serve", "latency_ms.property.p95", "lower",
+               samples_path="latency_ms.property.samples"),
+    MetricSpec("serve", "latency_ms.member.p95", "lower",
+               samples_path="latency_ms.member.samples"),
+    MetricSpec("serve", "latency_ms.update.mean", "lower",
+               samples_path="latency_ms.update.samples", min_samples=4),
+    # -- sweep: engine-vs-old-path speedups ---------------------------------
+    MetricSpec("sweep", "results.bfs.speedup", "higher"),
+    MetricSpec("sweep", "results.sssp.speedup", "higher"),
+    MetricSpec("sweep", "results.wcc.speedup", "higher"),
+    # -- update: stream-path speedups ---------------------------------------
+    MetricSpec("update", "results.mixed_stream_b2048.speedup", "higher"),
+    MetricSpec("update", "results.insert_stream_b8192.speedup", "higher"),
+    MetricSpec("update", "results.delete_stream_b8192.speedup", "higher"),
+    # -- churn: the maintenance plane's capacity bound is DETERMINISTIC -----
+    MetricSpec("churn", "results.capacity_slabs.maintained", "equal"),
+    MetricSpec("churn", "results.capacity_slabs.unmaintained", "equal"),
+    # -- triangle: count identity + dynamic-vs-recount ----------------------
+    MetricSpec("triangle", "results.engines_agree", "equal"),
+    MetricSpec("triangle", "results.triangles", "equal"),
+    MetricSpec("triangle", "results.incremental.delta_matches_recount",
+               "equal"),
+    MetricSpec("triangle", "results.incremental.speedup_vs_recount",
+               "higher"),
+    MetricSpec("triangle", "results.decremental.speedup_vs_recount",
+               "higher"),
+    # -- sharded ------------------------------------------------------------
+    MetricSpec("sharded", "results.store_apply_8shard_vs_1shard.speedup",
+               "higher"),
+    # -- chaos: resilience invariants + availability under storm ------------
+    MetricSpec("chaos", "calm.no_fault_bit_identical", "equal"),
+    MetricSpec("chaos", "crashes.*.bit_identical", "equal"),
+    MetricSpec("chaos", "storm.availability_pct", "higher",
+               tolerance=0.5),
+    # the black-box neutrality bound: flight-recorder overhead on the
+    # closed-loop mixed serve must stay measured-bounded (ISSUE 10)
+    MetricSpec("serve", "flight_overhead_x", "lower", tolerance=None),
+]
+
+
+# ---------------------------------------------------------------------------
+# metric resolution
+# ---------------------------------------------------------------------------
+
+class _Missing:
+    def __repr__(self):                              # pragma: no cover
+        return "<missing>"
+
+
+MISSING = _Missing()
+
+
+def resolve(doc: Any, path: str) -> Any:
+    """Walk ``doc`` along the dotted ``path`` (module doc for list
+    semantics).  Returns :data:`MISSING` when the path dead-ends; a ``*``
+    over a list returns the list of per-element resolutions."""
+    node = doc
+    parts = path.split(".")
+    for i, part in enumerate(parts):
+        if isinstance(node, dict):
+            if part not in node:
+                return MISSING
+            node = node[part]
+        elif isinstance(node, list):
+            if part == "*":
+                rest = ".".join(parts[i + 1:])
+                return [resolve(el, rest) if rest else el for el in node]
+            named = [el for el in node
+                     if isinstance(el, dict) and el.get("name") == part]
+            if not named:
+                return MISSING
+            node = named[0]
+        else:
+            return MISSING
+    return node
+
+
+# ---------------------------------------------------------------------------
+# comparison
+# ---------------------------------------------------------------------------
+
+def _compare_scalar(spec: MetricSpec, base: Any, fresh: Any) -> str:
+    if spec.direction == "equal":
+        return "ok" if base == fresh else "regressed"
+    try:
+        b, f = float(base), float(fresh)
+    except (TypeError, ValueError):
+        return "regressed"
+    if spec.direction == "higher":
+        return "ok" if f >= b * spec.limit() else "regressed"
+    return "ok" if f <= b * spec.limit() else "regressed"
+
+
+def compare_metric(spec: MetricSpec, baseline_doc: dict,
+                   fresh_doc: dict) -> Dict[str, Any]:
+    """One spec against one (baseline, fresh) suite pair; returns the
+    structured row the report prints."""
+    row: Dict[str, Any] = {"suite": spec.suite, "metric": spec.path,
+                           "direction": spec.direction,
+                           "limit": spec.limit()}
+    base = resolve(baseline_doc, spec.path)
+    fresh = resolve(fresh_doc, spec.path)
+    row["baseline"], row["fresh"] = \
+        (None if base is MISSING else base), \
+        (None if fresh is MISSING else fresh)
+    if base is MISSING:
+        # schema drift forward: the committed baseline predates this
+        # metric — record, don't fail (the next baseline refresh arms it)
+        row["status"] = "skipped_no_baseline"
+        return row
+    if fresh is MISSING:
+        # coverage regression: the fresh run LOST a gated metric
+        row["status"] = "regressed"
+        row["why"] = "metric missing from fresh run"
+        return row
+    if spec.samples_path is not None:
+        ns = [resolve(d, spec.samples_path)
+              for d in (baseline_doc, fresh_doc)]
+        counts = [0 if n is MISSING else int(n) for n in ns]
+        if min(counts) < spec.min_samples:
+            row["status"] = "skipped_low_samples"
+            row["samples"] = counts
+            return row
+    if isinstance(base, list) or isinstance(fresh, list):
+        if not isinstance(base, list) or not isinstance(fresh, list) \
+                or len(base) != len(fresh):
+            row["status"] = "regressed"
+            row["why"] = "element count drift"
+            return row
+        verdicts = [_compare_scalar(spec, b, f)
+                    for b, f in zip(base, fresh)]
+        row["status"] = ("ok" if all(v == "ok" for v in verdicts)
+                         else "regressed")
+        return row
+    row["status"] = _compare_scalar(spec, base, fresh)
+    return row
+
+
+# ---------------------------------------------------------------------------
+# the two-phase gate
+# ---------------------------------------------------------------------------
+
+def snapshot_baselines(suites: Optional[Sequence[str]] = None
+                       ) -> Dict[str, dict]:
+    """Parse the committed artifacts into memory (call BEFORE any suite
+    runs — they overwrite their files)."""
+    out: Dict[str, dict] = {}
+    for suite, fname in BENCH_FILES.items():
+        if suites is not None and suite not in suites:
+            continue
+        path = _ROOT / fname
+        try:
+            out[suite] = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError):
+            pass                       # no baseline yet: nothing to gate
+    return out
+
+
+def check(baselines: Dict[str, dict],
+          suites: Optional[Sequence[str]] = None,
+          fresh: Optional[Dict[str, dict]] = None) -> List[Dict[str, Any]]:
+    """Compare fresh artifacts (re-read from disk unless passed in)
+    against the snapshot; returns every comparison row."""
+    rows: List[Dict[str, Any]] = []
+    for spec in SPECS:
+        if suites is not None and spec.suite not in suites:
+            continue
+        base_doc = baselines.get(spec.suite)
+        if base_doc is None:
+            continue
+        if fresh is not None and spec.suite in fresh:
+            fresh_doc = fresh[spec.suite]
+        else:
+            try:
+                fresh_doc = json.loads(
+                    (_ROOT / BENCH_FILES[spec.suite]).read_text())
+            except (OSError, json.JSONDecodeError):
+                rows.append({"suite": spec.suite, "metric": spec.path,
+                             "status": "regressed",
+                             "why": "fresh artifact unreadable"})
+                continue
+        for key in ("scale", "backend"):
+            if base_doc.get(key) != fresh_doc.get(key):
+                rows.append({"suite": spec.suite, "metric": spec.path,
+                             "status": f"skipped_{key}_mismatch",
+                             "baseline": base_doc.get(key),
+                             "fresh": fresh_doc.get(key)})
+                break
+        else:
+            rows.append(compare_metric(spec, base_doc, fresh_doc))
+    return rows
+
+
+def report(rows: List[Dict[str, Any]], *, out=sys.stdout) -> bool:
+    """Print the gate verdict; True when no metric regressed."""
+    regressed = [r for r in rows if r["status"] == "regressed"]
+    for r in rows:
+        mark = {"ok": "PASS", "regressed": "FAIL"}.get(r["status"], "skip")
+        detail = ""
+        if r.get("baseline") is not None and r.get("fresh") is not None:
+            detail = f"  base={r['baseline']} fresh={r['fresh']}" \
+                     f" limit={r.get('limit', '')}x"
+        why = f"  ({r['why']})" if r.get("why") else ""
+        print(f"# regress {mark:4s} {r['suite']}.{r['metric']}"
+              f"{detail}{why}", file=out)
+    print(f"# regress: {len(rows)} gated, "
+          f"{sum(1 for r in rows if r['status'] == 'ok')} pass, "
+          f"{len(regressed)} regressed, "
+          f"{sum(1 for r in rows if r['status'].startswith('skip'))} "
+          f"skipped", file=out)
+    return not regressed
+
+
+# ---------------------------------------------------------------------------
+# self-test: the gate must trip on an injected 2x latency regression
+# ---------------------------------------------------------------------------
+
+def _inject_latency_regression(doc: dict, factor: float = 2.0) -> dict:
+    bad = json.loads(json.dumps(doc))
+    for cls in bad.get("latency_ms", {}).values():
+        for k in ("mean", "p50", "p95", "p99"):
+            if k in cls:
+                cls[k] = cls[k] * factor
+    return bad
+
+
+def selftest() -> bool:
+    """Three assertions: identity passes, a 2x latency regression fails,
+    and a halved throughput fails.  Runs on the COMMITTED serve baseline
+    (no suite executes)."""
+    baselines = snapshot_baselines(["serve"])
+    if "serve" not in baselines:
+        print("# regress selftest: no committed serve baseline — skipped")
+        return True
+    base = baselines["serve"]
+    ok = True
+    # identity: a run identical to its baseline must pass
+    rows = check(baselines, ["serve"], fresh={"serve": base})
+    if any(r["status"] == "regressed" for r in rows):
+        print("# regress selftest FAILED: identity comparison regressed")
+        report(rows)
+        ok = False
+    # 2x latency: must fail (when sample counts clear the guard) — pin on
+    # the mean gate, which arms at min_samples=4
+    bad = _inject_latency_regression(base, 2.0)
+    rows = check(baselines, ["serve"], fresh={"serve": bad})
+    lat = [r for r in rows if r["metric"].startswith("latency_ms.")
+           and r["status"] in ("regressed", "skipped_low_samples")]
+    if not any(r["status"] == "regressed" for r in lat):
+        print("# regress selftest FAILED: 2x latency regression "
+              "not caught")
+        report(rows)
+        ok = False
+    # halved throughput: must fail
+    slow = json.loads(json.dumps(base))
+    for k in slow["requests_per_sec"]:
+        slow["requests_per_sec"][k] *= 0.25
+    rows = check(baselines, ["serve"], fresh={"serve": slow})
+    if not any(r["status"] == "regressed"
+               and r["metric"].startswith("requests_per_sec")
+               for r in rows):
+        print("# regress selftest FAILED: 4x throughput drop not caught")
+        report(rows)
+        ok = False
+    if ok:
+        print("# regress selftest: identity passes, 2x latency + 4x "
+              "throughput regressions trip the gate")
+    return ok
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--selftest", action="store_true",
+                    help="prove the gate trips on injected regressions")
+    ap.add_argument("--suites", default=None,
+                    help="comma-separated subset (default: all committed)")
+    args = ap.parse_args(argv)
+    if args.selftest:
+        sys.exit(0 if selftest() else 1)
+    # no-run mode: compare the artifacts on disk against themselves is
+    # meaningless — standalone invocation only supports the selftest;
+    # the live gate is `python -m benchmarks.run --check`.
+    ap.error("use --selftest here, or `python -m benchmarks.run --check` "
+             "to gate a fresh run")
+
+
+if __name__ == "__main__":
+    main()

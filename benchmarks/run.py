@@ -20,6 +20,11 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write every suite's structured rows "
                          "(timing.take_rows) as one JSON artifact")
+    ap.add_argument("--check", action="store_true",
+                    help="perf-regression gate: snapshot the committed "
+                         "BENCH_*.json baselines before the suites "
+                         "overwrite them, diff the fresh artifacts after "
+                         "(benchmarks.regress), exit 1 on regression")
     args = ap.parse_args()
     scale = "full" if args.full else "quick"
 
@@ -44,6 +49,12 @@ def main() -> None:
     }
     from . import timing
     only = set(args.only.split(",")) if args.only else None
+    baselines = None
+    if args.check:
+        # MUST snapshot before any suite runs: each suite overwrites its
+        # committed artifact in place
+        from . import regress
+        baselines = regress.snapshot_baselines(only)
     print("name,us_per_call,derived")
     failed = []
     rows = {}
@@ -66,6 +77,12 @@ def main() -> None:
     if failed:
         print(f"# FAILED: {failed}")
         sys.exit(1)
+    if baselines is not None:
+        from . import regress
+        ran = [n for n in suites if not only or n in only]
+        if not regress.report(regress.check(baselines, ran)):
+            print("# PERF REGRESSION — see regress FAIL rows above")
+            sys.exit(1)
     print("# all benchmark suites completed")
 
 

@@ -26,6 +26,7 @@ from repro.algorithms import (bfs_incremental, bfs_stream_property,
 from repro.core import (ensure_capacity, from_edges_host, insert_edges,
                         query_edges)
 from repro.data.synth import rmat_edges
+from repro.obs import flight
 from repro.obs.metrics import Histogram
 from repro.stream import (GraphStore, MembershipQuery, PropertyRead,
                           PropertyRegistry, RequestPipeline, UpdateBatch)
@@ -200,6 +201,37 @@ def run(scale: str = "quick"):
         "stream_insert_only": round(n_req / t_stream, 2),
         "stream_mixed_del25": round(n_req / t_mixed, 2),
     }
+
+    # -- flight-recorder overhead guard (ISSUE 10): the black box is ON by
+    # default, so its cost must be measured, not assumed.  A/B the
+    # closed-loop mixed serve with the ring armed vs stripped in
+    # interleaved pairs (drift cancels), min-of-N each arm; extend with
+    # two more pairs before failing so one scheduler hiccup can't trip it.
+    on_s, off_s = [], []
+
+    def _overhead_pair():
+        flight.enable()
+        on_s.append(stream_loop(V, src, dst, mixed, slack=slack,
+                                edge_cap=edge_cap))
+        flight.disable()
+        try:
+            off_s.append(stream_loop(V, src, dst, mixed, slack=slack,
+                                     edge_cap=edge_cap))
+        finally:
+            flight.enable()          # the black box stays on
+
+    for _ in range(3):
+        _overhead_pair()
+    overhead_x = min(on_s) / min(off_s)
+    if overhead_x > 1.05:
+        for _ in range(2):
+            _overhead_pair()
+        overhead_x = min(on_s) / min(off_s)
+    row("serve_flight_overhead", min(on_s) * 1e6 / n_req,
+        f"overhead_x={overhead_x:.3f};pairs={len(on_s)}")
+    assert overhead_x < 1.05, (
+        f"flight recorder overhead {overhead_x:.3f}x exceeds the 5% "
+        f"always-on budget (on={min(on_s):.3f}s off={min(off_s):.3f}s)")
     row("serve_legacy", t_legacy * 1e6 / n_req,
         f"req_per_s={rps['legacy_insert_only']}")
     row("serve_stream", t_stream * 1e6 / n_req,
@@ -208,23 +240,34 @@ def run(scale: str = "quick"):
     row("serve_stream_mixed", t_mixed * 1e6 / n_req,
         f"req_per_s={rps['stream_mixed_del25']};delete_frac=0.25")
 
-    # open-loop latency: offer the mixed stream at 70% of the measured
-    # closed-loop throughput (stable queue, nonzero wait) — every kernel
-    # is already compiled by the closed-loop passes above
+    # open-loop latency: a DEDICATED longer request stream (the closed-loop
+    # mix serves too few requests per class for a p95/p99 to mean
+    # anything), offered at 70% of the measured closed-loop throughput
+    # (stable queue, nonzero wait) — every kernel is already compiled by
+    # the closed-loop passes above.  Sample counts are recorded next to
+    # every percentile; the regress gate skips tails with too few.
+    n_open = 150 if scale == "quick" else 250
+    open_workload = make_workload(
+        V, np.random.default_rng(7), n_requests=n_open, batch=batch,
+        delete_frac=0.25, present=present)
+    open_reqs = stream_requests(open_workload, with_deletes=True)
+    open_edge_cap = len(src) + (n_open // len(KINDS) + 1) * batch + 4096
     offered = max(0.5, 0.7 * rps["stream_mixed_del25"])
-    lat, achieved = open_loop(V, src, dst, mixed, slack=slack,
-                              edge_cap=edge_cap, rate=offered)
+    lat, achieved = open_loop(V, src, dst, open_reqs, slack=slack,
+                              edge_cap=open_edge_cap, rate=offered)
     latency_ms = {}
     for cls, h in sorted(lat.items()):
         s = h.summary()
         latency_ms[cls] = {
             "count": s["count"],
+            "samples": s["count"],
             "mean": round(1e3 * s["mean_s"], 2),
             "p50": round(1e3 * s["p50_s"], 2),
             "p95": round(1e3 * s["p95_s"], 2),
             "p99": round(1e3 * s["p99_s"], 2),
         }
         row(f"serve_openloop_{cls}", s["p50_s"] * 1e6,
+            f"n={s['count']};"
             f"p50_ms={latency_ms[cls]['p50']};p95_ms={latency_ms[cls]['p95']};"
             f"p99_ms={latency_ms[cls]['p99']}")
 
@@ -242,12 +285,16 @@ def run(scale: str = "quick"):
                  "adds 25% deletions, which only the subsystem serves."),
         "requests_per_sec": rps,
         "speedup_insert_only": round(t_legacy / t_stream, 3),
+        "flight_overhead_x": round(overhead_x, 3),
         "open_loop": {
+            "requests": n_open,
             "offered_req_per_s": round(offered, 2),
             "achieved_req_per_s": round(achieved, 2),
             "note": ("fixed-schedule arrivals at 70% of closed-loop mixed "
-                     "throughput; latency = completion - scheduled arrival "
-                     "(queue wait included), exact percentiles"),
+                     "throughput over a dedicated longer stream; latency = "
+                     "completion - scheduled arrival (queue wait "
+                     "included), exact percentiles with per-class sample "
+                     "counts"),
         },
         "latency_ms": latency_ms,
     }

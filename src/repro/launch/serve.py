@@ -113,6 +113,17 @@ def main():
                          "counter/histogram table on exit")
     ap.add_argument("--metrics-json", default=None, metavar="PATH",
                     help="also export the metrics registry summary as JSON")
+    ap.add_argument("--health", action="store_true",
+                    help="run the SLO burn-rate HealthEngine inside the "
+                         "pipeline and print live HealthReports")
+    ap.add_argument("--slo-update-ms", type=float, default=2000.0,
+                    help="--health: update-class latency SLO (objective "
+                         "0.9; CPU-container default is deliberately "
+                         "lenient)")
+    ap.add_argument("--evidence-dir", default=None, metavar="DIR",
+                    help="write a metrics + flight-recorder snapshot into "
+                         "DIR on exit — atexit AND SIGTERM, so an "
+                         "orchestrator kill still leaves evidence")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -123,6 +134,46 @@ def main():
         # table wants the span-adjacent histograms — both cost nothing
         # measurable next to the device work they time
         obs.enable()
+
+    if args.evidence_dir:
+        # the always-on flight recorder makes this worth wiring even
+        # without --metrics: whatever kills this process, the ring's last
+        # window and the metrics snapshot land on disk
+        import atexit
+        import json as _json
+        import pathlib
+        import signal
+        import sys
+        from ..obs import flight
+        evdir = pathlib.Path(args.evidence_dir)
+        _snapped = []
+
+        def _snap_evidence():
+            if _snapped:
+                return                # idempotent: atexit + SIGTERM race
+            _snapped.append(True)
+            try:
+                evdir.mkdir(parents=True, exist_ok=True)
+                summary = obs.get_registry().summary()
+                summary["kernels"] = obs.kernel_summary()
+                (evdir / "metrics.json").write_text(
+                    _json.dumps(summary, indent=2, default=str))
+                flight.export_chrome_trace(evdir / "flight_trace.json")
+                (evdir / "flight_events.json").write_text(_json.dumps(
+                    {"stats": flight.stats(),
+                     "events": flight.snapshot()}, indent=2))
+                print(f"[serve] evidence snapshot -> {evdir}")
+            except Exception as e:     # evidence must never mask the exit
+                print(f"[serve] evidence snapshot failed: {e}")
+
+        atexit.register(_snap_evidence)
+
+        def _on_sigterm(signum, frame):
+            # convert the kill into SystemExit so atexit (the snapshot
+            # above) still runs before the process dies
+            sys.exit(128 + signum)
+
+        signal.signal(signal.SIGTERM, _on_sigterm)
 
     from ..algorithms import (bfs_stream_property, pagerank_stream_property,
                               wcc_stream_property)
@@ -162,7 +213,17 @@ def main():
                           policy=args.policy)
         registry.register(wcc_stream_property(), policy=args.policy)
     print(f"[serve] boot: V={V} E={store.n_edges} shards={args.shards}")
-    pipeline = RequestPipeline(store, registry)
+    health = None
+    if args.health:
+        from ..obs.health import HealthEngine, SLOTarget
+        slo_s = args.slo_update_ms / 1e3
+        health = HealthEngine(
+            [SLOTarget("update", latency_s=slo_s, objective=0.9),
+             SLOTarget("property", latency_s=4 * slo_s, objective=0.9),
+             SLOTarget("member", latency_s=slo_s, objective=0.9)],
+            window=128)
+    pipeline = RequestPipeline(store, registry, health=health,
+                               health_every=8)
 
     # per-request-class latency histograms (standalone — always collected,
     # the flag-free Histogram class costs one record per request); the
@@ -179,6 +240,12 @@ def main():
         obs.observe(f"serve.latency.{cls}", resp.latency_s)
         print(f"[serve] req {i:03d} {kind:13s} {1e3 * resp.latency_s:8.1f}"
               f" ms  v{resp.version:<4d} {describe(resp, V)}")
+        if health is not None and (i + 1) % 10 == 0:
+            r = health.report()
+            print(f"[serve] health: "
+                  f"{'OK' if r.healthy else 'BURNING'} "
+                  f"worst_burn={r.worst_burn:.2f} "
+                  f"({r.worst_burn_class or '-'})")
     elapsed = time.time() - t0
     print(f"[serve] {args.requests} requests in {elapsed:.1f}s "
           f"({args.requests / elapsed:.2f} req/s), "
@@ -205,6 +272,10 @@ def main():
                 if store.last_maintenance else "never triggered")
         print(f"[serve] maintenance: {store.maintenance_count} passes, "
               f"last: {last}")
+    if health is not None:
+        report = health.report()
+        for line in report.render().splitlines():
+            print(f"[serve] {line}")
 
     if args.checkpoint:
         if args.shards > 1:

@@ -25,7 +25,8 @@ serving surface.
 """
 from __future__ import annotations
 
-from . import instrument, metrics, trace
+from . import flight, health, instrument, metrics, postmortem, trace
+from .health import HealthEngine, HealthReport, SLOTarget
 from .instrument import (kernel_stats, kernel_summary, pool_bytes,
                          reset_kernel_stats, timed_dispatch)
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry, emit_event,
@@ -42,7 +43,11 @@ def enable(*, tracing: bool = True, metric: bool = True) -> None:
 
 
 def disable() -> None:
-    """Back to the no-op fast path (collected data is kept until reset)."""
+    """Back to the no-op fast path (collected data is kept until reset).
+
+    The flight recorder (``obs.flight``) is deliberately NOT touched:
+    the black box stays on through enable/disable cycles — strip it
+    explicitly with ``flight.disable()`` (the neutrality A/B arm)."""
     trace.disable()
     metrics.disable()
 
@@ -52,18 +57,21 @@ def enabled() -> bool:
 
 
 def reset() -> None:
-    """Drop every collected span, metric, and kernel stat."""
+    """Drop every collected span, metric, kernel stat, and flight event
+    (the flight ring is emptied but stays armed — see ``disable``)."""
     trace.reset()
     get_registry().reset()
     reset_kernel_stats()
+    flight.reset()
 
 
 __all__ = [
-    "trace", "metrics", "instrument",
+    "trace", "metrics", "instrument", "flight", "health", "postmortem",
     "enable", "disable", "enabled", "reset",
     "Span", "span", "instant", "export_chrome_trace",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "get_registry",
     "inc", "observe", "set_gauge", "emit_event",
+    "SLOTarget", "HealthEngine", "HealthReport",
     "timed_dispatch", "pool_bytes", "kernel_stats", "kernel_summary",
     "reset_kernel_stats",
 ]

@@ -37,7 +37,7 @@ import threading
 import time
 from typing import Callable, Dict, Optional, Tuple
 
-from . import metrics, trace
+from . import flight, metrics, trace
 
 try:                                    # jax >= 0.4: real trace-state probe
     from jax.core import trace_state_clean as _trace_state_clean
@@ -138,13 +138,29 @@ def timed_dispatch(family: str, op: Optional[str] = None,
 
     def deco(fn):
         op_name = op or fn.__name__
+        # interned once per entry point: the flight-recorder hot path is
+        # a ring write keyed by this code, no dict lookup per dispatch
+        fl_code = flight.intern(f"kernel.{family}.{op_name}")
 
         @functools.wraps(fn)
         def wrapper(*args, **kwargs):
-            if not (metrics.enabled() or trace.enabled()):
+            if not (metrics.enabled() or trace.enabled()
+                    or flight.enabled()):
                 return fn(*args, **kwargs)
             if getattr(_tls, "depth", 0) > 0 or not _trace_state_clean():
                 return fn(*args, **kwargs)
+            if not (metrics.enabled() or trace.enabled()):
+                # flight-only (the always-on default): one ring write per
+                # outermost dispatch — no shape signature, no block on the
+                # result, no timing machinery
+                _tls.depth = 1
+                try:
+                    t0 = time.perf_counter_ns()
+                    out = fn(*args, **kwargs)
+                    flight.record(fl_code, time.perf_counter_ns() - t0)
+                finally:
+                    _tls.depth = 0
+                return out
             _tls.depth = 1
             try:
                 shape = _shape_sig(args)
@@ -153,7 +169,9 @@ def timed_dispatch(family: str, op: Optional[str] = None,
                     out = fn(*args, **kwargs)
                     for a in _arrays(out):
                         a.block_until_ready()
-                dt = (time.perf_counter_ns() - t0) / 1e9
+                dt_ns = time.perf_counter_ns() - t0
+                flight.record(fl_code, dt_ns)
+                dt = dt_ns / 1e9
                 if bytes_fn is not None:
                     nbytes = int(bytes_fn(args, kwargs, out))
                 else:

@@ -16,8 +16,12 @@ dispatch-identity tests in tests/test_obs.py hold the stores to that:
 pools are leaf-for-leaf identical with tracing on vs off.
 
 Thread model: one event list guarded by a lock, per-thread nesting depth.
-Timestamps are monotonic (``perf_counter_ns``) microseconds relative to
-the tracer's epoch, so ``ts`` never goes backwards within a thread.
+Timestamps are INTEGER ``perf_counter_ns`` nanoseconds relative to the
+tracer's epoch end-to-end (``ts_ns`` on every stored event) — no float
+accumulates, so a multi-hour serve trace keeps full sub-µs precision.
+The Chrome-facing ``ts`` (µs) is derived at read time by one division;
+division by a positive constant is monotone, so ``ts`` never goes
+backwards within a thread wherever ``ts_ns`` doesn't.
 """
 from __future__ import annotations
 
@@ -59,8 +63,15 @@ def reset() -> None:
         _EVENTS.clear()
 
 
+def _now_ns() -> int:
+    """The tracer clock: integer nanoseconds since the tracer epoch."""
+    return time.perf_counter_ns() - _T0_NS
+
+
 def _now_us() -> float:
-    return (time.perf_counter_ns() - _T0_NS) / 1e3
+    """Derived µs view of the integer clock (export convenience only —
+    nothing stores this)."""
+    return _now_ns() / 1e3
 
 
 def _depth() -> int:
@@ -112,7 +123,7 @@ class Span:
     def __enter__(self) -> "Span":
         self._tid = threading.get_ident()
         _tls.depth = _depth() + 1
-        _emit({"ph": "B", "name": self.name, "ts": _now_us(),
+        _emit({"ph": "B", "name": self.name, "ts_ns": _now_ns(),
                "pid": os.getpid(), "tid": self._tid,
                "args": dict(self.tags) if self.tags else {}})
         return self
@@ -125,7 +136,7 @@ class Span:
             except Exception:
                 pass               # sync is best-effort attribution only
         _tls.depth = _depth() - 1
-        _emit({"ph": "E", "name": self.name, "ts": _now_us(),
+        _emit({"ph": "E", "name": self.name, "ts_ns": _now_ns(),
                "pid": os.getpid(), "tid": self._tid,
                "args": dict(self.tags) if self.tags else {}})
         return False
@@ -143,14 +154,17 @@ def instant(name: str, **tags) -> None:
     """A zero-duration marker event (overflow witness, grow-retry, ...)."""
     if not _ON:
         return
-    _emit({"ph": "i", "name": name, "ts": _now_us(), "pid": os.getpid(),
+    _emit({"ph": "i", "name": name, "ts_ns": _now_ns(), "pid": os.getpid(),
            "tid": threading.get_ident(), "s": "t",
            "args": dict(tags) if tags else {}})
 
 
 def events() -> List[Dict[str, Any]]:
+    """Collected events with both clocks: the stored integer ``ts_ns``
+    and the Chrome-trace ``ts`` (µs) derived from it."""
     with _lock:
-        return list(_EVENTS)
+        raw = list(_EVENTS)
+    return [{**e, "ts": e["ts_ns"] / 1e3} for e in raw]
 
 
 def export_chrome_trace(path, *, counters: Optional[Dict[str, float]] = None

@@ -44,6 +44,9 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .. import obs
+from ..obs import flight as _flight
+
+_FL_FIRED = _flight.intern("fault.fired")
 
 CRASH = "crash"
 OOM = "oom"
@@ -140,6 +143,9 @@ class FaultPlan:
             obs.emit_event("fault_injected", site=site, kind=spec.kind,
                            hit=count)
             obs.inc(f"faults.{spec.kind}")
+            # the black box sees the injection itself (the site string is
+            # interned per-fire: faults are rare by construction)
+            _flight.record(_FL_FIRED, _flight.intern(f"site.{site}"), count)
             if spec.kind == CRASH:
                 raise InjectedCrash(site, count)
             if spec.kind == OOM:

@@ -32,8 +32,15 @@ from typing import Any, Callable, List, Optional
 import numpy as np
 
 from .. import obs
+from ..obs import flight as _flight
 from ..core.hashing import EMPTY_KEY, INVALID_VERTEX, TOMBSTONE_KEY
 from .faults import InjectedOOM
+
+_FL_TRIP = _flight.intern("breaker.open")
+_FL_CLOSE = _flight.intern("breaker.closed")
+_FL_HALF = _flight.intern("breaker.half_open")
+_FL_SHED = _flight.intern("breaker.shed")
+_FL_BURN_TRIP = _flight.intern("breaker.burn_trip")
 
 #: dst ids the update plane reserves (uint32 key sentinels)
 _SENTINELS = (int(TOMBSTONE_KEY), int(EMPTY_KEY), int(INVALID_VERTEX))
@@ -206,17 +213,29 @@ class CircuitBreaker:
     groups the breaker goes HALF_OPEN and admits one probe: success closes
     it, failure re-opens it (and restarts the cooldown).  Counting in shed
     groups instead of wall time keeps chaos tests deterministic.
+
+    ``burn_threshold`` (optional) arms SLO burn-rate shedding: feed
+    :meth:`note_health` with ``obs.health`` :class:`HealthReport`s and the
+    breaker trips OPEN when the worst error-budget burn rate reaches the
+    threshold — it stops waiting for ``threshold`` consecutive *failures*
+    and reacts to latency violations that never throw.  Burn trips reuse
+    the ordinary OPEN → HALF_OPEN → probe cycle.
     """
 
-    def __init__(self, *, threshold: int = 3, cooldown: int = 8):
+    def __init__(self, *, threshold: int = 3, cooldown: int = 8,
+                 burn_threshold: Optional[float] = None):
         assert threshold >= 1 and cooldown >= 1
+        assert burn_threshold is None or burn_threshold > 0.0
         self.threshold = int(threshold)
         self.cooldown = int(cooldown)
+        self.burn_threshold = burn_threshold
         self.state = CLOSED
         self.failures = 0          # consecutive failures while closed
         self.trips = 0
+        self.burn_trips = 0        # trips driven by note_health
         self.shed_count = 0        # total update groups shed
         self._shed_since_trip = 0
+        self.last_burn = 0.0
 
     def allow(self) -> bool:
         """May the next update group run?  (OPEN counts toward cooldown via
@@ -224,29 +243,55 @@ class CircuitBreaker:
         if self.state == OPEN and self._shed_since_trip >= self.cooldown:
             self.state = HALF_OPEN
             obs.emit_event("breaker_half_open")
+            _flight.record(_FL_HALF)
         return self.state != OPEN
 
     def shed(self) -> None:
         self.shed_count += 1
         self._shed_since_trip += 1
         obs.inc("breaker.shed")
+        _flight.record(_FL_SHED, self.shed_count)
 
     def record_success(self) -> None:
         if self.state != CLOSED:
             obs.emit_event("breaker_closed")
+            _flight.record(_FL_CLOSE)
         self.state = CLOSED
         self.failures = 0
 
     def record_failure(self) -> None:
         self.failures += 1
         if self.state == HALF_OPEN or self.failures >= self.threshold:
-            if self.state != OPEN:
-                self.trips += 1
-                obs.emit_event("breaker_open", failures=self.failures)
-                obs.inc("breaker.trips")
-            self.state = OPEN
-            self._shed_since_trip = 0
+            self._trip(obs_event="breaker_open")
+
+    def _trip(self, *, obs_event: str) -> None:
+        if self.state != OPEN:
+            self.trips += 1
+            obs.emit_event(obs_event, failures=self.failures)
+            obs.inc("breaker.trips")
+            _flight.record(_FL_TRIP, self.failures)
+        self.state = OPEN
+        self._shed_since_trip = 0
+
+    def note_health(self, report) -> bool:
+        """Fold one :class:`obs.health.HealthReport` in; returns True when
+        it tripped the breaker.  No-op unless ``burn_threshold`` is armed.
+        An OPEN breaker stays open (the cooldown cycle owns re-closing);
+        a burning window while HALF_OPEN re-opens like a failed probe."""
+        if self.burn_threshold is None:
+            return False
+        self.last_burn = float(report.worst_burn)
+        if self.state == OPEN or self.last_burn < self.burn_threshold:
+            return False
+        self.burn_trips += 1
+        _flight.record(_FL_BURN_TRIP, int(1e3 * self.last_burn))
+        obs.inc("breaker.burn_trips")
+        self._trip(obs_event="breaker_burn_open")
+        return True
 
     def status(self) -> dict:
         return {"state": self.state, "failures": self.failures,
-                "trips": self.trips, "shed": self.shed_count}
+                "trips": self.trips, "shed": self.shed_count,
+                "burn_trips": self.burn_trips,
+                "burn_threshold": self.burn_threshold,
+                "last_burn": self.last_burn}

@@ -34,11 +34,17 @@ import os
 import struct
 import zlib
 from pathlib import Path
-from typing import List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from .. import obs
+from ..obs import flight as _flight
+from ..obs import postmortem as _postmortem
+
+_FL_APPEND = _flight.intern("wal.append")
+_FL_ROLLBACK = _flight.intern("wal.rollback")
+_FL_RECOVER = _flight.intern("wal.recover")
 
 _MAGIC = 0x4C415731
 _HEAD = struct.Struct("<IQIIB3xI")      # magic, version, n_ins, n_del, has_w, crc
@@ -136,6 +142,7 @@ class WriteAheadLog:
             os.fsync(self._f.fileno())
         self._records_in_segment += 1
         self.appended += 1
+        _flight.record(_FL_APPEND, version, len(i_s), len(d_s))
         return (self._path, offset)
 
     def rollback(self, token: Tuple[Path, int]) -> None:
@@ -151,6 +158,7 @@ class WriteAheadLog:
         self._records_in_segment = max(0, self._records_in_segment - 1)
         self.appended = max(0, self.appended - 1)
         obs.inc("wal.rollbacks")
+        _flight.record(_FL_ROLLBACK, offset)
 
     def truncate(self, upto_version: int) -> int:
         """Drop whole segments wholly covered by a checkpoint at
@@ -264,6 +272,20 @@ class RecoveryReport:
     final_version: int           # store version after replay
     torn_tail: bool              # WAL ended in a torn record (crash point)
     anomalies: Tuple[str, ...] = ()
+    #: the crashed process's post-mortem bundle (``obs.postmortem``), read
+    #: back from ``<wal_dir>/postmortem/`` — None when the death was too
+    #: sudden to dump (or predates the black box)
+    postmortem: Optional[Dict[str, Any]] = None
+
+    @property
+    def crash_reason(self) -> Optional[str]:
+        """Why the crashed process died, per its own post-mortem."""
+        if not self.postmortem:
+            return None
+        exc = self.postmortem.get("exception") or {}
+        reason = self.postmortem.get("reason", "unknown")
+        site = exc.get("site")
+        return reason if site is None else f"{reason}@{site}"
 
 
 def recover(ckpt_dir, wal_dir, *, store_cls=None, specs=(), policies=None,
@@ -282,6 +304,10 @@ def recover(ckpt_dir, wal_dir, *, store_cls=None, specs=(), policies=None,
     if store_cls is None:
         from ..stream.store import GraphStore
         store_cls = GraphStore
+    # read the crashed process's own account of why it died FIRST, so the
+    # recovery log can lead with it (archived after one read — one
+    # incident, one report)
+    pm = _postmortem.consume_latest(Path(wal_dir) / "postmortem")
     with obs.span("resilience.recover"):
         store, registry = store_cls.restore(
             ckpt_dir, step=step, specs=specs, policies=policies,
@@ -307,7 +333,11 @@ def recover(ckpt_dir, wal_dir, *, store_cls=None, specs=(), policies=None,
                             replayed=replayed,
                             final_version=store.version,
                             torn_tail=torn,
-                            anomalies=tuple(anomalies))
+                            anomalies=tuple(anomalies),
+                            postmortem=pm)
     obs.emit_event("recovered", checkpoint_version=ckpt_version,
-                   replayed=replayed, final_version=store.version)
+                   replayed=replayed, final_version=store.version,
+                   crash_reason=report.crash_reason)
+    _flight.record(_FL_RECOVER, store.version, replayed,
+                   0 if pm is None else 1)
     return store, registry, report

@@ -32,11 +32,19 @@ from typing import Any, Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from .. import obs
+from ..obs import flight as _flight
+from ..obs import postmortem as _postmortem
 from ..resilience.faults import InjectedCrash
 from ..resilience.guard import PIPELINE_RECOVERABLE, CircuitBreaker, \
     QuarantinedBatch
 from .properties import PropertyRegistry
 from .store import GraphStore
+
+# one interned flight code per request class: the black box records every
+# served request (class, latency ns, group size) even with metrics off
+_FL_REQ = {k: _flight.intern(f"pipeline.{k}")
+           for k in ("update", "member", "neighbors", "property",
+                     "error", "shed")}
 
 
 # ---------------------------------------------------------------------------
@@ -145,7 +153,8 @@ class RequestPipeline:
     def __init__(self, store: GraphStore,
                  registry: Optional[PropertyRegistry] = None, *,
                  coalesce: bool = True, batch_membership: bool = True,
-                 breaker: Optional[CircuitBreaker] = None):
+                 breaker: Optional[CircuitBreaker] = None,
+                 health=None, health_every: int = 16):
         self.store = store
         self.registry = registry
         self.coalesce = coalesce
@@ -153,6 +162,15 @@ class RequestPipeline:
         # optional overload valve: updates shed while open, reads degrade
         # to version-tagged stale serves (None = fail per-request only)
         self.breaker = breaker
+        # optional obs.health.HealthEngine: every served request feeds it,
+        # and every ``health_every`` dispatches it evaluates a report —
+        # fed to the breaker (burn-rate shedding) when one is armed
+        self.health = health
+        self.health_every = int(health_every)
+        self._since_health = 0
+        if breaker is not None:
+            # post-mortem bundles carry the breaker state at death
+            _postmortem.register_breaker(breaker)
 
     # -- group runners ------------------------------------------------------
     def _apply_updates(self, group: List[UpdateBatch]) -> Dict[str, Any]:
@@ -176,9 +194,24 @@ class RequestPipeline:
         return out
 
     # -- telemetry ----------------------------------------------------------
-    def _observe(self, kind: str, dt: float, group: int = 1) -> None:
-        """Per-request-class latency histogram + coalescing accounting
-        (metrics-on path only — the off path pays one branch here)."""
+    def _observe(self, kind: str, dt: float, group: int = 1, *,
+                 cls: Optional[str] = None, ok: bool = True) -> None:
+        """Per-request-class latency histogram + coalescing accounting.
+        The flight recorder and the health engine are fed FIRST — both run
+        with metrics off (``cls`` names the SLO class when ``kind`` is an
+        outcome like ``error``/``shed``)."""
+        _flight.record(_FL_REQ[kind], int(1e9 * dt), group)
+        if self.health is not None:
+            self.health.observe_request(cls or kind, dt, ok=ok)
+            self._since_health += 1
+            if self._since_health >= self.health_every:
+                self._since_health = 0
+                self.health.observe_store(self.store)
+                if self.registry is not None:
+                    self.health.observe_staleness(self.registry)
+                report = self.health.report()
+                if self.breaker is not None:
+                    self.breaker.note_health(report)
         if not obs.metrics.enabled():
             return
         obs.observe(f"pipeline.latency.{kind}", dt)
@@ -211,7 +244,7 @@ class RequestPipeline:
                 if self.breaker is not None and not self.breaker.allow():
                     self.breaker.shed()
                     dt = time.perf_counter() - t0
-                    self._observe("shed", dt, j - i)
+                    self._observe("shed", dt, j - i, cls="update", ok=False)
                     payload = {"error": "circuit_open", "shed": True,
                                "breaker": self.breaker.status()}
                     for k in range(i, j):
@@ -228,7 +261,8 @@ class RequestPipeline:
                     if self.breaker is not None:
                         self.breaker.record_failure()
                     dt = time.perf_counter() - t0
-                    self._observe("error", dt, j - i)
+                    self._observe("error", dt, j - i, cls="update",
+                                  ok=False)
                     resp = self._fail("update", e, dt)
                     for k in range(i, j):
                         responses[k] = resp

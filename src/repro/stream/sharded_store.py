@@ -72,8 +72,9 @@ from ..kernels.slab_update.ops import (_copy_aliased, delete_edges_local,
 from ..resilience import faults
 from ..resilience.guard import run_with_retries, validate_batch
 from .store import (ALL_VIEWS, FORWARD, SYMMETRIC, TRANSPOSE, AppliedBatch,
-                    VersionedStoreBase, _pad_f32, _pad_u32, _pow2,
-                    canonical_batch, dedup_pairs)
+                    VersionedStoreBase, _FL_ADMIT, _FL_CLOSE, _FL_DISPATCH,
+                    _FL_GROW, _FL_POST_WAL, _flight, _pad_f32, _pad_u32,
+                    _pow2, canonical_batch, dedup_pairs)
 
 
 # ----------------------------------------------------------------------------
@@ -529,6 +530,11 @@ class ShardedGraphStore(VersionedStoreBase):
         try:
             batch = self._apply_inner(t0, epoch_span, ins_src, ins_dst,
                                       ins_w, del_src, del_dst)
+        except BaseException as e:
+            # the black box: dump a post-mortem bundle beside the WAL at
+            # the moment of death (never raises, skips recoverable kinds)
+            self._dump_postmortem(e)
+            raise
         finally:
             epoch_span.__exit__(None, None, None)
 
@@ -544,6 +550,7 @@ class ShardedGraphStore(VersionedStoreBase):
                 ins_src, ins_dst, ins_w, del_src, del_dst,
                 weighted=self.weighted)
         faults.fault_point("apply.admitted", version=self.version)
+        _flight.record(_FL_ADMIT, self.version, len(i_s), len(d_s))
         roles = tuple(v for v in ALL_VIEWS if v in self._views)
         S = self.n_shards
         mode = self._mode()
@@ -627,6 +634,8 @@ class ShardedGraphStore(VersionedStoreBase):
                                            before=cap_before,
                                            after=cap_after)
                             obs.inc("store.capacity_grow")
+                            _flight.record(_FL_GROW, self.version,
+                                           cap_after)
                     self._last_reserve[name] = reserve
 
                 for name in roles:
@@ -650,6 +659,8 @@ class ShardedGraphStore(VersionedStoreBase):
         # -- durability: journal the canonical batch, THEN dispatch ---------
         wal_token = self._wal_append(i_s, i_d, i_w, d_s, d_d)
         faults.fault_point("apply.post_wal", version=self.version)
+        _flight.record(_FL_POST_WAL, self.version,
+                       0 if wal_token is None else 1)
 
         try:
             # -- single donated route+mutate dispatch over every live view --
@@ -692,6 +703,8 @@ class ShardedGraphStore(VersionedStoreBase):
                         self._high_water[name] = (self._high(name)
                                                   + per_view[name])
             faults.fault_point("apply.pre_close", version=self.version)
+            _flight.record(_FL_DISPATCH, self.version,
+                           n_inserted, n_deleted)
 
             # -- version bump + notification (epoch still open) -------------
             with obs.span("store.apply.notify"):
@@ -710,6 +723,8 @@ class ShardedGraphStore(VersionedStoreBase):
                         self._views[name] = dataclasses.replace(
                             sg, graphs=update_slab_pointers(sg.graphs))
             faults.fault_point("apply.post_close", version=self.version)
+            _flight.record(_FL_CLOSE, batch.version,
+                           n_inserted, n_deleted)
         except faults.InjectedCrash:
             raise              # a simulated kill: the WAL record survives
         except BaseException:

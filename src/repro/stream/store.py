@@ -55,6 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import obs
+from ..obs import flight as _flight
 from ..core.batch import query_edges, update_views
 from ..core.hashing import INVALID_VERTEX
 from ..core.slab_graph import (SlabGraph, empty, ensure_capacity,
@@ -69,6 +70,16 @@ FORWARD = "forward"
 TRANSPOSE = "transpose"
 SYMMETRIC = "symmetric"
 ALL_VIEWS = (FORWARD, TRANSPOSE, SYMMETRIC)
+
+# Flight-recorder codes (interned once at import): each apply phase writes
+# one ring event even when tracing/metrics are off, so a post-mortem's
+# last-N window shows exactly which phase an epoch last cleared.
+_FL_ADMIT = _flight.intern("store.apply.admitted")
+_FL_GROW = _flight.intern("store.capacity_grow")
+_FL_POST_WAL = _flight.intern("store.apply.post_wal")
+_FL_DISPATCH = _flight.intern("store.apply.dispatch")
+_FL_CLOSE = _flight.intern("store.apply.close")
+_FL_MAINTAIN = _flight.intern("store.maintain")
 
 
 # Batch lane counts quantize through the same pow2 ladder as pool growth.
@@ -243,6 +254,14 @@ class VersionedStoreBase:
             from ..resilience.invariants import InvariantViolationError
             raise InvariantViolationError(report)
 
+    def _dump_postmortem(self, exc: BaseException) -> None:
+        """Crash hook (apply's ``except BaseException``): write the
+        black-box post-mortem bundle beside the WAL.  Best-effort and
+        silent on the pipeline-recoverable classes — the exception itself
+        still propagates to the caller either way."""
+        from ..obs import postmortem
+        postmortem.on_apply_failure(self, exc)
+
     def _resilience_meta(self) -> dict:
         """Host-side counters a checkpoint must carry so a recovered
         store's maintenance triggers replay exactly like the crashed
@@ -413,6 +432,8 @@ class VersionedStoreBase:
                 self.maintenance_events[-self._log_capacity:]
         obs.emit_event("maintenance", **record.as_event())
         obs.inc(f"store.maintain.{action}")
+        _flight.record(_FL_MAINTAIN, batch.version,
+                       record.slabs_reclaimed, record.capacity_after)
         return record
 
 
@@ -526,6 +547,7 @@ class GraphStore(VersionedStoreBase):
                     ins_src, ins_dst, ins_w, del_src, del_dst,
                     weighted=self.weighted)
             faults.fault_point("apply.admitted", version=self.version)
+            _flight.record(_FL_ADMIT, self.version, len(i_s), len(d_s))
 
             roles = tuple(v for v in ALL_VIEWS if v in self._views)
 
@@ -543,6 +565,7 @@ class GraphStore(VersionedStoreBase):
                             self._views[name] = ensure_capacity(
                                 self._views[name], need)
                             self._last_reserve[name] = need
+                        _flight.record(_FL_GROW, self.version, p)
 
                     run_with_retries(_grow, budget=self.retry,
                                      site="store.capacity_grow")
@@ -564,6 +587,8 @@ class GraphStore(VersionedStoreBase):
             # -- durability: journal the canonical batch, THEN dispatch -----
             wal_token = self._wal_append(i_s, i_d, i_w, d_s, d_d)
             faults.fault_point("apply.post_wal", version=self.version)
+            _flight.record(_FL_POST_WAL, self.version,
+                           0 if wal_token is None else 1)
 
             try:
                 # -- single stacked engine dispatch over every live view ----
@@ -583,6 +608,8 @@ class GraphStore(VersionedStoreBase):
                             n_inserted = int(jnp.sum(
                                 ins_mask.astype(jnp.int32)))
                 faults.fault_point("apply.pre_close", version=self.version)
+                _flight.record(_FL_DISPATCH, self.version,
+                               n_inserted, n_deleted)
 
                 # -- version bump + notification (epoch still open) ---------
                 with obs.span("store.apply.notify"):
@@ -598,6 +625,8 @@ class GraphStore(VersionedStoreBase):
                     for name, g in self._views.items():
                         self._views[name] = update_slab_pointers(g)
                 faults.fault_point("apply.post_close", version=self.version)
+                _flight.record(_FL_CLOSE, batch.version,
+                               n_inserted, n_deleted)
             except faults.InjectedCrash:
                 raise          # a simulated kill: the WAL record survives
             except BaseException:
@@ -609,6 +638,11 @@ class GraphStore(VersionedStoreBase):
                 raise
 
             epoch_span.annotate(inserted=n_inserted, deleted=n_deleted)
+        except BaseException as e:
+            # the black box: dump a post-mortem bundle beside the WAL at
+            # the moment of death (never raises, skips recoverable kinds)
+            self._dump_postmortem(e)
+            raise
         finally:
             epoch_span.__exit__(None, None, None)
         if obs.metrics.enabled():

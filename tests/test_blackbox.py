@@ -1,0 +1,631 @@
+"""Black-box telemetry tests (obs.flight / obs.postmortem / obs.health /
+benchmarks.regress, DESIGN.md §13).
+
+Coverage planes:
+
+* flight units — intern stability, record/snapshot ordering, ring wrap
+  accounting, reset-vs-configure semantics, Chrome-trace export schema;
+* health units — SLO budgets, windowed burn rates, error-as-violation,
+  untargeted classes, pool/staleness feeds, report rendering;
+* burn-rate shedding — ``CircuitBreaker.note_health`` trips on a burning
+  report and stays quiet without a threshold / while already OPEN;
+* POST-MORTEM (the acceptance contract) — an injected kill at EVERY
+  instrumented apply phase, for both ``GraphStore`` and
+  ``ShardedGraphStore``, leaves a parseable bundle beside the WAL that
+  names the fault site and carries the flight tail; ``resilience.recover``
+  surfaces it (``RecoveryReport.crash_reason``) and archives it so one
+  incident is reported once;
+* FLIGHT NEUTRALITY — pools are leaf-for-leaf bit-identical with the
+  always-on flight recorder armed vs stripped, for both stores, across
+  churn epochs including maintenance passes;
+* regress units — dotted-path resolution, direction semantics, the
+  samples guard, scale-mismatch skips, and the injected-2x-latency /
+  lost-metric trips the CI gate relies on;
+* trace clock — integer ``perf_counter_ns`` timestamps keep event
+  ordering exact at multi-hour magnitudes.
+"""
+import json
+import pathlib
+import sys
+import time
+import types
+
+import numpy as np
+import pytest
+import jax
+
+from repro import obs
+from repro import resilience as rz
+from repro.obs import flight, postmortem
+from repro.obs.health import HealthEngine, HealthReport, SLOTarget
+from repro.resilience import faults
+from repro.algorithms import pagerank_stream_property
+from repro.stream import (GraphStore, MaintenancePolicy, PropertyRegistry,
+                          RequestPipeline, ShardedGraphStore)
+from repro.stream.requests import (MembershipQuery, PropertyRead,
+                                   UpdateBatch)
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+if str(ROOT) not in sys.path:                 # benchmarks.* is a root pkg
+    sys.path.insert(0, str(ROOT))
+
+from benchmarks import regress                # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _clean_planes():
+    """Every test starts with empty rings, no fault plan, no breakers —
+    and ends with the flight recorder back in its always-on default."""
+    obs.disable()
+    obs.reset()
+    faults.reset()
+    postmortem.reset()
+    flight.enable()
+    yield
+    obs.disable()
+    obs.reset()
+    faults.reset()
+    postmortem.reset()
+    flight.enable()
+
+
+# ============================================================================
+# flight-recorder units
+# ============================================================================
+
+class TestFlight:
+    def test_intern_is_stable_and_idempotent(self):
+        a = flight.intern("test.alpha")
+        b = flight.intern("test.beta")
+        assert a != b
+        assert flight.intern("test.alpha") == a     # same code forever
+        assert flight.name_of(a) == "test.alpha"
+        obs.reset()                                  # reset drops events...
+        assert flight.intern("test.alpha") == a     # ...never codes
+
+    def test_record_snapshot_roundtrip_oldest_first(self):
+        code = flight.intern("test.rt")
+        for k in range(5):
+            flight.record(code, k, 10 * k, 100 * k)
+        evs = [e for e in flight.snapshot() if e["event"] == "test.rt"]
+        assert [e["a"] for e in evs] == [0, 1, 2, 3, 4]
+        assert [e["b"] for e in evs] == [0, 10, 20, 30, 40]
+        assert evs[0]["ts_ns"] <= evs[-1]["ts_ns"]
+
+    def test_snapshot_last_keeps_newest(self):
+        code = flight.intern("test.last")
+        for k in range(8):
+            flight.record(code, k)
+        evs = flight.snapshot(last=3)
+        assert len(evs) == 3 and evs[-1]["a"] == 7
+
+    def test_ring_wrap_drops_oldest_and_accounts(self):
+        code = flight.intern("test.wrap")
+        try:
+            flight.configure(8)
+            for k in range(13):
+                flight.record(code, k)
+            st = flight.stats()
+            assert st["capacity"] == 8
+            assert st["recorded"] == 13
+            assert st["in_window"] == 8
+            assert st["dropped"] == 5
+            evs = flight.snapshot()
+            assert [e["a"] for e in evs] == list(range(5, 13))
+        finally:
+            flight.configure()                       # restore default ring
+
+    def test_disable_strips_enable_rearms(self):
+        code = flight.intern("test.onoff")
+        flight.disable()
+        flight.record(code, 1)
+        assert flight.stats()["recorded"] == 0
+        flight.enable()
+        flight.record(code, 2)
+        assert flight.snapshot()[-1]["a"] == 2
+
+    def test_note_interns_once_and_records(self):
+        flight.note("test.note", 7)
+        flight.note("test.note", 8)
+        evs = [e for e in flight.snapshot() if e["event"] == "test.note"]
+        assert [e["a"] for e in evs] == [7, 8]
+
+    def test_chrome_export_schema(self, tmp_path):
+        flight.note("test.export", 1, 2, 3)
+        path = flight.export_chrome_trace(tmp_path / "flight.json")
+        doc = json.loads(pathlib.Path(path).read_text())
+        assert doc["displayTimeUnit"] == "ms"
+        assert doc["flightStats"]["recorded"] >= 1
+        evs = doc["traceEvents"]
+        assert evs and all(e["ph"] == "i" for e in evs)
+        mine = [e for e in evs if e["name"] == "test.export"]
+        assert mine and mine[0]["args"] == {"a": 1, "b": 2, "c": 3}
+        tss = [e["ts"] for e in evs]
+        assert tss == sorted(tss) and tss[0] == 0.0
+
+    def test_obs_disable_leaves_flight_armed(self):
+        """The whole point of the black box: obs.disable() strips tracing
+        and metrics, NOT the flight recorder."""
+        obs.enable()
+        obs.disable()
+        assert flight.enabled()
+
+
+# ============================================================================
+# health-engine units
+# ============================================================================
+
+class TestHealth:
+    def test_slo_budget(self):
+        t = SLOTarget("update", latency_s=0.01, objective=0.9)
+        assert t.budget == pytest.approx(0.1)
+        with pytest.raises(AssertionError):
+            SLOTarget("x", latency_s=0.01, objective=1.0)
+
+    def test_burn_rate_over_window(self):
+        eng = HealthEngine([SLOTarget("update", 0.010, objective=0.9)],
+                           window=32)
+        for k in range(10):                      # 5 of 10 blow the target
+            eng.observe_request("update", 0.001 if k % 2 else 0.020)
+        r = eng.report()
+        assert not r.healthy
+        assert r.worst_burn == pytest.approx(5.0)        # 0.5 / 0.1
+        assert r.worst_burn_class == "update"
+        (c,) = r.classes
+        assert c.samples == 10 and c.violations == 5
+
+    def test_error_counts_as_violation_even_when_fast(self):
+        eng = HealthEngine([SLOTarget("update", 10.0, objective=0.5)])
+        eng.observe_request("update", 0.001, ok=False)
+        assert eng.report().worst_burn == pytest.approx(2.0)
+
+    def test_untargeted_class_tracks_latency_only(self):
+        eng = HealthEngine([])
+        eng.observe_request("member", 5.0)
+        r = eng.report()
+        assert r.healthy and r.worst_burn == 0.0
+        assert r.classes[0].burn_rate is None
+        assert r.classes[0].max_s == pytest.approx(5.0)
+
+    def test_window_slides_violations_out(self):
+        eng = HealthEngine([SLOTarget("update", 0.010, objective=0.9)],
+                           window=4)
+        for _ in range(4):
+            eng.observe_request("update", 0.020)      # all violate
+        assert not eng.report().healthy
+        for _ in range(4):
+            eng.observe_request("update", 0.001)      # push them out
+        assert eng.report().healthy
+
+    def test_store_and_staleness_feeds(self):
+        rng = np.random.default_rng(3)
+        store = GraphStore.from_edges(
+            64, rng.integers(0, 64, 300).astype(np.uint32),
+            rng.integers(0, 64, 300).astype(np.uint32))
+        registry = PropertyRegistry(store)
+        registry.register(pagerank_stream_property(), policy="lazy")
+        eng = HealthEngine([])
+        eng.observe_store(store)
+        store.apply(ins_src=[1], ins_dst=[2])         # registry now behind
+        stale = eng.observe_staleness(registry)
+        r = eng.report()
+        assert "tombstone_ratio" in r.pool and "occupancy" in r.pool
+        assert stale.get("pagerank", 0) >= 1
+        assert r.staleness == stale
+
+    def test_render_and_as_dict(self):
+        eng = HealthEngine([SLOTarget("update", 0.010, objective=0.9)])
+        eng.observe_request("update", 0.020)
+        r = eng.report()
+        text = r.render()
+        assert "BURNING" in text and "update" in text
+        d = r.as_dict()
+        assert d["healthy"] is False
+        assert d["classes"][0]["request_class"] == "update"
+        json.dumps(d)                                  # JSON-serializable
+
+    def test_reports_land_in_flight_ring(self):
+        eng = HealthEngine([SLOTarget("update", 0.010, objective=0.9)])
+        eng.observe_request("update", 0.020)
+        eng.report()
+        names = {e["event"] for e in flight.snapshot()}
+        assert "health.report" in names
+        assert "health.burn_alert" in names
+
+
+# ============================================================================
+# burn-rate shedding (CircuitBreaker.note_health)
+# ============================================================================
+
+class TestBreakerBurn:
+    def _report(self, burn):
+        return types.SimpleNamespace(worst_burn=burn)
+
+    def test_burn_trips_breaker(self):
+        br = rz.CircuitBreaker(threshold=99, cooldown=4, burn_threshold=1.5)
+        assert not br.note_health(self._report(1.0))
+        assert br.allow()
+        assert br.note_health(self._report(2.5))
+        st = br.status()
+        assert st["state"] == "open" and st["burn_trips"] == 1
+        assert st["last_burn"] == pytest.approx(2.5)
+        assert not br.allow()                          # updates shed now
+
+    def test_open_breaker_not_retripped(self):
+        br = rz.CircuitBreaker(threshold=99, cooldown=4, burn_threshold=1.5)
+        assert br.note_health(self._report(3.0))
+        assert not br.note_health(self._report(3.0))   # already open
+        assert br.status()["burn_trips"] == 1
+
+    def test_no_threshold_means_failure_counting_only(self):
+        br = rz.CircuitBreaker(threshold=3, cooldown=4)
+        assert not br.note_health(self._report(100.0))
+        assert br.status()["state"] == "closed"
+
+    def test_pipeline_wires_health_into_breaker(self):
+        """End-to-end: latency-SLO violations (nothing throws) shed load
+        through the pipeline's breaker."""
+        rng = np.random.default_rng(5)
+        V = 96
+        store = GraphStore.from_edges(
+            V, rng.integers(0, V, 300).astype(np.uint32),
+            rng.integers(0, V, 300).astype(np.uint32))
+        eng = HealthEngine([SLOTarget("update", 1e-9, objective=0.5)],
+                           window=8)                   # everything violates
+        br = rz.CircuitBreaker(threshold=99, cooldown=2, burn_threshold=1.5)
+        pipe = RequestPipeline(store, None, coalesce=False, breaker=br,
+                               health=eng, health_every=2)
+        reqs = [UpdateBatch(ins_src=[1, 2], ins_dst=[3, 4])
+                for _ in range(8)]
+        resps = pipe.run(reqs)
+        assert br.status()["burn_trips"] >= 1
+        assert any(r.payload.get("shed") for r in resps)
+
+
+# ============================================================================
+# post-mortem units
+# ============================================================================
+
+class TestPostmortemUnits:
+    def test_dump_latest_consume_cycle(self, tmp_path):
+        flight.note("test.before_death", 42)
+        p = postmortem.dump(None, reason="unit_test", bundle_dir=tmp_path)
+        assert p is not None and p.exists()
+        doc = postmortem.latest(tmp_path)
+        assert doc["schema"] == postmortem.SCHEMA
+        assert doc["reason"] == "unit_test"
+        assert any(e["event"] == "test.before_death"
+                   for e in doc["flight"]["events"])
+        got = postmortem.consume_latest(tmp_path)
+        assert got["reason"] == "unit_test"
+        assert postmortem.latest(tmp_path) is None     # archived, not lost
+        assert list(tmp_path.glob("*.json.read"))
+
+    def test_dump_without_directory_is_silent_none(self):
+        assert postmortem.dump(None, reason="nowhere") is None
+
+    def test_fallback_dir_for_walless_store(self, tmp_path):
+        postmortem.set_bundle_dir(tmp_path)
+        store = types.SimpleNamespace(wal=None)
+        assert postmortem.bundle_dir_for(store) == tmp_path
+        postmortem.set_bundle_dir(None)
+        assert postmortem.bundle_dir_for(store) is None
+
+    def test_recoverable_failures_do_not_dump(self, tmp_path):
+        postmortem.set_bundle_dir(tmp_path)
+        exc = faults.InjectedOOM("store.capacity_grow", 1)
+        assert postmortem.on_apply_failure(None, exc) is None
+        assert postmortem.latest(tmp_path) is None
+
+    def test_unhandled_failures_do_dump(self, tmp_path):
+        postmortem.set_bundle_dir(tmp_path)
+        p = postmortem.on_apply_failure(None, ValueError("pool corrupt"))
+        assert p is not None
+        doc = postmortem.latest(tmp_path)
+        assert doc["reason"] == "apply_failure"
+        assert doc["exception"]["type"] == "ValueError"
+
+    def test_registered_breaker_state_rides_bundle(self, tmp_path):
+        br = rz.CircuitBreaker(threshold=3, cooldown=4)
+        postmortem.register_breaker(br)
+        postmortem.register_breaker(br)                # idempotent
+        p = postmortem.dump(None, reason="t", bundle_dir=tmp_path)
+        doc = json.loads(p.read_text())
+        assert len(doc["breakers"]) == 1
+        assert doc["breakers"][0]["state"] == "closed"
+
+
+# ============================================================================
+# POST-MORTEM acceptance: a kill at every apply phase leaves a bundle
+# the next process can read — and recovery says why it is recovering
+# ============================================================================
+
+V = 96
+APPLY_SITES = ("apply.admitted", "store.capacity_grow", "apply.post_wal",
+               "apply.pre_close", "apply.post_close")
+
+
+def _batches(seed, n, *, n_ins=60, n_del=12):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, V, n_ins).astype(np.uint32),
+             rng.integers(0, V, n_ins).astype(np.uint32),
+             rng.integers(0, V, n_del).astype(np.uint32),
+             rng.integers(0, V, n_del).astype(np.uint32))
+            for _ in range(n)]
+
+
+def _seed_store(store_cls):
+    rng = np.random.default_rng(3)
+    src = rng.integers(0, V, 400).astype(np.uint32)
+    dst = rng.integers(0, V, 400).astype(np.uint32)
+    policy = MaintenancePolicy(tombstone_ratio=0.15)
+    if store_cls is ShardedGraphStore:
+        return ShardedGraphStore.from_edges(V, 4, src, dst,
+                                            maintenance=policy)
+    return GraphStore.from_edges(V, src, dst, maintenance=policy)
+
+
+def _kill_and_read_bundle(site, tmp_path, store_cls):
+    wd, ck = tmp_path / "wal", tmp_path / "ck"
+    store = _seed_store(store_cls).attach_wal(rz.WriteAheadLog(wd))
+    batches = _batches(13, 4)
+    crashed = False
+    try:
+        for t, (i_s, i_d, d_s, d_d) in enumerate(batches):
+            if t == 1:
+                store.save(ck)
+            if t == 3:
+                with faults.inject(rz.FaultSpec(site, at=1)):
+                    store.apply(i_s, i_d, None, d_s, d_d)
+            else:
+                store.apply(i_s, i_d, None, d_s, d_d)
+    except rz.InjectedCrash:
+        crashed = True
+    assert crashed, f"fault at {site} never fired"
+    store.wal.close()
+
+    # the crashed process left exactly one parseable bundle beside the WAL
+    doc = postmortem.latest(wd / "postmortem")
+    assert doc is not None, f"no bundle after kill at {site}"
+    assert doc["schema"] == postmortem.SCHEMA
+    assert doc["reason"] == "injected_crash"
+    assert doc["exception"]["site"] == site
+    assert doc["exception"]["type"] == "InjectedCrash"
+    assert doc["store"]["kind"] == store_cls.__name__
+    assert doc["store"]["pool_stats"]                   # every view sampled
+    assert doc["fault_plan"]["armed"] is True
+    assert site in doc["fault_plan"]["hits"]
+    evs = doc["flight"]["events"]
+    assert evs, "bundle carries no flight tail"
+    names = {e["event"] for e in evs}
+    assert "store.apply.admitted" in names              # phases visible
+    assert "fault.fired" in names
+
+    # a restarted process reads it back — recovery says why
+    store2, _, report = rz.recover(
+        ck, wd, store_cls=store_cls,
+        maintenance=MaintenancePolicy(tombstone_ratio=0.15),
+        wal=rz.WriteAheadLog(wd))
+    assert report.postmortem is not None
+    assert report.postmortem["exception"]["site"] == site
+    assert report.crash_reason == f"injected_crash@{site}"
+    assert store2.version >= 1
+    # archived after one read: the next recovery reports nothing
+    assert postmortem.latest(wd / "postmortem") is None
+    store2.wal.close()
+
+
+class TestCrashBundles:
+    @pytest.mark.parametrize("site", APPLY_SITES)
+    def test_graph_store(self, site, tmp_path):
+        _kill_and_read_bundle(site, tmp_path, GraphStore)
+
+    @pytest.mark.parametrize("site", APPLY_SITES)
+    def test_sharded_store(self, site, tmp_path):
+        _kill_and_read_bundle(site, tmp_path, ShardedGraphStore)
+
+    def test_walless_crash_leaves_no_bundle(self):
+        """No WAL, no fallback dir: there is no recovery protocol to
+        inform, and the crash must not grow stray files anywhere."""
+        store = _seed_store(GraphStore)
+        with pytest.raises(rz.InjectedCrash):
+            with faults.inject(rz.FaultSpec("apply.admitted", at=1)):
+                store.apply(ins_src=[1], ins_dst=[2])
+
+
+# ============================================================================
+# FLIGHT NEUTRALITY — pools bit-identical with the recorder on vs stripped
+# ============================================================================
+
+def _pool_leaves(store):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(store.views)]
+
+
+def _churn(store, rng, nV, ledger, *, epochs):
+    for _ in range(epochs):
+        pool = np.array(sorted(ledger), np.uint32)
+        di = rng.choice(len(pool), min(250, len(pool)), replace=False)
+        dels = pool[di]
+        ins = rng.integers(0, nV, (350, 2)).astype(np.uint32)
+        ledger -= {(int(a), int(b)) for a, b in dels}
+        ledger |= {(int(a), int(b)) for a, b in ins}
+        store.apply(ins_src=ins[:, 0], ins_dst=ins[:, 1],
+                    del_src=dels[:, 0], del_dst=dels[:, 1])
+
+
+class TestFlightNeutrality:
+    NV = 300
+
+    def _drive(self, store_cls, armed):
+        flight.enable() if armed else flight.disable()
+        try:
+            rng = np.random.default_rng(7)
+            nV = self.NV
+            src = rng.integers(0, nV, 2500).astype(np.uint32)
+            dst = rng.integers(0, nV, 2500).astype(np.uint32)
+            policy = MaintenancePolicy(tombstone_ratio=0.1)
+            if store_cls is ShardedGraphStore:
+                store = ShardedGraphStore.from_edges(nV, 4, src, dst,
+                                                     maintenance=policy)
+            else:
+                store = GraphStore.from_edges(nV, src, dst, hashing=False,
+                                              maintenance=policy)
+            _churn(store, rng, nV,
+                   set(zip(src.tolist(), dst.tolist())), epochs=6)
+            assert store.maintenance_count > 0     # maintenance exercised
+            return _pool_leaves(store)
+        finally:
+            flight.enable()
+
+    @pytest.mark.parametrize("store_cls", [GraphStore, ShardedGraphStore])
+    def test_pools_identical_flight_on_vs_stripped(self, store_cls):
+        off = self._drive(store_cls, False)
+        obs.reset()
+        on = self._drive(store_cls, True)
+        assert len(off) == len(on)
+        for a, b in zip(off, on):
+            assert a.dtype == b.dtype and a.shape == b.shape
+            assert np.array_equal(a, b)
+        # and the armed run actually recorded the apply phases
+        names = {e["event"] for e in flight.snapshot()}
+        assert "store.apply.admitted" in names
+        assert "store.maintain" in names
+
+
+# ============================================================================
+# regress-gate units
+# ============================================================================
+
+def _serve_doc(lat=10.0, rps=100.0, samples=40):
+    return {
+        "scale": "quick", "backend": "cpu",
+        "requests_per_sec": {"stream_insert_only": rps,
+                             "stream_mixed_del25": rps / 2},
+        "speedup_insert_only": 3.0,
+        "flight_overhead_x": 1.01,
+        "open_loop": {"achieved_req_per_s": rps, "requests": samples},
+        "latency_ms": {
+            "update": {"mean": lat, "p50": lat, "p95": 2 * lat,
+                       "p99": 3 * lat, "samples": samples},
+            "property": {"mean": lat, "p50": lat, "p95": 2 * lat,
+                         "p99": 3 * lat, "samples": samples},
+            "member": {"mean": lat, "p50": lat, "p95": 2 * lat,
+                       "p99": 3 * lat, "samples": samples},
+        },
+    }
+
+
+class TestRegress:
+    def test_resolve_paths(self):
+        doc = {"a": {"b": 3},
+               "rows": [{"name": "x", "v": 1}, {"name": "y", "v": 2}]}
+        assert regress.resolve(doc, "a.b") == 3
+        assert regress.resolve(doc, "rows.x.v") == 1
+        assert regress.resolve(doc, "rows.*.v") == [1, 2]
+        assert regress.resolve(doc, "a.zzz") is regress.MISSING
+        assert regress.resolve(doc, "rows.zzz.v") is regress.MISSING
+
+    def test_direction_semantics(self):
+        hi = regress.MetricSpec("s", "m", "higher")       # floor 0.45x
+        lo = regress.MetricSpec("s", "m", "lower")        # ceil 1.9x
+        eq = regress.MetricSpec("s", "m", "equal")
+        assert regress._compare_scalar(hi, 100, 50) == "ok"
+        assert regress._compare_scalar(hi, 100, 40) == "regressed"
+        assert regress._compare_scalar(lo, 10, 18) == "ok"
+        assert regress._compare_scalar(lo, 10, 20) == "regressed"  # 2x trips
+        assert regress._compare_scalar(eq, True, True) == "ok"
+        assert regress._compare_scalar(eq, True, False) == "regressed"
+
+    def test_samples_guard_skips_thin_tails(self):
+        spec = regress.MetricSpec("serve", "latency_ms.update.p95", "lower",
+                                  samples_path="latency_ms.update.samples")
+        base, fresh = _serve_doc(), _serve_doc(lat=100.0, samples=4)
+        row = regress.compare_metric(spec, base, fresh)
+        assert row["status"] == "skipped_low_samples"
+        fresh["latency_ms"]["update"]["samples"] = 40
+        row = regress.compare_metric(spec, base, fresh)
+        assert row["status"] == "regressed"
+
+    def test_missing_baseline_skips_missing_fresh_regresses(self):
+        spec = regress.MetricSpec("serve", "flight_overhead_x", "lower")
+        base, fresh = _serve_doc(), _serve_doc()
+        del base["flight_overhead_x"]
+        assert regress.compare_metric(
+            spec, base, fresh)["status"] == "skipped_no_baseline"
+        base, fresh = _serve_doc(), _serve_doc()
+        del fresh["flight_overhead_x"]
+        assert regress.compare_metric(
+            spec, base, fresh)["status"] == "regressed"
+
+    def test_identity_passes_2x_latency_fails(self):
+        base = _serve_doc()
+        rows = regress.check({"serve": base}, ["serve"],
+                             fresh={"serve": json.loads(json.dumps(base))})
+        assert rows and all(r["status"] != "regressed" for r in rows)
+        bad = regress._inject_latency_regression(base, 2.0)
+        rows = regress.check({"serve": base}, ["serve"],
+                             fresh={"serve": bad})
+        lat_fail = [r for r in rows if r["status"] == "regressed"
+                    and r["metric"].startswith("latency_ms.")]
+        assert lat_fail, rows
+
+    def test_scale_mismatch_skips_suite(self):
+        base, fresh = _serve_doc(), _serve_doc()
+        fresh["scale"] = "full"
+        rows = regress.check({"serve": base}, ["serve"],
+                             fresh={"serve": fresh})
+        assert rows and all(
+            r["status"] == "skipped_scale_mismatch" for r in rows)
+
+    def test_star_over_crash_rows(self):
+        spec = regress.MetricSpec("chaos", "crashes.*.bit_identical",
+                                  "equal")
+        base = {"crashes": [{"site": "a", "bit_identical": True},
+                            {"site": "b", "bit_identical": True}]}
+        good = json.loads(json.dumps(base))
+        assert regress.compare_metric(spec, base, good)["status"] == "ok"
+        bad = json.loads(json.dumps(base))
+        bad["crashes"][1]["bit_identical"] = False
+        assert regress.compare_metric(
+            spec, base, bad)["status"] == "regressed"
+
+    def test_report_verdict(self, capsys):
+        assert regress.report([{"suite": "s", "metric": "m",
+                                "status": "ok"}])
+        assert not regress.report([{"suite": "s", "metric": "m",
+                                    "status": "regressed"}])
+
+
+# ============================================================================
+# trace clock — integer ns ordering holds at multi-hour magnitudes
+# ============================================================================
+
+class TestTraceClock:
+    def test_multi_hour_event_ordering_is_exact(self, monkeypatch):
+        from repro.obs import trace
+        now = {"ns": 1_000_000_000}
+        monkeypatch.setattr(trace.time, "perf_counter_ns",
+                            lambda: now["ns"])
+        trace.enable()                       # pins _T0_NS to the fake clock
+        try:
+            HOUR = 3_600_000_000_000
+            for k in range(4):
+                now["ns"] += HOUR            # one event per simulated hour
+                trace.instant("tick", k=k)
+                now["ns"] += 300             # and one 300ns behind it
+                trace.instant("tock", k=k)
+            evs = trace.events()
+            ticks = [e for e in evs if e["name"] == "tick"]
+            tocks = [e for e in evs if e["name"] == "tock"]
+            assert len(ticks) == len(tocks) == 4
+            for k, (a, b) in enumerate(zip(ticks, tocks)):
+                # stored timestamps are integer ns: 300ns at hour 4 is
+                # still exact, where float µs would have rounded it away
+                assert isinstance(a["ts_ns"], int)
+                assert b["ts_ns"] - a["ts_ns"] == 300
+                assert a["ts_ns"] == (k + 1) * HOUR + 300 * k
+                # the derived µs view keeps ordering too
+                assert b["ts"] > a["ts"]
+        finally:
+            trace.disable()
+            trace.reset()

@@ -13,7 +13,10 @@ Runs ``launch/serve.py --trace --metrics-json --maintain`` in a subprocess
   dispatches) plus NONEMPTY kernel counters — the telemetry plane saw
   the kernels, not just the host loop;
 * the metrics JSON carries per-class serve latency histograms with
-  populated exact percentiles.
+  populated exact percentiles;
+* (in-process, before the subprocess run) a multi-hour simulated clock
+  proves the integer-ns trace timestamps keep 100ns siblings distinct
+  ten hours in — the long-running-service regime.
 
 Usage: PYTHONPATH=src python tests/trace_smoke.py
 """
@@ -98,7 +101,49 @@ def check_metrics(path: str) -> dict:
     return {"serve_classes": sorted(serve)}
 
 
+def check_clock() -> dict:
+    """Multi-hour simulated clock: the trace plane stores INTEGER
+    ``perf_counter_ns`` timestamps, so two events 100ns apart remain
+    distinct and exactly ordered even ten hours into a serving process —
+    the regime where float-µs timestamps start rounding siblings
+    together."""
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.obs import trace
+
+    real = trace.time.perf_counter_ns
+    now = {"ns": 5_000_000_000}
+    trace.time.perf_counter_ns = lambda: now["ns"]
+    try:
+        trace.disable()
+        trace.reset()
+        trace.enable()                       # pins t0 to the fake clock
+        HOUR = 3_600_000_000_000
+        hours = 10
+        for k in range(hours):
+            now["ns"] += HOUR
+            trace.instant("hour_mark", k=k)
+            now["ns"] += 100                 # sibling 100ns later
+            trace.instant("hour_mark_plus", k=k)
+        evs = trace.events()
+        marks = [e for e in evs if e["name"] == "hour_mark"]
+        plus = [e for e in evs if e["name"] == "hour_mark_plus"]
+        assert len(marks) == len(plus) == hours
+        for a, b in zip(marks, plus):
+            assert isinstance(a["ts_ns"], int), "ts_ns must stay integer"
+            assert b["ts_ns"] - a["ts_ns"] == 100, \
+                f"100ns gap lost at ts={a['ts_ns']}ns"
+            assert b["ts"] > a["ts"], "derived µs view lost ordering"
+        span_ns = marks[-1]["ts_ns"] - marks[0]["ts_ns"]
+        assert span_ns == (hours - 1) * (HOUR + 100)
+        return {"hours": hours, "span_ns": span_ns}
+    finally:
+        trace.time.perf_counter_ns = real
+        trace.disable()
+        trace.reset()
+
+
 def main() -> None:
+    c = check_clock()
     with tempfile.TemporaryDirectory() as td:
         trace_path = os.path.join(td, "trace.json")
         metrics_path = os.path.join(td, "metrics.json")
@@ -109,7 +154,8 @@ def main() -> None:
     print(f"[trace_smoke] OK: {t['events']} events, "
           f"{t['span_names']} span names, "
           f"{t['kernel_counters']} nonempty kernel counters, "
-          f"serve classes {m['serve_classes']}")
+          f"serve classes {m['serve_classes']}, "
+          f"clock exact over {c['hours']}h simulated")
 
 
 if __name__ == "__main__":
